@@ -1,0 +1,44 @@
+"""Fig. 8 — cycle counts: MNF vs SCNN-Dense / SCNN / SparTen / GoSPA."""
+from __future__ import annotations
+
+import time
+
+from repro.costmodel import network_cycles
+from repro.costmodel.table4 import (ALEXNET_DENSITY_PROFILE,
+                                    VGG16_DENSITY_PROFILE)
+from repro.costmodel.workloads import analytic_network_stats
+from repro.models.cnn import ALEXNET, VGG16
+
+PAPER_RATIOS = {
+    "vgg16": dict(scnn_dense=19.0, scnn=8.31, sparten=3.15, gospa=2.57),
+    "alexnet": dict(scnn_dense=11.82, scnn=7.32, sparten=3.51, gospa=2.68),
+}
+W_DENSITY = {"vgg16": 0.596, "alexnet": 0.499}   # paper §6.1 pruned nets
+
+
+def rows():
+    out = []
+    for name, spec, prof in (("vgg16", VGG16, VGG16_DENSITY_PROFILE),
+                             ("alexnet", ALEXNET, ALEXNET_DENSITY_PROFILE)):
+        t0 = time.perf_counter()
+        stats = analytic_network_stats(spec, prof)
+        mnf = network_cycles(stats, "mnf", d_w=W_DENSITY[name])
+        us = (time.perf_counter() - t0) * 1e6
+        for design in ("scnn_dense", "scnn", "sparten", "gospa"):
+            cyc = network_cycles(stats, design, d_w=W_DENSITY[name])
+            ratio = cyc / mnf
+            paper = PAPER_RATIOS[name][design]
+            out.append((f"fig8_{name}_{design}", us,
+                        f"mnf_cycles={mnf:.3g};{design}_cycles={cyc:.3g};"
+                        f"speedup={ratio:.2f}x;paper={paper}x;"
+                        f"rel_err={abs(ratio-paper)/paper:.2f}"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig1_dataflow_energy, fig2_utilization, fig8_cycles,
+                        kernel_bench, roofline_table, table4_comparison,
+                        table5_memory_energy)
+
+MODULES = (
+    ("fig1", fig1_dataflow_energy),
+    ("fig2", fig2_utilization),
+    ("fig8", fig8_cycles),
+    ("table4", table4_comparison),
+    ("table5", table5_memory_energy),
+    ("kernels", kernel_bench),
+    ("roofline", roofline_table),
+)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in MODULES:
+        try:
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:   # keep the harness running; count failures
+            failures += 1
+            print(f"{tag}_FAILED,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

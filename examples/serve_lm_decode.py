@@ -1,0 +1,19 @@
+"""Batched LM serving: prefill + KV-cache decode loop.
+
+    PYTHONPATH=src python examples/serve_lm_decode.py --arch hymba-1.5b
+"""
+import subprocess
+import sys
+
+
+def main():
+    args = sys.argv[1:]
+    if "--arch" not in args:
+        args = ["--arch", "qwen2-0.5b"] + args
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--reduced",
+           "--batch", "4", "--prompt-len", "32", "--gen", "16"] + args
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import (all_steps, latest_step, restore,
+                                           save, save_async)
+
+__all__ = ["all_steps", "latest_step", "restore", "save", "save_async"]

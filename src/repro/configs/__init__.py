@@ -1,0 +1,33 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (GLOBAL_WINDOW, SHAPES, MLAConfig, MNFConfig,
+                                ModelConfig, MoEConfig, ShapeConfig, SSMConfig)
+
+_REGISTRY = {
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "qwen2-0.5b": "repro.configs.qwen2_0p5b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "whisper-base": "repro.configs.whisper_base",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision_4p2b",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(_REGISTRY[arch]).config()
+
+
+__all__ = ["ARCH_IDS", "GLOBAL_WINDOW", "SHAPES", "MLAConfig", "MNFConfig",
+           "ModelConfig", "MoEConfig", "ShapeConfig", "SSMConfig",
+           "get_config"]

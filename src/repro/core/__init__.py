@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution: Multiply-and-Fire event-driven
+sparse computation (event encoding, multiply phase, fire phase, PE mapping).
+"""
+from repro.core.events import (BlockEvents, ScalarEvents, block_occupancy,
+                               count_nonzero_events, decode_block_events,
+                               encode_block_events, encode_scalar_events,
+                               pad_to_block_multiple)
+from repro.core.fire import FireConfig, fire, fire_stats, fire_to_block_events
+from repro.core.mapping import (PAPER_PE, LayerMapping, PECapacity, conv_pes,
+                                fc_pes, noc_grid, plan_conv_layer,
+                                plan_fc_layer)
+from repro.core.mnf_conv import (conv_out_size, dense_conv2d, mnf_conv2d,
+                                 scalar_event_conv2d, tap_event_conv2d)
+from repro.core.mnf_linear import (block_event_linear, dense_linear,
+                                   mnf_linear, scalar_event_linear)
+from repro.core.quantize import (QParams, calibrate, dequantize, fake_quant,
+                                 quantize, requantize_accumulator)
+
+__all__ = [
+    "BlockEvents", "ScalarEvents", "block_occupancy", "count_nonzero_events",
+    "decode_block_events", "encode_block_events", "encode_scalar_events",
+    "pad_to_block_multiple",
+    "FireConfig", "fire", "fire_stats", "fire_to_block_events",
+    "PAPER_PE", "LayerMapping", "PECapacity", "conv_pes", "fc_pes",
+    "noc_grid", "plan_conv_layer", "plan_fc_layer",
+    "conv_out_size", "dense_conv2d", "mnf_conv2d", "scalar_event_conv2d",
+    "tap_event_conv2d",
+    "block_event_linear", "dense_linear", "mnf_linear", "scalar_event_linear",
+    "QParams", "calibrate", "dequantize", "fake_quant", "quantize",
+    "requantize_accumulator",
+]

@@ -1,0 +1,197 @@
+"""Event encoding — the paper's §4 compressed-data-storage scheme, TPU-adapted.
+
+The paper encodes every non-zero activation as an *event* carrying the value
+plus direct addresses (start_weight_addr, start_neuron_addr, ...) so that a PE
+can fetch exactly the weights it needs with O(1) address arithmetic instead of
+CSR/CSC/COO pointer chasing.
+
+On TPU the profitable event granularity is a VMEM tile, not a scalar (see
+DESIGN.md §2).  This module provides both:
+
+  * scalar events  — faithful Algorithm-1/2 semantics, used by the CNN
+    reference path and the cost model (event counting);
+  * block events   — `(values[B_blk, E, blk], block_idx[B_blk, E], count)`
+    compacted K-blocks, the encoding consumed by the `event_matmul` Pallas
+    kernel (block_idx is the direct weight-tile address).
+
+All functions are pure jnp / jax.lax and jit-safe (static shapes: event lists
+are padded to a static capacity, with an explicit count — the TPU analogue of
+the paper's end-of-data event).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ScalarEvents",
+    "BlockEvents",
+    "encode_scalar_events",
+    "count_nonzero_events",
+    "block_occupancy",
+    "encode_block_events",
+    "decode_block_events",
+    "pad_to_block_multiple",
+]
+
+
+# ---------------------------------------------------------------------------
+# Scalar events (paper-faithful; Algorithm 1 / 2 inputs)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScalarEvents:
+    """Padded list of scalar events for one feature map / activation vector.
+
+    values:  (capacity,)   event activation values (0 in padding slots)
+    indices: (capacity,)   flat position of the activation (0 in padding)
+    count:   ()            number of live events (<= capacity)
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    count: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[0]
+
+
+def encode_scalar_events(x: jax.Array, capacity: int | None = None,
+                         threshold: float = 0.0) -> ScalarEvents:
+    """Compact the non-zero (|x| > threshold) entries of ``x`` into events.
+
+    This is the fire-module output format: each event is (value, address).
+    ``capacity`` defaults to x.size (lossless).  Events are emitted in
+    ascending address order — matching the paper's raster-order event stream.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if capacity is None:
+        capacity = n
+    live = jnp.abs(flat) > threshold
+    count = jnp.sum(live, dtype=jnp.int32)
+    # Stable compaction: sort (1 - live) keeps live entries first, in order.
+    order = jnp.argsort(jnp.logical_not(live), stable=True)
+    idx = order[:capacity].astype(jnp.int32)
+    vals = flat[idx]
+    slot_live = jnp.arange(capacity, dtype=jnp.int32) < count
+    vals = jnp.where(slot_live, vals, 0)
+    idx = jnp.where(slot_live, idx, 0)
+    return ScalarEvents(values=vals, indices=idx, count=count)
+
+
+def count_nonzero_events(x: jax.Array, threshold: float = 0.0) -> jax.Array:
+    """Number of scalar events a tensor would fire (cost-model instrumentation)."""
+    return jnp.sum(jnp.abs(x) > threshold, dtype=jnp.int64.dtype
+                   if jax.config.read("jax_enable_x64") else jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Block events (TPU-native; consumed by kernels/event_matmul)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BlockEvents:
+    """Compacted K-block events for a batch-tiled activation matrix.
+
+    For an activation matrix a[(M), (K)] tiled into K//blk blocks per row
+    group:
+
+    values:    (G, E, blk_m, blk_k)  the live activation tiles (padding = 0)
+    block_idx: (G, E)                direct weight-tile address of each event
+                                     (padding repeats the last live index so a
+                                     consuming kernel's DMA is a no-op)
+    counts:    (G,)                  number of live events per row group
+    num_k_blocks: static int         K // blk_k
+    """
+
+    values: jax.Array
+    block_idx: jax.Array
+    counts: jax.Array
+    num_k_blocks: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return self.block_idx.shape[-1]
+
+
+def pad_to_block_multiple(x: jax.Array, block: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to a multiple of ``block``."""
+    size = x.shape[axis]
+    rem = (-size) % block
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def block_occupancy(x: jax.Array, blk_k: int, threshold: float = 0.0) -> jax.Array:
+    """Per-K-block liveness: any |x| > threshold inside the block.
+
+    x: (..., K) -> bool (..., K // blk_k).  K must be a multiple of blk_k.
+    """
+    *lead, k = x.shape
+    assert k % blk_k == 0, f"K={k} not a multiple of blk_k={blk_k}"
+    xb = x.reshape(*lead, k // blk_k, blk_k)
+    return jnp.any(jnp.abs(xb) > threshold, axis=-1)
+
+
+def encode_block_events(a: jax.Array, *, blk_m: int, blk_k: int,
+                        capacity: int | None = None,
+                        threshold: float = 0.0) -> BlockEvents:
+    """Encode activation matrix a (M, K) into block events.
+
+    Rows are grouped into G = M // blk_m row groups.  A K-block is an event
+    for a group iff any element in the (blk_m, blk_k) tile exceeds the
+    threshold.  Live tiles are compacted (in ascending K-block order — the
+    paper's raster event order) to a static ``capacity`` (default: all
+    blocks, lossless).
+    """
+    m, k = a.shape
+    assert m % blk_m == 0 and k % blk_k == 0, (m, k, blk_m, blk_k)
+    g, nkb = m // blk_m, k // blk_k
+    if capacity is None:
+        capacity = nkb
+    capacity = min(capacity, nkb)
+    tiles = a.reshape(g, blk_m, nkb, blk_k).transpose(0, 2, 1, 3)  # (G, nkb, bm, bk)
+    live = jnp.any(jnp.abs(tiles) > threshold, axis=(-1, -2))      # (G, nkb)
+    counts = jnp.sum(live, axis=-1, dtype=jnp.int32)               # (G,)
+    order = jnp.argsort(jnp.logical_not(live), axis=-1, stable=True)  # live first
+    idx = order[:, :capacity].astype(jnp.int32)                    # (G, E)
+    slot = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    slot_live = slot < counts[:, None]
+    # Padding index repeats the last live index (DMA no-op downstream);
+    # all-empty groups point at block 0 with zero values.
+    last_live = jnp.maximum(counts - 1, 0)
+    gathered_last = jnp.take_along_axis(idx, last_live[:, None], axis=1)
+    idx = jnp.where(slot_live, idx, gathered_last)
+    vals = jnp.take_along_axis(tiles, idx[:, :, None, None], axis=1)  # (G,E,bm,bk)
+    vals = jnp.where(slot_live[:, :, None, None], vals, 0)
+    return BlockEvents(values=vals, block_idx=idx, counts=counts,
+                       num_k_blocks=nkb)
+
+
+def decode_block_events(ev: BlockEvents, *, blk_m: int, blk_k: int,
+                        m: int, k: int) -> jax.Array:
+    """Inverse of :func:`encode_block_events` (up to thresholded-away values).
+
+    Scatter the event tiles back into a dense (M, K) matrix.  Property-tested:
+    decode(encode(x)) == x whenever threshold == 0.
+    """
+    g, e = ev.block_idx.shape
+    nkb = ev.num_k_blocks
+    assert m == g * blk_m and k == nkb * blk_k
+    dense = jnp.zeros((g, nkb, blk_m, blk_k), ev.values.dtype)
+    slot_live = jnp.arange(e, dtype=jnp.int32)[None, :] < ev.counts[:, None]
+    vals = jnp.where(slot_live[:, :, None, None], ev.values, 0)
+    garr = jnp.arange(g, dtype=jnp.int32)[:, None].repeat(e, axis=1)
+    dense = dense.at[garr.reshape(-1), ev.block_idx.reshape(-1)].add(
+        vals.reshape(g * e, blk_m, blk_k))
+    return dense.transpose(0, 2, 1, 3).reshape(m, k)

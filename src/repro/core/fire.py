@@ -1,0 +1,82 @@
+"""Fire phase (paper §4.2) — threshold, activate, and emit events.
+
+After the multiply phase accumulates into output neurons, the fire module
+compares each output with a threshold; supra-threshold outputs become input
+events for the next layer, sub-threshold outputs are discarded.  With
+threshold = 0 this is exactly ReLU + sparsity-preserving propagation, so the
+event-driven network is numerically identical to the dense one — the key
+correctness invariant of the whole system (property-tested).
+
+This module is the pure-jnp implementation; ``kernels/fire_compact`` is the
+fused Pallas version (threshold + per-block occupancy in one VMEM pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core import quantize as qz
+
+__all__ = ["FireConfig", "fire", "fire_stats", "fire_to_block_events"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FireConfig:
+    """Configuration of the fire module.
+
+    threshold:   fire iff activation > threshold (paper: ReLU threshold,
+                 typically 0).  ``magnitude=True`` fires on |a| > threshold —
+                 the LM generalization for non-ReLU nonlinearities.
+    magnitude:   see above.
+    quantize_to_int8: reproduce the paper's accumulate(fp32/int32) -> int8
+                 requantization before firing.
+    """
+
+    threshold: float = 0.0
+    magnitude: bool = False
+    quantize_to_int8: bool = False
+
+
+def fire(acc: jax.Array, cfg: FireConfig = FireConfig(),
+         out_qp: qz.QParams | None = None) -> jax.Array:
+    """Apply the fire decision to an accumulator tensor.
+
+    Returns the *dense* fired tensor (zeros where not fired); event extraction
+    is a separate step (``fire_to_block_events`` /
+    ``events.encode_scalar_events``) so callers can choose granularity.
+    """
+    if cfg.magnitude:
+        live = jnp.abs(acc) > cfg.threshold
+        fired = jnp.where(live, acc, 0)
+    else:
+        fired = jnp.where(acc > cfg.threshold, acc, 0)  # ReLU at threshold 0
+    if cfg.quantize_to_int8:
+        qp = out_qp if out_qp is not None else qz.calibrate(fired)
+        fired = qz.fake_quant(fired, qp)
+    return fired
+
+
+def fire_stats(acc: jax.Array, cfg: FireConfig = FireConfig()):
+    """(fired tensor, #events fired, density) — cost-model instrumentation."""
+    fired = fire(acc, cfg)
+    n = ev.count_nonzero_events(fired)
+    density = n / acc.size
+    return fired, n, density
+
+
+def fire_to_block_events(acc: jax.Array, *, blk_m: int, blk_k: int,
+                         cfg: FireConfig = FireConfig(),
+                         capacity: int | None = None) -> tuple[jax.Array, ev.BlockEvents]:
+    """Fire and re-encode as block events for the next layer's multiply phase.
+
+    acc: (M, K_next) accumulator laid out as next layer's input.
+    Returns (dense fired tensor, BlockEvents).
+    """
+    fired = fire(acc, cfg)
+    bev = ev.encode_block_events(fired, blk_m=blk_m, blk_k=blk_k,
+                                 capacity=capacity, threshold=0.0)
+    return fired, bev

@@ -1,0 +1,105 @@
+"""Event-driven fully-connected layer — paper Algorithm 2 + fire phase.
+
+Three interchangeable execution paths (all numerically identical for
+threshold-0 ReLU networks; property-tested):
+
+  * ``dense_linear``        — baseline jnp matmul (the oracle).
+  * ``scalar_event_linear`` — faithful Algorithm 2: for each input event
+    (value, neuron address) read the weight row at the direct address and
+    accumulate into every output neuron.  Executed with lax.fori_loop over a
+    padded event list; this is the semantic reference for the cost model.
+  * ``block_event_linear``  — the TPU-native path: compacted K-block events ×
+    weight row-blocks (pure-jnp here; ``kernels/event_matmul`` is the Pallas
+    version with scalar-prefetch weight addressing).
+
+The multiply phase computes acc[n] += W[addr, n] * value per event, i.e. the
+input-driven (scatter) view of y = x @ W; the fire phase thresholds and emits
+next-layer events.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.fire import FireConfig, fire
+
+__all__ = ["dense_linear", "scalar_event_linear", "block_event_linear",
+           "mnf_linear"]
+
+
+def dense_linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Oracle: y = x @ W (+ b).  x: (..., K), w: (K, N)."""
+    y = jnp.einsum("...k,kn->...n", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def scalar_event_linear(x: jax.Array, w: jax.Array,
+                        b: jax.Array | None = None) -> jax.Array:
+    """Algorithm 2, verbatim semantics, for a single input vector x: (K,).
+
+    Each non-zero input neuron fires one event carrying (value, addr); the
+    multiply module reads weight row ``addr`` (the direct start_weight
+    address) and accumulates value * W[addr, :] into all N output neurons.
+    """
+    assert x.ndim == 1, "scalar-event path is per-activation-vector"
+    k, n = w.shape
+    evs = ev.encode_scalar_events(x)                      # capacity = K
+    acc0 = jnp.zeros((n,), jnp.promote_types(x.dtype, w.dtype))
+
+    def body(i, acc):
+        # Process event i iff live; padded slots have value 0 so the
+        # accumulate is a no-op either way (paper: idle PE on no event).
+        value = evs.values[i]
+        addr = evs.indices[i]
+        return acc + value * w[addr, :]
+
+    acc = jax.lax.fori_loop(0, evs.capacity, body, acc0)
+    if b is not None:
+        acc = acc + b
+    return acc
+
+
+def block_event_linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                       *, blk_m: int = 8, blk_k: int = 128,
+                       capacity: int | None = None,
+                       threshold: float = 0.0) -> jax.Array:
+    """TPU-native multiply phase: compacted K-block events × weight blocks.
+
+    x: (M, K) activations, w: (K, N).  Lossless when capacity covers all live
+    blocks and threshold == 0 matches the upstream fire threshold.
+    Pure-jnp twin of kernels/event_matmul (same event encoding).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    xp = ev.pad_to_block_multiple(x, blk_m, 0)
+    xp = ev.pad_to_block_multiple(xp, blk_k, 1)
+    mp, kp = xp.shape
+    wp = ev.pad_to_block_multiple(w, blk_k, 0)
+    bev = ev.encode_block_events(xp, blk_m=blk_m, blk_k=blk_k,
+                                 capacity=capacity, threshold=threshold)
+    g, e = bev.block_idx.shape
+    wb = wp.reshape(kp // blk_k, blk_k, n)
+    # Gather the weight tile named by each event's direct block address and
+    # contract: acc[g, bm, n] = sum_e vals[g, e, bm, bk] @ W[idx[g, e], bk, n].
+    wtiles = wb[bev.block_idx]                            # (G, E, bk, N)
+    slot_live = jnp.arange(e, dtype=jnp.int32)[None, :] < bev.counts[:, None]
+    vals = jnp.where(slot_live[:, :, None, None], bev.values, 0)
+    acc = jnp.einsum("gemk,gekn->gmn", vals, wtiles)
+    y = acc.reshape(mp, n)[:m]
+    if b is not None:
+        y = y + b
+    return y
+
+
+def mnf_linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+               *, fire_cfg: FireConfig = FireConfig(),
+               blk_m: int = 8, blk_k: int = 128,
+               capacity: int | None = None) -> jax.Array:
+    """Full MNF FC layer: block-event multiply phase + fire phase."""
+    acc = block_event_linear(x, w, b, blk_m=blk_m, blk_k=blk_k,
+                             capacity=capacity)
+    return fire(acc, fire_cfg)

@@ -1,0 +1,76 @@
+"""Int8 affine quantization (Jacob et al., CVPR'18) — paper §5.2.3 step 2.
+
+The MNF MAC cluster accumulates in 32-bit and quantizes the accumulated sum
+to 8-bit before firing it to the next layer.  We reproduce that numerically:
+weights/activations are int8 (simulated in fp32 carriers on CPU), partial
+sums are fp32/int32, and the fire phase re-quantizes.
+
+At LM scale (the assigned-architecture cells) we compute in bf16 — see
+DESIGN.md §7 item 2 — so this module is used by the CNN reproduction path
+and by tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QParams", "calibrate", "quantize", "dequantize", "fake_quant",
+           "requantize_accumulator"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Affine quantization parameters: real = scale * (q - zero_point)."""
+
+    scale: jax.Array        # ()
+    zero_point: jax.Array   # () int32
+
+    @staticmethod
+    def symmetric(scale) -> "QParams":
+        return QParams(scale=jnp.asarray(scale, jnp.float32),
+                       zero_point=jnp.zeros((), jnp.int32))
+
+
+def calibrate(x: jax.Array, *, symmetric: bool = True,
+              bits: int = 8) -> QParams:
+    """Min/max calibration of quantization parameters for tensor ``x``."""
+    qmax = 2 ** (bits - 1) - 1
+    if symmetric:
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+        return QParams.symmetric(amax / qmax)
+    lo, hi = jnp.min(x), jnp.max(x)
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, 1e-8)
+    scale = (hi - lo) / (2 ** bits - 1)
+    zp = jnp.round(-lo / scale).astype(jnp.int32) - 2 ** (bits - 1)
+    return QParams(scale=scale.astype(jnp.float32), zero_point=zp)
+
+
+def quantize(x: jax.Array, qp: QParams, *, bits: int = 8) -> jax.Array:
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.round(x / qp.scale) + qp.zero_point
+    return jnp.clip(q, qmin, qmax).astype(jnp.int8 if bits == 8 else jnp.int32)
+
+
+def dequantize(q: jax.Array, qp: QParams) -> jax.Array:
+    return (q.astype(jnp.float32) - qp.zero_point) * qp.scale
+
+
+def fake_quant(x: jax.Array, qp: QParams, *, bits: int = 8) -> jax.Array:
+    """Quantize-dequantize round trip (straight-through value)."""
+    return dequantize(quantize(x, qp, bits=bits), qp)
+
+
+def requantize_accumulator(acc: jax.Array, in_qp: QParams, w_qp: QParams,
+                           out_qp: QParams, *, bits: int = 8) -> jax.Array:
+    """Paper §5.2.3: 32-bit accumulated sum -> 8-bit output activation.
+
+    acc is an int32 (or fp32 carrier) accumulator of int8×int8 products; its
+    real value is acc * in_scale * w_scale.  Returns int8 output in
+    ``out_qp`` scale.
+    """
+    real = acc.astype(jnp.float32) * (in_qp.scale * w_qp.scale)
+    return quantize(real, out_qp, bits=bits)

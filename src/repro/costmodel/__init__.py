@@ -1,0 +1,26 @@
+from repro.costmodel.accelerators import (PAPER_HW, UTIL_CURVES, HWBudget,
+                                          baseline_layer_cycles,
+                                          dense_layer_cycles,
+                                          mnf_layer_cycles, mnf_utilization,
+                                          network_cycles)
+from repro.costmodel.energy import (TABLE1, TABLE5_MNF, TABLE5_OTHERS,
+                                    AccessEnergy, ConvShape,
+                                    compare_dataflows, dataflow_energy,
+                                    mnf_energy)
+from repro.costmodel.table4 import (ALEXNET_DENSITY_PROFILE, PAPER_TABLE4,
+                                    VGG16_DENSITY_PROFILE, frames_per_joule,
+                                    frames_per_second, power_mw, table4_row)
+from repro.costmodel.utilization import (mnf_utilization_at_density,
+                                         snap_utilization_at_density,
+                                         utilization_sweep)
+
+__all__ = [
+    "PAPER_HW", "UTIL_CURVES", "HWBudget", "baseline_layer_cycles",
+    "dense_layer_cycles", "mnf_layer_cycles", "mnf_utilization",
+    "network_cycles", "TABLE1", "TABLE5_MNF", "TABLE5_OTHERS",
+    "AccessEnergy", "ConvShape", "compare_dataflows", "dataflow_energy",
+    "mnf_energy", "ALEXNET_DENSITY_PROFILE", "PAPER_TABLE4",
+    "VGG16_DENSITY_PROFILE", "frames_per_joule", "frames_per_second",
+    "power_mw", "table4_row", "mnf_utilization_at_density",
+    "snap_utilization_at_density", "utilization_sweep",
+]

@@ -1,0 +1,6 @@
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import (TokenStreamConfig, cnn_batch, lm_batch,
+                                  markov_lm_batch)
+
+__all__ = ["PrefetchLoader", "TokenStreamConfig", "cnn_batch", "lm_batch",
+           "markov_lm_batch"]

@@ -1,0 +1,69 @@
+"""Sharded, prefetching, resumable data loader.
+
+Wraps a pure ``batch_fn(step) -> pytree`` (see synthetic.py) with a
+background prefetch thread and device placement.  State is just the step
+counter — checkpointable as one int, resumable on any host count (the batch
+fn reshards itself from host_index/host_count).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+
+__all__ = ["PrefetchLoader"]
+
+
+class PrefetchLoader:
+    def __init__(self, batch_fn: Callable[[int], dict], *, start_step: int = 0,
+                 prefetch: int = 2, sharding=None):
+        self._batch_fn = batch_fn
+        self._step = start_step
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._sharding is None:
+            return batch
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), batch, self._sharding)
+
+    def _work(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                batch = self._batch_fn(step)
+            except Exception as e:                     # surface in __next__
+                self._q.put(e)
+                return
+            self._q.put((step, self._place(batch)))
+            step += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        step, batch = item
+        self._step = step + 1
+        return step, batch
+
+    @property
+    def state(self) -> dict:
+        """Checkpointable loader state."""
+        return dict(step=self._step)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

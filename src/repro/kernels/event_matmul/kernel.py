@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the MNF multiply phase (block-event sparse matmul).
+
+Computes y = a @ W where ``a`` is supplied as *block events* — the paper's
+event encoding adapted to TPU tiling (DESIGN.md §2):
+
+  a_vals    (G, E, bm, bk)  compacted live activation tiles
+  a_idx     (G, E) int32    direct weight-tile address per event (the paper's
+                            start_weight_address); padding slots repeat the
+                            last live address so their DMA is elided by
+                            Mosaic's revisit-skip.
+  counts    (G,)  int32     live event count per row group (the paper's
+                            end-of-data event).
+  w         (K, N)          dense weights, tiled (bk, bn).
+
+Grid (G, N/bn, E), E innermost so the accumulator tile (= the paper's
+accumulate SRAM) stays resident in VMEM while events stream through; the
+weight tile named by each event is scalar-prefetch-indexed
+(PrefetchScalarGridSpec), so only event-addressed weight tiles are DMA'd from
+HBM — the TPU image of "memory accesses occur only when a PE detects an
+event".  ``@pl.when(e < count)`` idles the MXU on padded slots (the paper's
+low-power idle on no events).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["event_matmul_kernel", "event_matmul_pallas"]
+
+
+def event_matmul_kernel(a_idx_ref, counts_ref,   # scalar-prefetch refs
+                        a_vals_ref, w_ref,       # VMEM inputs
+                        out_ref,                 # VMEM output
+                        acc_ref):                # VMEM scratch (bm, bn) f32
+    g = pl.program_id(0)
+    e = pl.program_id(2)
+    num_e = pl.num_programs(2)
+
+    @pl.when(e == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(e < counts_ref[g])
+    def _mac():
+        # Multiply phase: one dense MXU burst per event tile.
+        a = a_vals_ref[0, 0]                     # (bm, bk)
+        w = w_ref[...]                           # (bk, bn)
+        acc_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+    @pl.when(e == num_e - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "interpret", "out_dtype"))
+def event_matmul_pallas(a_vals: jax.Array, a_idx: jax.Array,
+                        counts: jax.Array, w: jax.Array, *,
+                        blk_n: int = 128, interpret: bool = False,
+                        out_dtype=jnp.float32) -> jax.Array:
+    """y[g, bm, n] = sum_e a_vals[g, e] @ W[a_idx[g, e]] (live events only)."""
+    g, e, bm, bk = a_vals.shape
+    k, n = w.shape
+    assert k % bk == 0 and n % blk_n == 0, (k, n, bk, blk_n)
+
+    grid = (g, n // blk_n, e)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda gi, ni, ei, idx, cnt: (gi, ei, 0, 0)),
+            pl.BlockSpec((bk, blk_n),
+                         lambda gi, ni, ei, idx, cnt: (idx[gi, ei], ni)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, blk_n),
+                               lambda gi, ni, ei, idx, cnt: (gi, 0, ni)),
+        scratch_shapes=[pltpu.VMEM((bm, blk_n), jnp.float32)],
+    )
+    # The W BlockSpec addresses tile-rows: block (bk, blk_n) at block index
+    # (a_idx[g, e], ni) == elements [a_idx*bk : (a_idx+1)*bk, ni*blk_n : ...].
+    out = pl.pallas_call(
+        event_matmul_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g, bm, n), out_dtype),
+        interpret=interpret,
+        name="mnf_event_matmul",
+    )(a_idx, counts, a_vals, w)
+    return out

@@ -1,0 +1,53 @@
+"""Jit'd public wrapper around the event_matmul Pallas kernel.
+
+``event_matmul(a, w)`` = encode block events (repro.core.events) + Pallas
+multiply phase.  On CPU use ``interpret=True`` (kernel body executed in
+Python); on TPU the compiled kernel runs with MXU-aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.kernels.event_matmul.kernel import event_matmul_pallas
+
+__all__ = ["event_matmul", "event_matmul_from_events"]
+
+
+def event_matmul_from_events(bev: ev.BlockEvents, w: jax.Array, *,
+                             blk_n: int = 128, interpret: bool = False,
+                             out_dtype=jnp.float32) -> jax.Array:
+    """Multiply phase on pre-encoded events.  Returns (G*bm, N)."""
+    g, e, bm, bk = bev.values.shape
+    y = event_matmul_pallas(bev.values, bev.block_idx, bev.counts, w,
+                            blk_n=blk_n, interpret=interpret,
+                            out_dtype=out_dtype)
+    return y.reshape(g * bm, w.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "blk_m", "blk_k", "blk_n", "capacity", "threshold", "interpret"))
+def event_matmul(a: jax.Array, w: jax.Array, *, blk_m: int = 8,
+                 blk_k: int = 128, blk_n: int = 128,
+                 capacity: int | None = None, threshold: float = 0.0,
+                 interpret: bool = False) -> jax.Array:
+    """y = a @ W with the MNF block-event dataflow.  a: (M, K), w: (K, N).
+
+    Lossless (== dense matmul) when threshold == 0 and capacity covers all
+    live blocks; with threshold > 0 it drops event-free tiles exactly like
+    the oracle ``ref.event_matmul_ref``.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    ap = ev.pad_to_block_multiple(a, blk_m, 0)
+    ap = ev.pad_to_block_multiple(ap, blk_k, 1)
+    wp = ev.pad_to_block_multiple(w, blk_k, 0)
+    wp = ev.pad_to_block_multiple(wp, blk_n, 1)
+    bev = ev.encode_block_events(ap, blk_m=blk_m, blk_k=blk_k,
+                                 capacity=capacity, threshold=threshold)
+    y = event_matmul_from_events(bev, wp, blk_n=blk_n, interpret=interpret)
+    return y[:m, :n]

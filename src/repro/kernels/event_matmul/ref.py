@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the event_matmul kernel.
+
+Semantics: zero out every (blk_m, blk_k) activation tile whose max |value| is
+<= threshold (those tiles fire no event), then do a dense matmul.  The kernel
+must match this bit-for-bit up to f32 accumulation order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["event_matmul_ref", "mask_dead_blocks"]
+
+
+def mask_dead_blocks(a: jax.Array, *, blk_m: int, blk_k: int,
+                     threshold: float = 0.0) -> jax.Array:
+    """Zero tiles that contain no event (no |value| > threshold)."""
+    m, k = a.shape
+    assert m % blk_m == 0 and k % blk_k == 0
+    tiles = a.reshape(m // blk_m, blk_m, k // blk_k, blk_k)
+    live = jnp.any(jnp.abs(tiles) > threshold, axis=(1, 3), keepdims=True)
+    return jnp.where(live, tiles, 0).reshape(m, k)
+
+
+def event_matmul_ref(a: jax.Array, w: jax.Array, *, blk_m: int, blk_k: int,
+                     threshold: float = 0.0) -> jax.Array:
+    """Dense oracle of the block-event multiply phase: (M, K) @ (K, N)."""
+    masked = mask_dead_blocks(a, blk_m=blk_m, blk_k=blk_k, threshold=threshold)
+    return jnp.dot(masked.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel for the MNF fire phase (paper §4.2), fused.
+
+One VMEM pass over the accumulator tensor performs:
+  1. the fire decision (threshold compare; ReLU- or magnitude-mode),
+  2. optional int8 fake-quantization of fired values (paper §5.2.3 step 2),
+  3. per-tile event occupancy (does this (blk_m, blk_k) tile fire ≥1 event?)
+     — the metadata the next layer's multiply phase compacts on.
+
+Fusing 1–3 means the accumulator is read exactly once from HBM, the analogue
+of the paper's fire module reading each output neuron once from the
+accumulate SRAM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fire_compact_kernel", "fire_compact_pallas"]
+
+
+def fire_compact_kernel(acc_ref, fired_ref, occ_ref, *, threshold: float,
+                        magnitude: bool, qscale: float | None):
+    acc = acc_ref[...]
+    if magnitude:
+        live = jnp.abs(acc) > threshold
+    else:
+        live = acc > threshold
+    fired = jnp.where(live, acc, 0)
+    if qscale is not None:
+        # Symmetric int8 fake-quant with a static calibration scale.
+        q = jnp.clip(jnp.round(fired / qscale), -128, 127)
+        fired = q * qscale
+    fired_ref[...] = fired.astype(fired_ref.dtype)
+    occ_ref[0, 0] = jnp.any(live).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_m", "blk_k", "threshold",
+                                             "magnitude", "qscale",
+                                             "interpret"))
+def fire_compact_pallas(acc: jax.Array, *, blk_m: int = 8, blk_k: int = 128,
+                        threshold: float = 0.0, magnitude: bool = False,
+                        qscale: float | None = None,
+                        interpret: bool = False):
+    """Returns (fired (M, K), occupancy (M/blk_m, K/blk_k) int32)."""
+    m, k = acc.shape
+    assert m % blk_m == 0 and k % blk_k == 0, (m, k, blk_m, blk_k)
+    grid = (m // blk_m, k // blk_k)
+    kernel = functools.partial(fire_compact_kernel, threshold=threshold,
+                               magnitude=magnitude, qscale=qscale)
+    fired, occ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk_m, blk_k), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((blk_m, blk_k), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), acc.dtype),
+            jax.ShapeDtypeStruct((m // blk_m, k // blk_k), jnp.int32),
+        ],
+        interpret=interpret,
+        name="mnf_fire_compact",
+    )(acc)
+    return fired, occ

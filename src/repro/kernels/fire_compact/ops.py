@@ -1,0 +1,46 @@
+"""Jit'd wrapper: fire phase + event re-encoding for the next layer."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.kernels.fire_compact.kernel import fire_compact_pallas
+
+__all__ = ["fire_compact", "fire_and_encode"]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_m", "blk_k", "threshold",
+                                             "magnitude", "qscale",
+                                             "interpret"))
+def fire_compact(acc: jax.Array, *, blk_m: int = 8, blk_k: int = 128,
+                 threshold: float = 0.0, magnitude: bool = False,
+                 qscale: float | None = None, interpret: bool = False):
+    """Fused fire decision + occupancy over an (M, K) accumulator.
+
+    Pads to tile multiples; returns (fired (M, K), occupancy grid int32).
+    """
+    m, k = acc.shape
+    ap = ev.pad_to_block_multiple(acc, blk_m, 0)
+    ap = ev.pad_to_block_multiple(ap, blk_k, 1)
+    fired, occ = fire_compact_pallas(ap, blk_m=blk_m, blk_k=blk_k,
+                                     threshold=threshold, magnitude=magnitude,
+                                     qscale=qscale, interpret=interpret)
+    return fired[:m, :k], occ
+
+
+def fire_and_encode(acc: jax.Array, *, blk_m: int = 8, blk_k: int = 128,
+                    threshold: float = 0.0, magnitude: bool = False,
+                    capacity: int | None = None,
+                    interpret: bool = False):
+    """Full fire module: returns (fired dense, BlockEvents for next layer)."""
+    fired, _ = fire_compact(acc, blk_m=blk_m, blk_k=blk_k,
+                            threshold=threshold, magnitude=magnitude,
+                            interpret=interpret)
+    fp = ev.pad_to_block_multiple(fired, blk_m, 0)
+    fp = ev.pad_to_block_multiple(fp, blk_k, 1)
+    bev = ev.encode_block_events(fp, blk_m=blk_m, blk_k=blk_k,
+                                 capacity=capacity, threshold=0.0)
+    return fired, bev

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fire_compact kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fire_compact_ref"]
+
+
+def fire_compact_ref(acc: jax.Array, *, blk_m: int = 8, blk_k: int = 128,
+                     threshold: float = 0.0, magnitude: bool = False,
+                     qscale: float | None = None):
+    if magnitude:
+        live = jnp.abs(acc) > threshold
+    else:
+        live = acc > threshold
+    fired = jnp.where(live, acc, 0)
+    if qscale is not None:
+        fired = jnp.clip(jnp.round(fired / qscale), -128, 127) * qscale
+    fired = fired.astype(acc.dtype)
+    m, k = acc.shape
+    occ = jnp.any(live.reshape(m // blk_m, blk_m, k // blk_k, blk_k),
+                  axis=(1, 3)).astype(jnp.int32)
+    return fired, occ

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the Mamba1 selective scan, chunked + fused.
+
+The XLA path of the selective scan is memory-bound: the (B, T, D, N) state
+stream round-trips HBM at every elementwise step (measured on
+hymba/train_4k: the scan dominates the memory roofline term — EXPERIMENTS.md
+§Perf H1).  This kernel keeps the (D_blk, N) state in a VMEM scratch across
+the whole sequence and streams da/dbx/c chunk-by-chunk, so HBM traffic
+collapses to the input/output streams — the same accumulate-SRAM discipline
+as the event_matmul and wkv6 kernels.
+
+Grid: (B, D // D_blk, T // C), chunk innermost-sequential; channels are
+independent in Mamba so the D_blk dimension parallelizes freely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba_scan_kernel", "mamba_scan_pallas"]
+
+
+def mamba_scan_kernel(da_ref, dbx_ref, c_ref, h0_ref,
+                      y_ref, hfin_ref, h_acc, *, chunk: int):
+    t = pl.program_id(2)
+    num_t = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_acc[...] = h0_ref[0].astype(jnp.float32)
+
+    def step(i, _):
+        da_t = da_ref[0, i].astype(jnp.float32)      # (D_blk, N)
+        dbx_t = dbx_ref[0, i].astype(jnp.float32)
+        c_t = c_ref[0, i].astype(jnp.float32)        # (1, N)
+        h = da_t * h_acc[...] + dbx_t
+        h_acc[...] = h
+        y_ref[0, i] = jnp.sum(h * c_t, axis=-1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(t == num_t - 1)
+    def _flush():
+        hfin_ref[0] = h_acc[...].astype(hfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_blk", "chunk", "interpret"))
+def mamba_scan_pallas(da: jax.Array, dbx: jax.Array, c: jax.Array,
+                      h0: jax.Array, *, d_blk: int = 128, chunk: int = 64,
+                      interpret: bool = False):
+    """da, dbx: (B, T, D, N); c: (B, T, N); h0: (B, D, N).
+
+    Returns (y (B, T, D) f32, h_final (B, D, N) f32).  D % d_blk == 0 and
+    T % chunk == 0 (callers pad; see ops.py).
+    """
+    b, t, d, n = da.shape
+    assert d % d_blk == 0 and t % chunk == 0, (d, d_blk, t, chunk)
+    grid = (b, d // d_blk, t // chunk)
+
+    stream = pl.BlockSpec((1, chunk, d_blk, n),
+                          lambda bi, di, ti: (bi, ti, di, 0))
+    cspec = pl.BlockSpec((1, chunk, n), lambda bi, di, ti: (bi, ti, 0))
+    state = pl.BlockSpec((1, d_blk, n), lambda bi, di, ti: (bi, di, 0))
+    yspec = pl.BlockSpec((1, chunk, d_blk), lambda bi, di, ti: (bi, ti, di))
+
+    y, hfin = pl.pallas_call(
+        functools.partial(mamba_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[stream, stream, cspec, state],
+        out_specs=[yspec, state],
+        out_shape=[jax.ShapeDtypeStruct((b, t, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, d, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((d_blk, n), jnp.float32)],
+        interpret=interpret,
+        name="mamba_selective_scan",
+    )(da, dbx, c, h0)
+    return y, hfin

@@ -1,0 +1,38 @@
+"""Jit'd wrapper: pad to tile multiples, run the fused selective scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+
+__all__ = ["mamba_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("d_blk", "chunk", "interpret"))
+def mamba_scan(da: jax.Array, dbx: jax.Array, c: jax.Array,
+               h0: jax.Array | None = None, *, d_blk: int = 128,
+               chunk: int = 64, interpret: bool = False):
+    """da, dbx: (B, T, D, N); c: (B, T, N) -> (y (B, T, D), h_fin (B, D, N)).
+
+    Padding: T pads with da=1, dbx=0 (state passes through unchanged — same
+    identity-decay convention as the wkv6 wrapper); D pads with zeros.
+    """
+    b, t, d, n = da.shape
+    d_blk = min(d_blk, d)
+    chunk = min(chunk, t)
+    pt, pd = (-t) % chunk, (-d) % d_blk
+    if pt or pd:
+        da = jnp.pad(da, ((0, 0), (0, pt), (0, pd), (0, 0)),
+                     constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pt), (0, pd), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pt), (0, 0)))
+    if h0 is None:
+        h0 = jnp.zeros((b, d + pd, n), jnp.float32)
+    elif pd:
+        h0 = jnp.pad(h0, ((0, 0), (0, pd), (0, 0)))
+    y, hfin = mamba_scan_pallas(da, dbx, c, h0, d_blk=d_blk, chunk=chunk,
+                                interpret=interpret)
+    return y[:, :t, :d], hfin[:, :d]

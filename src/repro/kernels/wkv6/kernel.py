@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence, chunked.
+
+Grid (B, T // C) with the chunk dimension innermost-sequential: the (D, D)
+WKV state lives in a VMEM scratch accumulator across the whole sequence of
+one batch row — it is never round-tripped to HBM between chunks (the
+accumulate-SRAM discipline of the MNF PE, applied to a recurrent state).
+Inside a chunk the exact per-token recurrence runs in a fori_loop; all math
+in f32.
+
+HBM traffic: r/k/v/w are streamed chunk-by-chunk (double-buffered by Mosaic),
+o is streamed out, the state is written once at the end.  That makes the
+kernel memory-roofline-optimal for decode/long-context shapes where
+T·D ≫ D².
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6_kernel", "wkv6_pallas"]
+
+
+def wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                o_ref, sfin_ref, s_acc, *, chunk: int):
+    t = pl.program_id(1)
+    num_t = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_acc[...] = s0_ref[0].astype(jnp.float32)
+
+    u = u_ref[...].astype(jnp.float32)             # (1, D)
+
+    def step(i, _):
+        rt = r_ref[0, i, :].astype(jnp.float32)[None, :]   # (1, D)
+        kt = k_ref[0, i, :].astype(jnp.float32)[None, :]
+        vt = v_ref[0, i, :].astype(jnp.float32)[None, :]
+        wt = w_ref[0, i, :].astype(jnp.float32)[None, :]
+        s = s_acc[...]                                     # (D, D)
+        att = jnp.sum(rt * u * kt)                         # scalar
+        o = att * vt + jnp.dot(rt, s,
+                               preferred_element_type=jnp.float32)  # (1, D)
+        o_ref[0, i, :] = o[0].astype(o_ref.dtype)
+        s_acc[...] = wt.T * s + kt.T * vt                  # diag(w)S + k v^T
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(t == num_t - 1)
+    def _flush():
+        sfin_ref[0] = s_acc[...].astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, s0: jax.Array, *, chunk: int = 64,
+                interpret: bool = False):
+    """r,k,v,w: (B, T, D); u: (D,); s0: (B, D, D) -> (o, s_final)."""
+    b, t, d = r.shape
+    assert t % chunk == 0, (t, chunk)
+    grid = (b, t // chunk)
+    u2 = u.reshape(1, d)
+
+    rkvw_spec = pl.BlockSpec((1, chunk, d), lambda bi, ti: (bi, ti, 0))
+    state_spec = pl.BlockSpec((1, d, d), lambda bi, ti: (bi, 0, 0))
+    o, sfin = pl.pallas_call(
+        functools.partial(wkv6_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[rkvw_spec, rkvw_spec, rkvw_spec, rkvw_spec,
+                  pl.BlockSpec((1, d), lambda bi, ti: (0, 0)),
+                  state_spec],
+        out_specs=[rkvw_spec, state_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, t, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, d, d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+        name="wkv6_chunked",
+    )(r, k, v, w, u2, s0)
+    return o, sfin

@@ -1,0 +1,55 @@
+"""Jit'd wrapper for the WKV6 kernel: multi-head batching + chunk padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.wkv6.kernel import wkv6_kernel
+
+__all__ = ["wkv6"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, s0: jax.Array | None = None, *, chunk: int = 64,
+         interpret: bool = False):
+    """Multi-head WKV6.  r,k,v,w: (B, H, T, D); u: (H, D); s0: (B, H, D, D).
+
+    Returns (o (B, H, T, D) f32, s_final (B, H, D, D) f32).  (B, H) flattens
+    into the batch grid dimension; each head's bonus ``u`` row is selected by
+    the BlockSpec index map (bh mod H).
+    """
+    b, h, t, d = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)  # identity decay in padding
+    tp = t + pad
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    flat = lambda x: x.reshape(b * h, tp, d)
+    rkvw_spec = pl.BlockSpec((1, chunk, d), lambda bh, ti: (bh, ti, 0))
+    state_spec = pl.BlockSpec((1, d, d), lambda bh, ti: (bh, 0, 0))
+    u_spec = pl.BlockSpec((1, d), lambda bh, ti: (bh % h, 0))
+
+    o, sfin = pl.pallas_call(
+        functools.partial(wkv6_kernel, chunk=chunk),
+        grid=(b * h, tp // chunk),
+        in_specs=[rkvw_spec, rkvw_spec, rkvw_spec, rkvw_spec, u_spec,
+                  state_spec],
+        out_specs=[rkvw_spec, state_spec],
+        out_shape=[jax.ShapeDtypeStruct((b * h, tp, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b * h, d, d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+        name="wkv6_chunked",
+    )(flat(r), flat(k), flat(v), flat(w), u, s0.reshape(b * h, d, d))
+    return (o.reshape(b, h, tp, d)[:, :, :t],
+            sfin.reshape(b, h, d, d))

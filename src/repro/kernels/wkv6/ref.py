@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with head dim D (keys) × D (values):
+
+    o_t     = r_t^T (diag(u) k_t v_t^T + S_t)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T,      S_0 given (default 0)
+
+with data-dependent per-channel decay w_t ∈ (0, 1).  This is the exact
+sequential recurrence (lax.scan); the Pallas kernel must match it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv6_ref"]
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, s0: jax.Array | None = None):
+    """r,k,v,w: (B, T, D); u: (D,); s0: (B, D, D) or None.
+
+    Returns (o (B, T, D), s_final (B, D, D)).  f32 math.
+    """
+    b, t, d = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, d, d), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B, D) each
+        # o_t[j] = sum_d r_d (u_d k_d v_j + S[d, j])
+        att = jnp.einsum("bd,bd->b", rt, u[None, :] * kt)       # scalar/b
+        o = att[:, None] * vt + jnp.einsum("bd,bdj->bj", rt, s)
+        s = wt[:, :, None] * s + kt[:, :, None] * vt[:, None, :]
+        return s, o
+
+    xs = (r.astype(jnp.float32).swapaxes(0, 1),
+          k.astype(jnp.float32).swapaxes(0, 1),
+          v.astype(jnp.float32).swapaxes(0, 1),
+          w.astype(jnp.float32).swapaxes(0, 1))
+    s_final, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return o.swapaxes(0, 1), s_final

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, sharded step factories, dry-run, roofline, drivers."""

@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the first import side effect: the XLA_FLAGS line above runs before
+any jax import so the host platform exposes 512 placeholder devices for the
+production meshes (16×16 single-pod, 2×16×16 multi-pod).
+
+Per cell:
+  1. build the sharded step function (launch/steps.py),
+  2. .lower(**ShapeDtypeStruct inputs)  — no allocation anywhere,
+  3. .compile()                         — proves the GSPMD partition exists,
+  4. record memory_analysis() (fits-on-device proof), cost_analysis()
+     (FLOPs/bytes) and the collective schedule (HLO parse) for §Roofline.
+
+Results stream into results/dryrun/<arch>__<shape>__<mesh>.json so the
+roofline table assembles incrementally and reruns skip finished cells.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, collective_bytes_from_hlo, format_row
+from repro.launch.steps import plan_cell
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# long_500k requires sub-quadratic context handling (DESIGN.md shape skips);
+# whisper's decoder positions are a shape exercise only (noted).
+def cell_supported(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: full-attention arch (see DESIGN.md)"
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return False, "decode skipped: encoder-only arch"
+    return True, ""
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, rules=None, tag: str = "",
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, why = cell_supported(cfg, shape)
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_name, tag=tag)
+    suffix = f"__{tag}" if tag else ""
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json"),
+                "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    try:
+        plan = plan_cell(cfg, shape, mesh, rules=rules)
+        with mesh:
+            lowered = plan.fn.lower(*plan.arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        bytes_per_device = int(getattr(mem, "temp_size_in_bytes", 0) +
+                               getattr(mem, "argument_size_in_bytes", 0) +
+                               getattr(mem, "output_size_in_bytes", 0) -
+                               getattr(mem, "alias_size_in_bytes", 0))
+        rep = analyze(arch, cfg, shape, mesh_name, chips, cost, hlo,
+                      bytes_per_device)
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=dict(
+                temp=int(getattr(mem, "temp_size_in_bytes", 0)),
+                args=int(getattr(mem, "argument_size_in_bytes", 0)),
+                output=int(getattr(mem, "output_size_in_bytes", 0)),
+                alias=int(getattr(mem, "alias_size_in_bytes", 0)),
+                generated_code=int(getattr(mem,
+                                           "generated_code_size_in_bytes", 0)),
+            ),
+            roofline=rep.to_json())
+        if verbose:
+            print(format_row(rep), flush=True)
+    except Exception as e:  # a failed cell is a bug — record it loudly
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"FAIL {arch} {shape_name} {mesh_name}: {e}", flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                cells.append((arch, shp, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shp, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        path = os.path.join(args.out_dir, f"{arch}__{shp}__{mesh_name}.json")
+        if args.skip_done and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    continue
+        rec = run_cell(arch, shp, multi_pod=mp, out_dir=args.out_dir)
+        n_ok += rec["status"] == "ok"
+        n_skip += rec["status"] == "skipped"
+        n_fail += rec["status"] == "error"
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

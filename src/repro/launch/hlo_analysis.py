@@ -1,0 +1,409 @@
+"""Loop-aware structural cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified: a
+10-iteration scan of 128³ matmuls reports one matmul's FLOPs).  Every layer
+stack here is a lax.scan, so raw XLA numbers undercount by ~L×.  This module
+re-derives FLOPs / HBM bytes / collective bytes from ``compiled.as_text()``:
+
+  * computations are parsed into symbol tables (every instruction line
+    declares its result shape; parameters declare theirs in the signature);
+  * ``while`` ops multiply their body+condition cost by the
+    ``known_trip_count`` backend_config annotation XLA attaches after loop
+    analysis (falling back to 1 — i.e. the XLA behaviour — if absent);
+  * ``fusion`` bytes = operand + result shapes at the call site (internal
+    instructions touch registers/VMEM, not HBM); fusion FLOPs recurse into
+    the fused computation;
+  * dynamic-slice / dynamic-update-slice / gather / scatter count only the
+    bytes actually moved (result/update), not whole operands — matching
+    HloCostAnalysis semantics;
+  * collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) are accumulated per kind with loop multipliers
+    applied — this is the §Roofline collective term.
+
+Validated against hand-computable programs in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["Cost", "analyze_hlo_text", "parse_computations"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one array shape like f32[128,128] or pred[] or s32[2]{0}
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                        r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes_one(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype, 0)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_shape_bytes_one(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(text))
+
+
+def _shape_elems(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.by_collective.items():
+            self.by_collective[k] += v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.bytes * k, self.collective_bytes * k)
+        for kk, v in self.by_collective.items():
+            c.by_collective[kk] = v * k
+        return c
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_shapes: str          # text before the op name (shapes)
+    op: str
+    operands: list
+    line: str
+    is_root: bool = False
+
+
+_OP_RE = re.compile(r"((?:[a-z0-9\-]+))\(")
+
+
+def _parse_instr(line: str):
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    is_root = line.lstrip().startswith("ROOT")
+    om = None
+    # result shape(s) precede the op token; find the first op-looking token
+    # followed by '(' after the closing of the shape spec.
+    for mm in _OP_RE.finditer(rhs):
+        tok = mm.group(1)
+        if tok in _DTYPE_BYTES:           # dtype like f32[...] — skip
+            continue
+        om = mm
+        break
+    if om is None:
+        return None
+    op = om.group(1)
+    shapes_part = rhs[:om.start()]
+    args_start = om.end()
+    depth = 1
+    i = args_start
+    while i < len(rhs) and depth:
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+        i += 1
+    operand_text = rhs[args_start:i - 1]
+    operands = _OPND_RE.findall(operand_text)
+    return Instr(name=name, result_shapes=shapes_part, op=op,
+                 operands=operands, line=rhs, is_root=is_root)
+
+
+def parse_computations(hlo: str) -> dict:
+    """name -> list[Instr]; also returns shape table name -> result text."""
+    comps: dict[str, list] = {}
+    shapes: dict[str, str] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):      # computation header or metadata
+            hm = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)$", line)
+            if hm and "{" in line:
+                cur = hm.group(1)
+                comps[cur] = []
+                # parameter shapes from the signature: name: shape
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))",
+                                      line):
+                    shapes[f"{cur}::{pm.group(1)}"] = pm.group(2)
+            else:
+                cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is None:
+            continue
+        comps[cur].append(ins)
+        shapes[f"{cur}::{ins.name}"] = ins.result_shapes
+    return dict(comps=comps, shapes=shapes)
+
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-get-and-update-state",
+    "custom-call",  # handled separately below if needed
+    "bitcast-convert",
+}
+
+_MOVE_ONLY_OPS = {"copy", "reshape", "transpose", "broadcast", "concatenate",
+                  "slice", "pad", "reverse", "convert", "reduce", "compare",
+                  "select", "clamp", "map", "sort"}
+
+_CHEAP_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "floor", "ceil", "sign", "cosine", "sine", "logistic", "and", "or",
+    "xor", "not", "remainder", "atan2", "expm1", "log1p", "round-nearest-afz",
+    "round-nearest-even", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "select", "compare", "convert", "reduce",
+    "exponential-minus-one",
+}
+
+
+class _Analyzer:
+    def __init__(self, parsed):
+        self.comps = parsed["comps"]
+        self.shapes = parsed["shapes"]
+        self.memo: dict[str, Cost] = {}
+
+    def operand_shape(self, comp: str, name: str) -> str:
+        return self.shapes.get(f"{comp}::{name}", "")
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        # flops = 2 * result_elems * prod(contracting dims of lhs)
+        res = _shape_elems(ins.result_shapes)
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        lhs_shape = self.operand_shape(comp, ins.operands[0]) if ins.operands else ""
+        lm = _SHAPE_RE.search(lhs_shape)
+        if not cm or not lm:
+            return 2.0 * res            # fallback
+        dims = [int(d) for d in lm.group(2).split(",")] if lm.group(2) else []
+        k = 1
+        for ci in cm.group(1).split(","):
+            if ci != "" and int(ci) < len(dims):
+                k *= dims[int(ci)]
+        return 2.0 * res * k
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        res = _shape_elems(ins.result_shapes)
+        km = self.operand_shape(comp, ins.operands[1]) if len(ins.operands) > 1 else ""
+        km_m = _SHAPE_RE.search(km)
+        if not km_m or not km_m.group(2):
+            return 2.0 * res
+        kdims = [int(d) for d in km_m.group(2).split(",")]
+        res_m = _SHAPE_RE.search(ins.result_shapes)
+        out_feat = 1
+        if res_m and res_m.group(2):
+            pass
+        # per output element: 2 * (kernel elems / output features)
+        out_feature_guess = max(kdims[-1], 1)
+        per_out = 1
+        for d in kdims:
+            per_out *= d
+        per_out //= out_feature_guess
+        return 2.0 * res * per_out
+
+    def instr_cost(self, comp: str, ins: Instr, *, in_fusion: bool) -> Cost:
+        c = Cost()
+        op = ins.op
+        res_bytes = _shapes_bytes(ins.result_shapes)
+        res_elems = _shape_elems(ins.result_shapes)
+        opnd_bytes = sum(_shapes_bytes(self.operand_shape(comp, o))
+                         for o in ins.operands)
+
+        if op in _COLLECTIVES or op.rstrip("-start") in _COLLECTIVES or \
+                any(op == k + "-start" for k in _COLLECTIVES):
+            base = op[:-6] if op.endswith("-start") else op
+            c.collective_bytes += res_bytes
+            c.by_collective[base] += res_bytes
+            c.bytes += res_bytes + opnd_bytes
+            return c
+        if op.endswith("-done"):
+            return c
+
+        if op == "while":
+            body, cond = None, None
+            bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+            cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+            trip = 1
+            tm = _TRIP_RE.search(ins.line)
+            if tm:
+                trip = int(tm.group(1))
+            sub = Cost()
+            if bm:
+                sub += self.comp_cost(bm.group(1))
+            if cm:
+                sub += self.comp_cost(cm.group(1))
+            c += sub.scaled(trip)
+            return c
+
+        if op == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if fm:
+                inner_name = fm.group(1)
+                inner = self.comp_cost(inner_name, fusion_ctx=True)
+                c.flops += inner.flops
+                c.collective_bytes += inner.collective_bytes
+                for k, v in inner.by_collective.items():
+                    c.by_collective[k] += v
+                # HBM traffic = fusion boundary, slice-aware: a parameter
+                # consumed only by (dynamic-)slice/gather inside the fusion
+                # is charged at slice-result size, not full-buffer size
+                # (matches HloCostAnalysis; critical for scan-over-layers,
+                # where each iteration slices one layer from the stacked
+                # params).  A root dynamic-update-slice aliases its buffer —
+                # traffic is the update, not the buffer.
+                c.bytes += self._fusion_boundary_bytes(comp, ins, inner_name)
+            return c
+
+        if op in ("call", "conditional", "async-start"):
+            for m in _CALLED_RE.finditer(ins.line):
+                names = m.group(1) or m.group(2)
+                for nm in names.split(","):
+                    nm = nm.strip().lstrip("%")
+                    if nm in self.comps:
+                        c += self.comp_cost(nm)
+            c.bytes += res_bytes + opnd_bytes
+            return c
+
+        if op in ("dot", "dot-general"):
+            c.flops += self._dot_flops(comp, ins)
+            if not in_fusion:
+                c.bytes += res_bytes + opnd_bytes
+            return c
+        if op == "convolution":
+            c.flops += self._conv_flops(comp, ins)
+            if not in_fusion:
+                c.bytes += res_bytes + opnd_bytes
+            return c
+
+        if op in ("dynamic-slice", "gather"):
+            c.bytes += 0 if in_fusion else 2 * res_bytes
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = (_shapes_bytes(self.operand_shape(comp, ins.operands[1]))
+                   if len(ins.operands) > 1 else res_bytes)
+            c.bytes += 0 if in_fusion else 2 * upd
+            c.flops += _shape_elems(self.operand_shape(comp, ins.operands[1])) \
+                if op == "scatter" and len(ins.operands) > 1 else 0
+            return c
+
+        if op in _ZERO_COST_OPS:
+            if op == "custom-call":
+                c.bytes += 0 if in_fusion else res_bytes + opnd_bytes
+            return c
+
+        # generic elementwise / data movement
+        if op in _CHEAP_FLOP_OPS:
+            c.flops += res_elems
+        if op == "reduce":
+            c.flops += max(opnd_bytes // 4, res_elems)
+        if not in_fusion:
+            c.bytes += res_bytes + opnd_bytes
+        return c
+
+    def _fusion_boundary_bytes(self, comp: str, ins: Instr,
+                               inner_name: str) -> float:
+        inner = self.comps.get(inner_name, ())
+        # parameter ordinal -> instr name (declared "… parameter(N)")
+        params: dict[int, Instr] = {}
+        for ii in inner:
+            if ii.op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", ii.line)
+                if pm:
+                    params[int(pm.group(1))] = ii
+        # consumers per inner instr name
+        consumers: dict[str, list] = {}
+        for ii in inner:
+            for o in ii.operands:
+                consumers.setdefault(o, []).append(ii)
+
+        total = 0.0
+        for ordi, pins in params.items():
+            full = _shapes_bytes(pins.result_shapes)
+            cons = consumers.get(pins.name, [])
+            if cons and all(cc.op in ("dynamic-slice", "gather", "slice")
+                            for cc in cons):
+                total += sum(_shapes_bytes(cc.result_shapes) for cc in cons)
+            elif cons and all(cc.op == "dynamic-update-slice" and
+                              cc.operands and cc.operands[0] == pins.name
+                              for cc in cons):
+                # in-place update: read+write the update region only
+                for cc in cons:
+                    upd = (self.shapes.get(f"{inner_name}::{cc.operands[1]}",
+                                           "") if len(cc.operands) > 1 else "")
+                    total += 2 * _shapes_bytes(upd)
+            else:
+                total += full
+        # result side
+        root = next((ii for ii in inner if ii.is_root), None)
+        res_bytes = _shapes_bytes(ins.result_shapes)
+        if root is not None and root.op == "dynamic-update-slice":
+            upd = (self.shapes.get(f"{inner_name}::{root.operands[1]}", "")
+                   if len(root.operands) > 1 else "")
+            res_bytes = _shapes_bytes(upd)
+        total += res_bytes
+        return total
+
+    def comp_cost(self, comp: str, fusion_ctx: bool = False) -> Cost:
+        key = f"{comp}::{fusion_ctx}"
+        if key in self.memo:
+            return self.memo[key]
+        total = Cost()
+        for ins in self.comps.get(comp, ()):  # missing comp -> zero
+            total += self.instr_cost(comp, ins, in_fusion=fusion_ctx)
+        self.memo[key] = total
+        return total
+
+
+def analyze_hlo_text(hlo: str, entry: str | None = None) -> Cost:
+    parsed = parse_computations(hlo)
+    comps = parsed["comps"]
+    if entry is None:
+        # The ENTRY computation is marked in the header line; our parser
+        # stores it like any other — find it from the module header.
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+        if m:
+            entry = m.group(1)
+        else:
+            # fallback: computation named like main.NNN
+            cands = [c for c in comps if c.startswith("main")]
+            entry = cands[0] if cands else next(iter(comps))
+    return _Analyzer(parsed).comp_cost(entry)

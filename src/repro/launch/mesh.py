@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Never touches jax device state at import time: meshes are built by FUNCTION
+call only.  Dry-run processes must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before any jax
+import* (launch/dryrun.py does this in its first two lines).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_small_mesh"]
+
+
+def _auto(axes):
+    return (jax.sharding.AxisType.Auto,) * len(axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (data, model) single pod; 2×16×16 (pod, data, model) for two."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+
+
+def make_small_mesh(shape=(2, 4), axes=("data", "model")):
+    """Test-scale mesh (requires a forced host device count >= prod(shape))."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(axes))

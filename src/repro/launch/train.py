@@ -1,0 +1,122 @@
+"""End-to-end training driver.
+
+Wires config → mesh → sharded train step → resilient loop (checkpoint /
+restart / straggler detection) → synthetic data pipeline.  On CPU use a
+reduced config; on a pod pass --arch with the full config and the production
+mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.data import TokenStreamConfig, markov_lm_batch
+from repro.launch.steps import make_train_step
+from repro.optim import AdamWConfig, adamw_init, warmup_cosine
+from repro.runtime import LoopConfig, ResilientLoop
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mnf_threshold is not None:
+        cfg = dataclasses.replace(
+            cfg, mnf=dataclasses.replace(cfg.mnf, enabled=True,
+                                         threshold=args.mnf_threshold))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    ndev = len(jax.devices())
+    if ndev >= 512:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    else:
+        # largest (data, model) grid available
+        model = 1
+        while model * 2 <= min(4, ndev) and ndev % (model * 2) == 0:
+            model *= 2
+        mesh = jax.make_mesh(
+            (ndev // model, model), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    opt = AdamWConfig(schedule=warmup_cosine(args.lr, args.warmup,
+                                             args.steps))
+    plan = make_train_step(cfg, shape, mesh, opt=opt)
+    return cfg, shape, mesh, plan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mnf-threshold", type=float, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg, shape, mesh, plan = build(args)
+    print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"arch={cfg.name} reduced={args.reduced}")
+
+    with mesh:
+        key = jax.random.PRNGKey(0)
+        from repro.models import init_params
+        params = jax.jit(lambda k: init_params(k, cfg)[0],
+                         out_shardings=plan.param_shardings)(key)
+        opt_state = jax.jit(adamw_init,
+                            out_shardings=None)(params)
+
+        ds_cfg = TokenStreamConfig(vocab_size=cfg.vocab_size,
+                                   seq_len=args.seq,
+                                   global_batch=args.batch)
+
+        def batch_fn(step):
+            return markov_lm_batch(ds_cfg, step)
+
+        def step_fn(state, batch):
+            params, opt_state = state
+            params, opt_state, metrics = plan.fn(params, opt_state, batch)
+            return (params, opt_state), metrics
+
+        loop = ResilientLoop(
+            LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every),
+            step_fn, batch_fn)
+
+        t0 = time.time()
+        (params, opt_state), final_step, preempted = loop.run(
+            (params, opt_state))
+        dt = time.time() - t0
+
+    losses = [m["loss"] for m in loop.metrics_log]
+    stragglers = sum(m["straggler"] for m in loop.metrics_log)
+    print(json.dumps(dict(
+        final_step=final_step, preempted=preempted,
+        wall_s=round(dt, 1),
+        first_loss=round(losses[0], 4) if losses else None,
+        last_loss=round(sum(losses[-10:]) / max(len(losses[-10:]), 1), 4)
+        if losses else None,
+        stragglers_flagged=int(stragglers),
+        tokens_per_s=round(len(losses) * args.batch * args.seq / dt, 1))))
+    for m in loop.metrics_log[::max(1, args.log_every)]:
+        print(f"  step {int(m['step']):5d} loss {m['loss']:.4f} "
+              f"gnorm {m['grad_norm']:.3f} {m['step_time_s']*1e3:8.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

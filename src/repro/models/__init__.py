@@ -1,0 +1,9 @@
+"""Model zoo: LM stacks for the assigned architectures + the paper's CNNs."""
+from repro.models.transformer import (active_params, cache_specs,
+                                      count_params, decode_step, forward,
+                                      init_cache, init_params, input_specs,
+                                      lm_loss, prefill)
+
+__all__ = ["active_params", "cache_specs", "count_params", "decode_step",
+           "forward", "init_cache", "init_params", "input_specs", "lm_loss",
+           "prefill"]

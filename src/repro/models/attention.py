@@ -1,0 +1,271 @@
+"""Attention: chunked online-softmax (flash-style) GQA/MHA + MLA, KV caches.
+
+``chunked_attention`` is the workhorse for train/prefill — it never
+materializes the (S, S) score matrix (lax.scan over KV chunks with online
+max/sum), supports causal masking, sliding windows (traced per-layer window
+scalars — one scan body serves gemma2's alternating local/global and hymba's
+listed global layers), GQA head grouping, logit soft-capping, and a valid-
+length bound for cache attention.  Decode uses a single-chunk fast path.
+
+MLA (DeepSeek-V2) implements both the expanded formulation (train/prefill)
+and the absorbed formulation for decode (scores taken directly against the
+compressed KV cache — the production decode path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLOBAL_WINDOW, ModelConfig
+from repro.models.layers import apply_rope
+from repro.models.param_utils import Init
+
+__all__ = ["chunked_attention", "attn_init", "attn_apply", "mla_init",
+           "mla_apply"]
+
+_NEG = -1e30
+
+
+def _softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_positions: jax.Array, window, kv_len=None,
+                      causal: bool = True, softcap: float | None = None,
+                      chunk: int = 1024, scale: float | None = None
+                      ) -> jax.Array:
+    """q: (B, Sq, H, Dk); k: (B, Skv, KH, Dk); v: (B, Skv, KH, Dv).
+
+    q_positions: (Sq,) global positions of the queries (KV positions are
+    0..Skv-1).  window: traced or static int — attend iff
+    0 <= q_pos - kv_pos < window (GLOBAL_WINDOW = unbounded).  kv_len:
+    optional scalar — KV slots >= kv_len are invalid (decode caches).
+    Returns (B, Sq, H, Dv) in q.dtype; softmax math in f32.
+    """
+    b, sq, h, dk = q.shape
+    _, skv, kh, _ = k.shape
+    dv = v.shape[-1]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    scale = dk ** -0.5 if scale is None else scale
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkc = (skv + pad) // chunk
+    if kv_len is None:
+        kv_len = skv
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+
+    qr = (q.astype(jnp.float32) * scale).reshape(b, sq, kh, g, dk)
+    qpos = q_positions.astype(jnp.int32)
+
+    kc = k.reshape(b, nkc, chunk, kh, dk).swapaxes(0, 1)   # (nkc, B, C, KH, D)
+    vc = v.reshape(b, nkc, chunk, kh, dv).swapaxes(0, 1)
+
+    m0 = jnp.full((b, sq, kh, g), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kh, g, dv), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kci, vci = xs
+        logits = jnp.einsum("bskgd,bckd->bskgc", qr,
+                            kci.astype(jnp.float32))       # (B,Sq,KH,G,C)
+        logits = _softcap(logits, softcap)
+        kvpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        delta = qpos[:, None] - kvpos[None, :]             # (Sq, C)
+        ok = kvpos[None, :] < kv_len
+        if causal:
+            ok = ok & (delta >= 0) & (delta < window)
+        else:
+            ok = ok & (jnp.abs(delta) < window)
+        logits = jnp.where(ok[None, :, None, None, :], logits, _NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        # Probabilities in the K/V dtype (bf16 on TPU): halves the dominant
+        # HBM term; the running max/sum stay f32 (flash-attention numerics).
+        p = jnp.exp(logits - m_new[..., None]).astype(kci.dtype)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.astype(jnp.float32).sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bskgc,bckd->bskgd", p, vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    # Flash-attention backward: remat the chunk body so the (nkc, B, Sq, …)
+    # probability stack is never saved for autodiff — backward recomputes
+    # each chunk's p from q/k (O(S·chunk) live memory instead of O(S·S)).
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies
+                          .nothing_saveable, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nkc, dtype=jnp.int32), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA/MHA attention layer
+# ---------------------------------------------------------------------------
+
+def attn_init(key: jax.Array, cfg: ModelConfig):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    b.dense("wq", (d, qd), ("embed", "q_heads"))
+    b.dense("wk", (d, kvd), ("embed", "kv_heads"))
+    b.dense("wv", (d, kvd), ("embed", "kv_heads"))
+    b.dense("wo", (qd, d), ("q_heads", "embed"))
+    if cfg.qkv_bias:
+        b.zeros("bq", (qd,), ("q_heads",))
+        b.zeros("bk", (kvd,), ("kv_heads",))
+        b.zeros("bv", (kvd,), ("kv_heads",))
+    return b.done()
+
+
+def attn_apply(p, x: jax.Array, *, cfg: ModelConfig, positions: jax.Array,
+               window, cache=None, decode_pos=None, causal: bool = True,
+               kv_override: tuple | None = None, sc=lambda x, ax: x):
+    """x: (B, S, d).  Returns (out (B, S, d), new_cache or (k, v)).
+
+    Modes:
+      train/prefill: cache None; returns computed (k, v) for cache fill.
+      decode: cache = dict(k=(B, Smax, KH, D), v=..., len=scalar);
+              decode_pos = scalar position of the new token(s).
+      cross-attention: kv_override = (k, v) precomputed; cache unused.
+
+    Sharding: heads shard over the model axis when divisible; otherwise the
+    query sequence shards (attn_seq — sequence parallelism inside attention)
+    with the small GQA K/V replicated.  Decode caches shard kv_heads-first,
+    falling back to cache_seq.
+    """
+    bsz, s, d = x.shape
+    cdt = x.dtype
+    q = x @ p["wq"].astype(cdt)
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+    q = q.reshape(bsz, s, cfg.num_heads, cfg.head_dim)
+
+    if kv_override is None:
+        k = x @ p["wk"].astype(cdt)
+        v = x @ p["wv"].astype(cdt)
+        if "bk" in p:
+            k = k + p["bk"].astype(cdt)
+            v = v + p["bv"].astype(cdt)
+        k = k.reshape(bsz, s, cfg.num_kv_heads, cfg.head_dim)
+        v = v.reshape(bsz, s, cfg.num_kv_heads, cfg.head_dim)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+        q = apply_rope(q, positions, cfg.rope_theta) if causal else q
+
+    q = sc(q, ("batch", "attn_seq", "heads", None))
+    new_cache = (k, v)
+    kv_len = None
+    if cache is not None:
+        # Functional cache update at decode_pos.
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, decode_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, decode_pos, 0, 0))
+        k, v = ck, cv
+        kv_len = decode_pos + s
+        new_cache = dict(k=ck, v=cv)
+        k = sc(k, ("batch", "cache_seq", "kv_heads", None))
+        v = sc(v, ("batch", "cache_seq", "kv_heads", None))
+    else:
+        k = sc(k, ("batch", None, "kv_heads", None))
+        v = sc(v, ("batch", None, "kv_heads", None))
+
+    out = chunked_attention(q, k.astype(cdt), v.astype(cdt),
+                            q_positions=positions, window=window,
+                            kv_len=kv_len, causal=causal,
+                            softcap=cfg.attn_logit_softcap,
+                            chunk=cfg.attn_chunk)
+    out = sc(out, ("batch", "attn_seq", "heads", None))
+    out = out.reshape(bsz, s, cfg.q_dim) @ p["wo"].astype(cdt)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed KV with decoupled RoPE
+# ---------------------------------------------------------------------------
+
+def mla_init(key: jax.Array, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    b.dense("wq", (d, h * qk), ("embed", "q_heads"))
+    b.dense("w_dkv", (d, m.kv_lora_rank + m.qk_rope_dim), ("embed", "kv_lora"))
+    b.dense("w_uk", (m.kv_lora_rank, h * m.qk_nope_dim), ("kv_lora", "q_heads"))
+    b.dense("w_uv", (m.kv_lora_rank, h * m.v_head_dim), ("kv_lora", "q_heads"))
+    b.dense("wo", (h * m.v_head_dim, d), ("q_heads", "embed"))
+    return b.done()
+
+
+def mla_apply(p, x: jax.Array, *, cfg: ModelConfig, positions: jax.Array,
+              window, cache=None, decode_pos=None, sc=lambda x, ax: x):
+    """MLA attention.  cache = dict(c=(B, Smax, lora), kr=(B, Smax, rope))."""
+    m = cfg.mla
+    bsz, s, d = x.shape
+    cdt = x.dtype
+    h = cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    scale = qk ** -0.5
+
+    q = (x @ p["wq"].astype(cdt)).reshape(bsz, s, h, qk)
+    q = sc(q, ("batch", "attn_seq", "heads", None))
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckr = x @ p["w_dkv"].astype(cdt)                        # (B, S, lora+rope)
+    c, kr = ckr[..., :m.kv_lora_rank], ckr[..., m.kv_lora_rank:]
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        # Expanded formulation (train / prefill).
+        k_nope = (c @ p["w_uk"].astype(cdt)).reshape(bsz, s, h, m.qk_nope_dim)
+        value = (c @ p["w_uv"].astype(cdt)).reshape(bsz, s, h, m.v_head_dim)
+        k_nope = sc(k_nope, ("batch", None, "heads", None))
+        value = sc(value, ("batch", None, "heads", None))
+        kfull = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                      (bsz, s, h, m.qk_rope_dim))], axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(qfull, kfull, value, q_positions=positions,
+                                window=window, causal=True,
+                                softcap=cfg.attn_logit_softcap,
+                                chunk=cfg.attn_chunk, scale=scale)
+        out = out.reshape(bsz, s, h * m.v_head_dim) @ p["wo"].astype(cdt)
+        return out, (c, kr)
+
+    # Absorbed decode: score directly against the compressed cache.
+    cc = jax.lax.dynamic_update_slice(
+        cache["c"], c.astype(cache["c"].dtype), (0, decode_pos, 0))
+    ckr_c = jax.lax.dynamic_update_slice(
+        cache["kr"], kr.astype(cache["kr"].dtype), (0, decode_pos, 0))
+    kv_len = decode_pos + s
+    wk = p["w_uk"].astype(cdt).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_c = jnp.einsum("bshn,lhn->bshl", q_nope, wk)          # absorb W_uk
+    logits = (jnp.einsum("bshl,btl->bsht", q_c.astype(jnp.float32),
+                         cc.astype(jnp.float32)) +
+              jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                         ckr_c.astype(jnp.float32))) * scale
+    tpos = jnp.arange(cc.shape[1], dtype=jnp.int32)
+    qpos = positions.astype(jnp.int32)
+    ok = ((tpos[None, :] < kv_len) & (qpos[:, None] - tpos[None, :] >= 0) &
+          (qpos[:, None] - tpos[None, :] < jnp.asarray(window, jnp.int32)))
+    logits = jnp.where(ok[None, :, None, :], logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx_c = jnp.einsum("bsht,btl->bshl", probs,
+                       cc.astype(jnp.float32)).astype(cdt)  # (B,S,H,lora)
+    wv = p["w_uv"].astype(cdt).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bshl,lhv->bshv", ctx_c, wv)           # absorb W_uv
+    out = out.reshape(bsz, s, h * m.v_head_dim) @ p["wo"].astype(cdt)
+    return out, dict(c=cc, kr=ckr_c)

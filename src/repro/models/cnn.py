@@ -1,0 +1,247 @@
+"""The paper's evaluation workloads: AlexNet and VGG16 with MNF inference.
+
+Two execution paths over identical params:
+  * dense  — plain conv/linear + ReLU (the oracle),
+  * mnf    — event-driven: tap-event convs + block-event FC with the fire
+             phase between layers (numerically identical at threshold 0).
+
+``run_with_stats`` instruments every layer with the event counts the cost
+model needs: input events fired (non-zero activations), MACs a dense
+accelerator would do, and MACs the MNF multiply phase actually does
+(Σ_events touched_outputs × C_out — Algorithm 1's walk length).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.fire import FireConfig, fire
+from repro.core.mnf_conv import (conv_out_size, dense_conv2d,
+                                 tap_event_conv2d)
+from repro.core.mnf_linear import block_event_linear, dense_linear
+
+__all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
+           "init_cnn_params", "cnn_forward", "run_with_stats",
+           "layer_dense_macs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    out_ch: int
+    k: int
+    stride: int = 1
+    padding: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    k: int = 2
+    stride: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class FCSpec:
+    out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNSpec:
+    name: str
+    input_size: int
+    in_ch: int
+    layers: tuple
+    num_classes: int = 1000
+
+    def scaled(self, input_size: int) -> "CNNSpec":
+        """Same topology at a smaller input resolution (CPU tests)."""
+        return dataclasses.replace(self, input_size=input_size)
+
+
+ALEXNET = CNNSpec(
+    "alexnet", 224, 3,
+    (ConvSpec(96, 11, 4, 2), PoolSpec(3, 2),
+     ConvSpec(256, 5, 1, 2), PoolSpec(3, 2),
+     ConvSpec(384, 3, 1, 1), ConvSpec(384, 3, 1, 1), ConvSpec(256, 3, 1, 1),
+     PoolSpec(3, 2),
+     FCSpec(4096), FCSpec(4096), FCSpec(1000)))
+
+VGG16 = CNNSpec(
+    "vgg16", 224, 3,
+    (ConvSpec(64, 3, 1, 1), ConvSpec(64, 3, 1, 1), PoolSpec(),
+     ConvSpec(128, 3, 1, 1), ConvSpec(128, 3, 1, 1), PoolSpec(),
+     ConvSpec(256, 3, 1, 1), ConvSpec(256, 3, 1, 1), ConvSpec(256, 3, 1, 1),
+     PoolSpec(),
+     ConvSpec(512, 3, 1, 1), ConvSpec(512, 3, 1, 1), ConvSpec(512, 3, 1, 1),
+     PoolSpec(),
+     ConvSpec(512, 3, 1, 1), ConvSpec(512, 3, 1, 1), ConvSpec(512, 3, 1, 1),
+     PoolSpec(),
+     FCSpec(4096), FCSpec(4096), FCSpec(1000)))
+
+
+def _trace_shapes(spec: CNNSpec):
+    """(H, W, C) entering each layer, plus flattened FC input size."""
+    h = w = spec.input_size
+    c = spec.in_ch
+    shapes = []
+    for layer in spec.layers:
+        shapes.append((h, w, c))
+        if isinstance(layer, ConvSpec):
+            h = conv_out_size(h, layer.k, layer.stride, layer.padding)
+            w = conv_out_size(w, layer.k, layer.stride, layer.padding)
+            c = layer.out_ch
+        elif isinstance(layer, PoolSpec):
+            h = (h - layer.k) // layer.stride + 1
+            w = (w - layer.k) // layer.stride + 1
+        elif isinstance(layer, FCSpec):
+            h, w, c = 1, 1, layer.out
+    return shapes
+
+
+def init_cnn_params(key: jax.Array, spec: CNNSpec,
+                    weight_sparsity: float = 0.0):
+    """He-initialized params; optional unstructured weight pruning (the
+    paper prunes to ~50-60% weight density before deployment)."""
+    shapes = _trace_shapes(spec)
+    params = []
+    for i, layer in enumerate(spec.layers):
+        k = jax.random.fold_in(key, i)
+        h, w, c = shapes[i]
+        if isinstance(layer, ConvSpec):
+            fan_in = layer.k * layer.k * c
+            wgt = jax.random.normal(
+                k, (layer.k, layer.k, c, layer.out_ch), jnp.float32)
+            wgt = wgt * (2.0 / fan_in) ** 0.5
+        elif isinstance(layer, FCSpec):
+            fan_in = h * w * c
+            wgt = jax.random.normal(k, (fan_in, layer.out), jnp.float32)
+            wgt = wgt * (2.0 / fan_in) ** 0.5
+        else:
+            params.append(None)
+            continue
+        if weight_sparsity > 0.0:
+            keep = jax.random.uniform(jax.random.fold_in(k, 1), wgt.shape)
+            wgt = jnp.where(keep >= weight_sparsity, wgt, 0.0)
+        params.append(wgt)
+    return params
+
+
+def _touched_outputs(h: int, w: int, k: int, stride: int, padding: int):
+    """(H, W) map: #output positions each input pixel contributes to."""
+    oy = conv_out_size(h, k, stride, padding)
+    ox = conv_out_size(w, k, stride, padding)
+    iy = jnp.arange(h)[:, None]
+    ix = jnp.arange(w)[None, :]
+
+    def jumps(i, osz):
+        lo = jnp.maximum(0, -(-(i + padding - k + 1) // stride))
+        hi = jnp.minimum(osz - 1, (i + padding) // stride)
+        return jnp.maximum(hi - lo + 1, 0)
+
+    return jumps(iy, oy) * jumps(ix, ox)
+
+
+def layer_dense_macs(spec: CNNSpec):
+    """Per-compute-layer dense MAC counts (what a dense accelerator does)."""
+    shapes = _trace_shapes(spec)
+    out = []
+    for i, layer in enumerate(spec.layers):
+        h, w, c = shapes[i]
+        if isinstance(layer, ConvSpec):
+            oy = conv_out_size(h, layer.k, layer.stride, layer.padding)
+            ox = conv_out_size(w, layer.k, layer.stride, layer.padding)
+            out.append(oy * ox * layer.k * layer.k * c * layer.out_ch)
+        elif isinstance(layer, FCSpec):
+            out.append(h * w * c * layer.out)
+    return out
+
+
+def cnn_forward(params, x: jax.Array, spec: CNNSpec, *, mnf: bool = True,
+                fire_cfg: FireConfig = FireConfig()):
+    """x: (B, H, W, C) -> logits (B, classes).  mnf=False is the oracle."""
+    for layer, wgt in zip(spec.layers, params):
+        if isinstance(layer, ConvSpec):
+            if mnf:
+                acc = tap_event_conv2d(x, wgt, stride=layer.stride,
+                                       padding=layer.padding,
+                                       blk_m=8, blk_k=min(8, x.shape[-1]))
+            else:
+                acc = dense_conv2d(x, wgt, stride=layer.stride,
+                                   padding=layer.padding)
+            x = fire(acc, fire_cfg)                  # fire phase == ReLU @ 0
+        elif isinstance(layer, PoolSpec):
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, layer.k, layer.k, 1), (1, layer.stride, layer.stride, 1),
+                "VALID")
+        elif isinstance(layer, FCSpec):
+            flat = x.reshape(x.shape[0], -1)
+            if mnf:
+                acc = block_event_linear(flat, wgt, blk_m=min(8, flat.shape[0]),
+                                         blk_k=min(128, flat.shape[1]))
+            else:
+                acc = dense_linear(flat, wgt)
+            last = layer is spec.layers[-1]
+            x = acc if last else fire(acc, fire_cfg)
+    return x
+
+
+def run_with_stats(params, x: jax.Array, spec: CNNSpec,
+                   fire_cfg: FireConfig = FireConfig()):
+    """MNF forward + per-layer event accounting.
+
+    Returns (logits, stats list).  Each compute layer's stats:
+      dense_macs  — MACs of the dense dataflow
+      event_macs  — MACs the MNF multiply phase performs (Algorithm 1 walk)
+      in_events   — input events fired into the layer
+      in_elems    — dense input element count
+      out_density — fraction of outputs that fire
+    """
+    stats = []
+    for layer, wgt in zip(spec.layers, params):
+        if isinstance(layer, ConvSpec):
+            b, h, w, c = x.shape
+            nz = (jnp.abs(x) > 0).astype(jnp.float32)            # (B,H,W,C)
+            touched = _touched_outputs(h, w, layer.k, layer.stride,
+                                       layer.padding).astype(jnp.float32)
+            event_macs = jnp.sum(nz * touched[None, :, :, None]) \
+                * layer.out_ch
+            in_events = jnp.sum(nz)
+            acc = tap_event_conv2d(x, wgt, stride=layer.stride,
+                                   padding=layer.padding,
+                                   blk_m=8, blk_k=min(8, c))
+            oy = conv_out_size(h, layer.k, layer.stride, layer.padding)
+            ox = conv_out_size(w, layer.k, layer.stride, layer.padding)
+            dense_macs = b * oy * ox * layer.k * layer.k * c * layer.out_ch
+            x = fire(acc, fire_cfg)
+            ev_f = float(in_events)
+            stats.append(dict(
+                kind="conv", dense_macs=float(dense_macs),
+                event_macs=float(event_macs), in_events=ev_f,
+                in_elems=float(b * h * w * c), c_out=layer.out_ch,
+                avg_touched=float(event_macs) / max(ev_f * layer.out_ch, 1.0),
+                out_density=float(jnp.mean(jnp.abs(x) > 0))))
+        elif isinstance(layer, PoolSpec):
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, layer.k, layer.k, 1), (1, layer.stride, layer.stride, 1),
+                "VALID")
+        elif isinstance(layer, FCSpec):
+            flat = x.reshape(x.shape[0], -1)
+            nz = (jnp.abs(flat) > 0).astype(jnp.float32)
+            in_events = jnp.sum(nz)
+            event_macs = in_events * layer.out                   # Algorithm 2
+            dense_macs = flat.shape[0] * flat.shape[1] * layer.out
+            acc = block_event_linear(flat, wgt, blk_m=min(8, flat.shape[0]),
+                                     blk_k=min(128, flat.shape[1]))
+            last = layer is spec.layers[-1]
+            x = acc if last else fire(acc, fire_cfg)
+            stats.append(dict(
+                kind="fc", dense_macs=float(dense_macs),
+                event_macs=float(event_macs), in_events=float(in_events),
+                in_elems=float(flat.size), c_out=layer.out, avg_touched=1.0,
+                out_density=float(jnp.mean(jnp.abs(x) > 0))))
+    return x, stats

@@ -1,0 +1,60 @@
+"""Hymba block: parallel attention + Mamba(SSM) heads (arXiv:2411.13676).
+
+Both paths read the same pre-normed input; outputs are RMS-normalized and
+averaged (the paper's fused-head mean combination).  Sliding-window
+attention everywhere except the listed global layers; the SSM path is
+window-free (its state carries unbounded context) — which is what makes the
+arch sub-quadratic for the long_500k cell.  Meta-tokens are not modeled
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, ssm
+from repro.models.layers import rms_norm
+from repro.models.param_utils import Init
+
+__all__ = ["hymba_block_init", "hymba_block_apply", "hymba_block_decode"]
+
+
+def hymba_block_init(key: jax.Array, cfg: ModelConfig):
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    ap, asx = attention.attn_init(jax.random.fold_in(key, 1), cfg)
+    mp, msx = ssm.mamba_init(jax.random.fold_in(key, 2), cfg,
+                             d_inner=cfg.d_model)
+    b.params["attn"], b.specs["attn"] = ap, asx
+    b.params["mamba"], b.specs["mamba"] = mp, msx
+    b.ones("norm_attn", (cfg.d_model,), ("embed",))
+    b.ones("norm_mamba", (cfg.d_model,), ("embed",))
+    return b.done()
+
+
+def hymba_block_apply(p, x: jax.Array, *, cfg: ModelConfig,
+                      positions: jax.Array, window, cache=None,
+                      decode_pos=None, sc=lambda x, ax: x):
+    """x: (B, S, d) pre-normed.  cache: dict(attn=..., conv=..., ssm=...)."""
+    attn_cache = cache.get("attn") if cache else None
+    a_out, a_cache = attention.attn_apply(
+        p["attn"], x, cfg=cfg, positions=positions, window=window,
+        cache=attn_cache, decode_pos=decode_pos, sc=sc)
+    # Single-token step (decode) vs. sequence scan (train/prefill) is a
+    # *static* dispatch on the sequence length.
+    if cache is not None and x.shape[1] == 1:
+        m_out, m_state = ssm.mamba_step(p["mamba"], x, cfg,
+                                        (cache["conv"], cache["ssm"]))
+    else:
+        m_out, m_state = ssm.mamba_apply(p["mamba"], x, cfg, sc=sc)
+    y = 0.5 * (rms_norm(a_out, p["norm_attn"] - 1.0, cfg.norm_eps) +
+               rms_norm(m_out, p["norm_mamba"] - 1.0, cfg.norm_eps))
+    new_cache = dict(attn=a_cache, conv=m_state[0], ssm=m_state[1])
+    return y, new_cache
+
+
+def hymba_block_decode(p, x, *, cfg, positions, window, cache, decode_pos,
+                       sc=lambda x, ax: x):
+    return hymba_block_apply(p, x, cfg=cfg, positions=positions,
+                             window=window, cache=cache,
+                             decode_pos=decode_pos, sc=sc)

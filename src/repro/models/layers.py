@@ -1,0 +1,163 @@
+"""Shared layer primitives: norms, RoPE, embeddings, MLP (with MNF fire).
+
+All apply-functions are pure; params are dicts built by ``Init`` with
+logical-axis specs (see param_utils).  Compute runs in cfg.compute_dtype
+(bf16 by default) with f32 norm/softmax internals.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.fire import FireConfig, fire
+from repro.kernels.event_matmul.ref import mask_dead_blocks
+from repro.models.param_utils import Init
+
+__all__ = ["rms_norm", "layer_norm", "apply_rope", "activation_fn",
+           "mlp_init", "mlp_apply", "embed_init", "embed_apply",
+           "mnf_sparsify"]
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+            ).astype(dt)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(theta) *
+                    (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..S,half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name in ("silu_glu", "silu"):
+        return jax.nn.silu
+    if name in ("gelu_glu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def is_glu(name: str) -> bool:
+    return name.endswith("_glu")
+
+
+# ---------------------------------------------------------------------------
+# MNF integration point
+# ---------------------------------------------------------------------------
+
+def mnf_sparsify(h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Fire phase on hidden activations + block-event masking for the down
+    projection — the MNF multiply phase's *semantics* on the pure-XLA path.
+
+    With threshold 0 and a ReLU-family activation this is the identity (the
+    activation already fired), so dense == MNF exactly.  On TPU the
+    event_matmul kernel consumes the same block structure and skips dead
+    weight tiles; here the masked tensor keeps HLO FLOPs truthful (dense
+    upper bound) for the dry-run.
+    """
+    m = cfg.mnf
+    if not m.enabled:
+        return h
+    fired = fire(h, FireConfig(threshold=m.threshold, magnitude=m.magnitude))
+    if m.threshold > 0.0:
+        shp = h.shape
+        h2 = fired.reshape(-1, shp[-1])
+        # zero whole dead tiles (event granularity); pure-jnp twin of kernel
+        pad_m = (-h2.shape[0]) % m.blk_m
+        pad_k = (-h2.shape[1]) % m.blk_k
+        h2 = jnp.pad(h2, ((0, pad_m), (0, pad_k)))
+        h2 = mask_dead_blocks(h2, blk_m=m.blk_m, blk_k=m.blk_k, threshold=0.0)
+        fired = h2[:h2.shape[0] - pad_m or None, :shp[-1]].reshape(shp)
+    return fired
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None,
+             d_model: int | None = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    if is_glu(cfg.act):
+        b.dense("w_gate", (d, f), ("embed", "ff"))
+    b.dense("w_up", (d, f), ("embed", "ff"))
+    b.dense("w_down", (f, d), ("ff", "embed"))
+    return b.done()
+
+
+def mlp_apply(p, x: jax.Array, cfg: ModelConfig,
+              sc=lambda x, ax: x) -> jax.Array:
+    """x: (..., d_model) -> (..., d_model); fire phase between up and down."""
+    act = activation_fn(cfg.act)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    up = xc @ p["w_up"].astype(cdt)
+    if is_glu(cfg.act):
+        h = act(xc @ p["w_gate"].astype(cdt)) * up
+    else:
+        h = act(up)
+    h = sc(h, ("batch",) + (None,) * (h.ndim - 2) + ("ff",))
+    h = mnf_sparsify(h, cfg)          # MNF fire phase (exact for ReLU-family)
+    return (h @ p["w_down"].astype(cdt)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key: jax.Array, cfg: ModelConfig):
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    # 1/sqrt(d) rows: keeps tied-unembedding logits at unit scale (the
+    # embed_apply path re-scales inputs by sqrt(d) for tied configs).
+    b.dense("tok", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+            scale=cfg.d_model ** -0.5)
+    if not cfg.tie_embeddings:
+        b.dense("unembed", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return b.done()
+
+
+def embed_apply(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    emb = jnp.take(p["tok"], tokens, axis=0).astype(cdt)
+    if cfg.tie_embeddings:
+        emb = emb * jnp.asarray(cfg.d_model, jnp.float32).astype(cdt) ** 0.5
+    return emb
+
+
+def unembed_matrix(p, cfg: ModelConfig) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        return p["tok"].T.astype(cdt)
+    return p["unembed"].astype(cdt)

@@ -1,0 +1,264 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+This layer is the clearest LM-scale image of the paper's technique: routing
+IS multiply-and-fire.  The router thresholds (top-k) decide which experts a
+token *fires* to; the dispatch carries (value, direct expert address) events
+— exactly the NoC multicast of §5 — and non-selected experts do no work for
+that token.  The load-balance auxiliary loss plays the role of the paper's
+mapping balance across PEs.
+
+Dispatch algorithm (jit-static shapes, GSPMD-shardable):
+  1. top-k of softmax(router logits) -> (expert id, gate) per assignment.
+  2. stable sort assignments by expert id; rank-within-expert via
+     searchsorted; assignments whose rank exceeds capacity C are *dropped*
+     (classic capacity-factor semantics — counted in aux stats).
+  3. gather tokens into a dense (E, C, d) buffer (one direct-addressed slot
+     per event), run every expert's FFN as one batched einsum, and
+     scatter-add results back weighted by the gates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.param_utils import Init
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(num_tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8
+
+
+# ---------------------------------------------------------------------------
+# Explicit expert parallelism (shard_map + lax.all_to_all) — §Perf D3
+# ---------------------------------------------------------------------------
+
+def moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, sc=lambda x, ax: x):
+    """Explicit expert parallelism under shard_map.
+
+    GSPMD cannot be coaxed into an efficient schedule for gather/scatter
+    dispatch — it stages masked all-reduces over full assignment tensors
+    (§Perf D2 left ~330 GB/device of AR).  This path takes manual control:
+    shard_map over (dp × ep=model).  Activations are replicated within the
+    ep group (the SP-boundary all-gather already pays for this), so each
+    shard routes every local-dp token, keeps only the events addressed to
+    *its own* expert slice, runs those experts, and a single token-sized
+    ``psum`` over ep sums the k expert contributions.
+
+    Wire-cost napkin (per token of width d): replicate+reduce = AG(d) +
+    AR(2d) = 3d, vs a dispatch/return all-to-all = 2·k·d = 12d at top-6 —
+    replication wins whenever k > 1.5, which covers both DeepSeek configs.
+
+    Falls back to the GSPMD path when no ("model") mesh is ambient (CPU
+    tests) — numerics match exactly when capacity is not binding.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        # legacy `with mesh:` context (pre-use_mesh callers)
+        from jax._src.mesh import thread_resources
+        phys = thread_resources.env.physical_mesh
+        mesh = None if phys.empty else phys
+    if mesh is None or getattr(mesh, "empty", True) or \
+            "model" not in mesh.axis_names:
+        return moe_apply(p, x, cfg, sc=sc)
+    m = cfg.moe
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ep = "model"
+    ep_size = mesh.shape[ep]
+    e = m.num_experts
+    if e % ep_size:
+        return moe_apply(p, x, cfg, sc=sc)
+    e_loc = e // ep_size
+    bsz, s, d = x.shape
+    k = m.top_k
+    cdt = x.dtype
+    P = jax.sharding.PartitionSpec
+
+    def local_fn(xl, router, w_gate, w_up, w_down):
+        # xl: (B_loc, S, d) — tokens local to the dp shard, replicated on ep.
+        my = jax.lax.axis_index(ep)
+        bl = xl.shape[0]
+        tl = bl * s
+        xf = xl.reshape(tl, d)
+        logits = xf.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, topi = jax.lax.top_k(probs, k)
+        if m.router_renormalize:
+            gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = topi.reshape(-1).astype(jnp.int32)
+        flat_t = jnp.arange(tl * k, dtype=jnp.int32) // k
+        flat_g = gates.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        rank = jnp.arange(tl * k, dtype=jnp.int32) - jnp.searchsorted(
+            se, se, side="left").astype(jnp.int32)
+        cap = moe_capacity(tl, cfg)
+        # fire only the events addressed to MY expert slice
+        mine = (se >= my * e_loc) & (se < (my + 1) * e_loc)
+        keep = (rank < cap) & mine
+        slot = jnp.where(keep, (se - my * e_loc) * cap + rank, e_loc * cap)
+
+        inv = jnp.full((e_loc * cap + 1,), -1, jnp.int32).at[slot].set(st)
+        inv = inv[:e_loc * cap]
+        de = jnp.where((inv >= 0)[:, None],
+                       jnp.take(xf, jnp.maximum(inv, 0), axis=0), 0)
+        de = de.reshape(e_loc, cap, d)
+
+        act = layers.activation_fn(cfg.act)
+        up = jnp.einsum("ecd,edf->ecf", de, w_up.astype(cdt))
+        if layers.is_glu(cfg.act):
+            h = act(jnp.einsum("ecd,edf->ecf", de,
+                               w_gate.astype(cdt))) * up
+        else:
+            h = act(up)
+        h = layers.mnf_sparsify(h, cfg)
+        y_ec = jnp.einsum("ecf,efd->ecd", h, w_down.astype(cdt))
+
+        y_pad = jnp.pad(y_ec.reshape(e_loc * cap, d), ((0, 1), (0, 0)))
+        contrib = jnp.where(keep[:, None], jnp.take(y_pad, slot, axis=0), 0)
+        contrib = contrib * sg[:, None].astype(cdt)
+        y = jnp.zeros((tl, d), cdt).at[st].add(contrib)
+        # each ep shard holds contributions of ITS experts only → psum
+        y = jax.lax.psum(y, ep)
+
+        ce_keep = (rank < cap)
+        me = jax.lax.pmean(probs.mean(axis=0), dp)
+        ce = jax.lax.pmean(
+            jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (tl * k), dp)
+        aux_lb = e * jnp.sum(me * ce)
+        aux_drop = 1.0 - jax.lax.pmean(ce_keep.mean(), dp)
+        return y.reshape(bl, s, d), aux_lb, aux_drop
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(dp, None, None), P(), P()),
+        check_vma=False)
+    w_gate = p.get("w_gate", p["w_up"])          # non-GLU: unused dummy
+    y, aux_lb, aux_drop = fn(x, p["router"], w_gate, p["w_up"], p["w_down"])
+    y = sc(y, ("batch", "seq", None))
+    if m.num_shared:
+        y = y + layers.mlp_apply(p["shared"], x, cfg, sc=sc)
+    aux = dict(load_balance_loss=aux_lb, drop_fraction=aux_drop)
+    return y, aux
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig):
+    m = cfg.moe
+    d, f = cfg.d_model, m.expert_ff
+    e = m.num_experts
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    b.dense("router", (d, e), ("embed", "experts"))
+    if layers.is_glu(cfg.act):
+        b.dense("w_gate", (e, d, f), ("experts", "embed", "ff_expert"))
+    b.dense("w_up", (e, d, f), ("experts", "embed", "ff_expert"))
+    b.dense("w_down", (e, f, d), ("experts", "ff_expert", "embed"))
+    if m.num_shared:
+        sp, ss = layers.mlp_init(jax.random.fold_in(key, 7), cfg,
+                                 d_ff=m.num_shared * f)
+        b.params["shared"], b.specs["shared"] = sp, ss
+    return b.done()
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig, sc=lambda x, ax: x):
+    """x: (B, S, d) -> (y (B, S, d), aux dict with load-balance loss).
+
+    Group-local dispatch: tokens are processed in G independent groups
+    (G = cfg.moe_dispatch_groups, aligned with the data-parallel shards), so
+    the sort / rank / scatter machinery is *local to a shard* — the only
+    cross-device traffic is the (G, E, C, d) dispatch tensor itself, i.e.
+    the expert all-to-all that carries fired events to their expert
+    addresses.  A naive global sort forces GSPMD to all-gather the full
+    token stream (measured: 205 s collective term on deepseek-moe/train_4k,
+    see EXPERIMENTS.md §Perf iteration D1).
+    """
+    m = cfg.moe
+    bsz, s, d = x.shape
+    t = bsz * s
+    k = m.top_k
+    e = m.num_experts
+    cdt = x.dtype
+    g = max(1, min(cfg.moe_dispatch_groups, t))
+    while t % g:
+        g //= 2
+    tg = t // g                                              # tokens / group
+    xf = x.reshape(g, tg, d)
+    xf = sc(xf, ("batch", None, None))
+
+    # --- router: fire decisions ---
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, Tg, E)
+    gates, topi = jax.lax.top_k(probs, k)                    # (G, Tg, k)
+    if m.router_renormalize:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- group-local event list: sorted by expert address within group ---
+    flat_e = topi.reshape(g, tg * k).astype(jnp.int32)
+    flat_t = jnp.broadcast_to(
+        (jnp.arange(tg * k, dtype=jnp.int32) // k)[None], (g, tg * k))
+    flat_g = gates.reshape(g, tg * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    rank = (jnp.arange(tg * k, dtype=jnp.int32)[None] -
+            jax.vmap(lambda row: jnp.searchsorted(
+                row, row, side="left").astype(jnp.int32))(se))
+    cap = moe_capacity(tg, cfg)
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)         # overflow slot
+
+    # --- dispatch: direct-addressed event buffers (G, E*C [+1], d).
+    # Two-step: scatter only the int32 *event addresses* into slot->token
+    # (tiny payload), then row-GATHER tokens into the expert buffer.  A
+    # direct row-scatter makes GSPMD stage full-width f32/u32 all-reduces
+    # (measured 489 GB/device on deepseek-moe/train_4k — §Perf D2).
+    inv = jnp.full((g, e * cap + 1), -1, jnp.int32)
+    inv = jax.vmap(lambda ii, sl, tt: ii.at[sl].set(tt))(inv, slot, st)
+    inv = inv[:, :e * cap]
+    de = jax.vmap(lambda xx, ii: jnp.where(
+        (ii >= 0)[:, None], jnp.take(xx, jnp.maximum(ii, 0), axis=0), 0))(
+        xf, inv)
+    de = de.reshape(g, e, cap, d)
+    de = sc(de, ("batch", "experts", None, None))  # EP all-to-all happens here
+
+    # --- expert FFNs, one batched einsum over live slots ---
+    act = layers.activation_fn(cfg.act)
+    up = jnp.einsum("gecd,edf->gecf", de, p["w_up"].astype(cdt))
+    if layers.is_glu(cfg.act):
+        h = act(jnp.einsum("gecd,edf->gecf", de,
+                           p["w_gate"].astype(cdt))) * up
+    else:
+        h = act(up)
+    h = sc(h, ("batch", "experts", None, None))
+    h = layers.mnf_sparsify(h, cfg)
+    y_ec = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cdt))
+    y_ec = sc(y_ec, ("batch", "experts", None, None))
+
+    # --- combine: gather gated expert outputs back to tokens (local) ---
+    y_flat = y_ec.reshape(g, e * cap, d)
+    y_pad = jnp.pad(y_flat, ((0, 0), (0, 1), (0, 0)))
+    contrib = jax.vmap(lambda yy, sl: jnp.take(yy, sl, axis=0))(y_pad, slot)
+    contrib = jnp.where(keep[..., None], contrib, 0) * \
+        sg[..., None].astype(cdt)
+    y = jax.vmap(lambda tt, cc: jnp.zeros((tg, d), cdt).at[tt].add(cc))(
+        st, contrib)
+
+    if m.num_shared:
+        y = y + layers.mlp_apply(p["shared"], xf, cfg, sc=sc)
+
+    # --- aux: switch-style load-balance loss + drop stats ---
+    me = probs.reshape(t, e).mean(axis=0)                    # mean gate / e
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(
+        1.0) / (t * k)
+    aux = dict(load_balance_loss=e * jnp.sum(me * ce),
+               drop_fraction=1.0 - keep.mean())
+    return y.reshape(bsz, s, d), aux

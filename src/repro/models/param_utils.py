@@ -1,0 +1,84 @@
+"""Parameter creation with paired logical-axis specs.
+
+Params are plain nested dicts of jnp arrays.  Every leaf has a *spec*: a
+tuple of logical axis names (one per dim) living in a structurally identical
+dict.  ``repro.parallel.sharding`` resolves specs -> NamedSharding via the
+per-arch rule table; scan-stacked layers prepend the "layers" axis.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Init", "stack_layer_params", "tree_paths"]
+
+
+class Init:
+    """Collects (params, specs) while initializing one module tree."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+        self.params: dict[str, Any] = {}
+        self.specs: dict[str, Any] = {}
+
+    def _leaf_key(self, name: str) -> jax.Array:
+        return jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+
+    def dense(self, name: str, shape: tuple[int, ...], axes: tuple[str, ...],
+              *, scale: float | None = None) -> None:
+        """LeCun-normal initialized weight (fan-in = shape[-2] by default)."""
+        assert len(shape) == len(axes), (name, shape, axes)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = (1.0 / fan_in) ** 0.5 if scale is None else scale
+        self.params[name] = (
+            jax.random.normal(self._leaf_key(name), shape, self.dtype) * s)
+        self.specs[name] = axes
+
+    def zeros(self, name: str, shape: tuple[int, ...],
+              axes: tuple[str, ...]) -> None:
+        self.params[name] = jnp.zeros(shape, self.dtype)
+        self.specs[name] = axes
+
+    def ones(self, name: str, shape: tuple[int, ...],
+             axes: tuple[str, ...]) -> None:
+        self.params[name] = jnp.ones(shape, self.dtype)
+        self.specs[name] = axes
+
+    def const(self, name: str, value: jax.Array,
+              axes: tuple[str, ...]) -> None:
+        self.params[name] = value.astype(self.dtype)
+        self.specs[name] = axes
+
+    def sub(self, name: str, child: "Init") -> None:
+        self.params[name] = child.params
+        self.specs[name] = child.specs
+
+    def done(self):
+        return self.params, self.specs
+
+
+def stack_layer_params(init_layer_fn, keys: jax.Array):
+    """vmap a per-layer init over a (L,)-keys array -> stacked params.
+
+    Returns (stacked params with leading L dim, specs with "layers"
+    prepended).
+    """
+    params = jax.vmap(lambda k: init_layer_fn(k)[0])(keys)
+    # Specs are python data; a second (DCE'd under jit) call extracts them.
+    specs = init_layer_fn(keys[0])[1]
+    specs = jax.tree.map(lambda ax: ("layers",) + tuple(ax), specs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+def tree_paths(tree) -> list[str]:
+    """Flat list of '/'-joined key paths (debug/checkpoint naming)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, _leaf in flat:
+        out.append("/".join(str(getattr(p, "key", p)) for p in path))
+    return out

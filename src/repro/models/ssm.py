@@ -1,0 +1,347 @@
+"""State-space / linear-recurrence blocks: RWKV6 (Finch) and Mamba1.
+
+RWKV6 here is the pure-XLA model path: a chunked matmul formulation
+(lax.scan over chunks, intra-chunk work on the MXU) that matches the exact
+recurrence (and the Pallas kernel in repro.kernels.wkv6) whenever the
+per-step log-decay respects the stability clamp ``WKV_LOG_DECAY_MIN``; the
+clamp is a documented deviation (DESIGN.md §7) needed because the chunked
+factorization exponentiates inverse decays.  The Pallas kernel has no clamp.
+
+Mamba1 (hymba's parallel-SSM heads) uses an associative scan over time for
+train/prefill and an O(1)-state update for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.param_utils import Init
+
+__all__ = ["WKV_LOG_DECAY_MIN", "wkv6_chunked", "wkv6_step",
+           "rwkv6_block_init", "rwkv6_block_apply", "rwkv6_block_decode",
+           "mamba_init", "mamba_apply", "mamba_step"]
+
+# Per-step log-decay clamp for the chunked-parallel path: with chunk C the
+# largest inverse-decay exponent is C*|min|; C=32 * 2.5 = 80 < log(f32 max).
+WKV_LOG_DECAY_MIN = -2.5
+
+
+# ---------------------------------------------------------------------------
+# WKV6 recurrence — chunked matmul formulation (XLA path)
+# ---------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, w, u, s0=None, *, chunk: int = 32):
+    """r,k,v,w: (B, H, T, D); u: (H, D); s0: (B, H, D, D) or None.
+
+    Exact (vs. the sequential recurrence) for w >= exp(WKV_LOG_DECAY_MIN);
+    smaller decays are clamped.  Returns (o (B,H,T,D) f32, s_final).
+    """
+    b, h, t, d = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)
+    tp = t + pad
+    nc = tp // chunk
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(b, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    kc = k.astype(f32).reshape(b, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.astype(f32).reshape(b, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    lw = jnp.log(jnp.clip(w.astype(f32), jnp.exp(WKV_LOG_DECAY_MIN), 1.0))
+    lwc = lw.reshape(b, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    uf = u.astype(f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)      # strict lower
+
+    def body(s, xs):
+        rci, kci, vci, lwi = xs                              # (B,H,C,D)
+        lp = jnp.cumsum(lwi, axis=2) - lwi                   # exclusive
+        lpc = lp[:, :, -1:, :] + lwi[:, :, -1:, :]           # total decay
+        rq = rci * jnp.exp(lp)
+        kk = kci * jnp.exp(-(lp + lwi))                      # bounded by clamp
+        a = jnp.einsum("bhtd,bhsd->bhts", rq, kk) * tri
+        diag = jnp.einsum("bhtd,hd,bhtd->bht", rci, uf, kci)
+        o = (jnp.einsum("bhts,bhsd->bhtd", a, vci) +
+             diag[..., None] * vci +
+             jnp.einsum("bhtd,bhde->bhte", rq, s))
+        ks = kci * jnp.exp(lpc - (lp + lwi))                 # <= 1, safe
+        s = (jnp.exp(lpc[:, :, 0, :])[..., None] * s +
+             jnp.einsum("bhtd,bhte->bhde", ks, vci))
+        return s, o
+
+    s_fin, o = jax.lax.scan(body, s0.astype(f32), (rc, kc, vc, lwc))
+    o = o.transpose(1, 2, 0, 3, 4).reshape(b, h, tp, d)[:, :, :t]
+    return o, s_fin
+
+
+def wkv6_step(r, k, v, w, u, s):
+    """Single decode step.  r,k,v,w: (B, H, D); u: (H, D); s: (B, H, D, D)."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    att = jnp.einsum("bhd,hd,bhd->bh", r, u.astype(f32), k)
+    o = att[..., None] * v + jnp.einsum("bhd,bhde->bhe", r, s)
+    s = w[..., None] * s + k[..., None] * v[..., None, :]
+    return o, s
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+def rwkv6_block_init(key: jax.Array, cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    assert h * hd == d, "rwkv6: heads * head_dim must equal d_model"
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    b.ones("ln1", (d,), ("embed",))
+    b.ones("ln2", (d,), ("embed",))
+    # time-mix lerp coefficients (per-channel, one per r/k/v/w/g)
+    for nm in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"):
+        b.const(nm, jnp.full((d,), 0.5), ("embed",))
+    b.dense("wr", (d, d), ("embed", "q_heads"))
+    b.dense("wk", (d, d), ("embed", "q_heads"))
+    b.dense("wv", (d, d), ("embed", "q_heads"))
+    b.dense("wg", (d, d), ("embed", "q_heads"))
+    b.dense("wo", (d, d), ("q_heads", "embed"))
+    # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+    lora = max(32, d // 64)
+    b.const("w0", jnp.full((d,), -0.6), ("embed",))          # soft init decay
+    b.dense("w_a", (d, lora), ("embed", "lora"))
+    b.dense("w_b", (lora, d), ("lora", "embed"))
+    b.const("u", jnp.zeros((h, hd)), ("q_heads", None))      # bonus
+    b.ones("gn", (d,), ("embed",))                           # group norm gain
+    # channel mix
+    b.const("mu_ck", jnp.full((d,), 0.5), ("embed",))
+    b.const("mu_cr", jnp.full((d,), 0.5), ("embed",))
+    b.dense("ck", (d, cfg.d_ff), ("embed", "ff"))
+    b.dense("cv", (cfg.d_ff, d), ("ff", "embed"))
+    b.dense("cr", (d, d), ("embed", "q_heads"))
+    return b.done()
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Shifted-by-one sequence; position 0 sees ``prev`` (decode carry)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _time_mix_inputs(p, xn, xs):
+    mix = lambda mu: xn + (xs - xn) * mu.astype(xn.dtype)
+    return (mix(p["mu_r"]), mix(p["mu_k"]), mix(p["mu_v"]),
+            mix(p["mu_w"]), mix(p["mu_g"]))
+
+
+def _rwkv_time_mix(p, xn, xs, cfg, state, step: bool, sc=lambda x, ax: x):
+    """xn, xs: (B, T, d) (T == 1 for decode steps)."""
+    b, t, _ = xn.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    cdt = xn.dtype
+    xr, xk, xv, xw, xg = _time_mix_inputs(p, xn, xs)
+    r = xr @ p["wr"].astype(cdt)
+    k = xk @ p["wk"].astype(cdt)
+    v = xv @ p["wv"].astype(cdt)
+    g = jax.nn.silu(xg @ p["wg"].astype(cdt))
+    lw_arg = (p["w0"].astype(jnp.float32) +
+              jnp.tanh(xw.astype(jnp.float32) @ p["w_a"].astype(jnp.float32))
+              @ p["w_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(lw_arg))                            # (…, d) in (0,1)
+
+    if step:
+        sh = lambda z: z.reshape(b, h, hd)
+        o, s_new = wkv6_step(sh(r), sh(k), sh(v), sh(w.astype(jnp.float32)),
+                             p["u"], state)
+        o = o.reshape(b, 1, h * hd)
+    else:
+        sh = lambda z: sc(z.reshape(b, t, h, hd).transpose(0, 2, 1, 3),
+                          ("batch", "heads", None, None))
+        o, s_new = wkv6_chunked(sh(r), sh(k), sh(v),
+                                sh(w.astype(jnp.float32)), p["u"],
+                                state, chunk=cfg.wkv_chunk)
+        o = sc(o, ("batch", "heads", None, None))
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+    # per-head group norm + gate
+    oshape = o.shape
+    og = o.reshape(*oshape[:-1], h, hd).astype(jnp.float32)
+    mu = og.mean(-1, keepdims=True)
+    var = og.var(-1, keepdims=True)
+    og = (og - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = (og.reshape(oshape) * p["gn"].astype(jnp.float32)).astype(cdt)
+    out = (o * g) @ p["wo"].astype(cdt)
+    return out, s_new
+
+
+def _rwkv_channel_mix(p, xn, xs, cfg, sc=lambda x, ax: x):
+    cdt = xn.dtype
+    xk = xn + (xs - xn) * p["mu_ck"].astype(cdt)
+    xr = xn + (xs - xn) * p["mu_cr"].astype(cdt)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"].astype(cdt)))    # relu^2: sparse
+    k = sc(k, ("batch",) + (None,) * (k.ndim - 2) + ("ff",))
+    k = layers.mnf_sparsify(k, cfg)                          # MNF exact here
+    return jax.nn.sigmoid(xr @ p["cr"].astype(cdt)) * (
+        k @ p["cv"].astype(cdt))
+
+
+def rwkv6_block_apply(p, x: jax.Array, cfg: ModelConfig, wkv_state=None,
+                      sc=lambda x, ax: x):
+    """Train/prefill.  x: (B, T, d).  Returns (y, decode-ready state dict)."""
+    xn = layers.rms_norm(x, p["ln1"] - 1.0, cfg.norm_eps)
+    xs = _token_shift(xn, None)
+    att, s_fin = _rwkv_time_mix(p, xn, xs, cfg, wkv_state, step=False, sc=sc)
+    x = x + att
+    xn2 = layers.rms_norm(x, p["ln2"] - 1.0, cfg.norm_eps)
+    xs2 = _token_shift(xn2, None)
+    x = x + _rwkv_channel_mix(p, xn2, xs2, cfg, sc=sc)
+    state = dict(shift_att=xn[:, -1], shift_ffn=xn2[:, -1], wkv=s_fin)
+    return x, state
+
+
+def rwkv6_block_decode(p, x: jax.Array, cfg: ModelConfig, state: dict):
+    """Decode one token.  x: (B, 1, d); state carries shifts + wkv."""
+    xn = layers.rms_norm(x, p["ln1"] - 1.0, cfg.norm_eps)
+    xs = state["shift_att"][:, None, :].astype(xn.dtype)
+    att, s_new = _rwkv_time_mix(p, xn, xs, cfg, state["wkv"], step=True)
+    x = x + att
+    xn2 = layers.rms_norm(x, p["ln2"] - 1.0, cfg.norm_eps)
+    xs2 = state["shift_ffn"][:, None, :].astype(xn2.dtype)
+    x = x + _rwkv_channel_mix(p, xn2, xs2, cfg)
+    new_state = dict(shift_att=xn[:, 0], shift_ffn=xn2[:, 0], wkv=s_new)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (selective SSM) — hymba's parallel-SSM heads
+# ---------------------------------------------------------------------------
+
+def mamba_init(key: jax.Array, cfg: ModelConfig, d_inner: int | None = None):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = d_inner or ssm.expand * d
+    n = ssm.state_dim
+    dt_rank = ssm.dt_rank or -(-d // 16)
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    b.dense("w_in", (d, 2 * di), ("embed", "ff"))            # x and z
+    b.dense("conv_w", (ssm.conv_dim, di), (None, "ff"), scale=0.5)
+    b.zeros("conv_b", (di,), ("ff",))
+    b.dense("w_bcdt", (di, 2 * n + dt_rank), ("ff", None))
+    b.dense("w_dt", (dt_rank, di), (None, "ff"), scale=1.0)
+    b.zeros("dt_bias", (di,), ("ff",))
+    b.const("a_log", jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))), ("ff", None))
+    b.ones("d_skip", (di,), ("ff",))
+    b.dense("w_out", (di, d), ("ff", "embed"))
+    return b.done()
+
+
+def _mamba_bcdt(p, xc, cfg):
+    ssm = cfg.ssm
+    n = ssm.state_dim
+    dt_rank = ssm.dt_rank or -(-cfg.d_model // 16)
+    bcdt = xc @ p["w_bcdt"].astype(xc.dtype)
+    bmat = bcdt[..., :n]
+    cmat = bcdt[..., n:2 * n]
+    dt = jax.nn.softplus(
+        bcdt[..., 2 * n:] @ p["w_dt"].astype(xc.dtype) +
+        p["dt_bias"].astype(xc.dtype))                       # (.., di)
+    return bmat, cmat, dt
+
+
+def mamba_apply(p, x: jax.Array, cfg: ModelConfig, sc=lambda x, ax: x):
+    """Train/prefill.  x: (B, T, d) -> (y (B, T, d), (conv_state, ssm_state))."""
+    ssm = cfg.ssm
+    bsz, t, d = x.shape
+    cdt = x.dtype
+    xz = x @ p["w_in"].astype(cdt)
+    xz = sc(xz, ("batch", None, "ff"))
+    xc, z = jnp.split(xz, 2, axis=-1)                        # (B, T, di)
+    di = xc.shape[-1]
+    # causal depthwise conv, width ssm.conv_dim
+    cw = ssm.conv_dim
+    xpad = jnp.pad(xc, ((0, 0), (cw - 1, 0), (0, 0)))
+    xconv = sum(xpad[:, i:i + t, :] * p["conv_w"][i].astype(cdt)
+                for i in range(cw)) + p["conv_b"].astype(cdt)
+    xs = jax.nn.silu(xconv)
+    bmat, cmat, dt = _mamba_bcdt(p, xs, cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (di, n)
+    di = xc.shape[-1]
+    n = ssm.state_dim
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    # Time-chunked selective scan: associative scan within a chunk, carried
+    # state across chunks — live memory O(B·C·di·n) instead of O(B·T·di·n).
+    ch = min(ssm.scan_chunk, t)
+    pad = (-t) % ch
+    if pad:
+        zp = lambda u: jnp.pad(u, ((0, 0), (0, pad)) + ((0, 0),) * (u.ndim - 2))
+        xs_p, bmat_p, cmat_p, dt_p = zp(xs), zp(bmat), zp(cmat), zp(dt)
+    else:
+        xs_p, bmat_p, cmat_p, dt_p = xs, bmat, cmat, dt
+    nc = (t + pad) // ch
+    resh = lambda u: u.reshape(bsz, nc, ch, u.shape[-1]).swapaxes(0, 1)
+
+    def chunk_body(h_in, xs_c):
+        xc_c, b_c, c_c, dt_c = xs_c                          # (B, C, …)
+        da_c = jnp.exp(dt_c.astype(jnp.float32)[..., None] * a)
+        dbx_c = (dt_c.astype(jnp.float32) *
+                 xc_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[..., None, :]          # (B,C,di,n)
+        da_c = sc(da_c, ("batch", None, "ff", None))
+        dbx_c = sc(dbx_c, ("batch", None, "ff", None))
+        da_cum, h_loc = jax.lax.associative_scan(
+            combine, (da_c, dbx_c), axis=1)
+        # associative_scan drops annotations; re-pin the state sharding or
+        # SPMD replicates (B, C, di, n) f32 every chunk (§Perf H1).
+        h = sc(h_loc + da_cum * h_in[:, None],
+               ("batch", None, "ff", None))                  # carry in
+        y_c = jnp.einsum("bcdn,bcn->bcd", h, c_c.astype(jnp.float32))
+        return h[:, -1], sc(y_c, ("batch", None, "ff"))
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    chunk_body = jax.checkpoint(chunk_body, policy=jax.checkpoint_policies
+                                .nothing_saveable, prevent_cse=False)
+    h_fin, y = jax.lax.scan(chunk_body, h0,
+                            (resh(xs_p), resh(bmat_p), resh(cmat_p),
+                             resh(dt_p)))
+    y = y.swapaxes(0, 1).reshape(bsz, t + pad, di)[:, :t]
+    y = (y + p["d_skip"].astype(jnp.float32) * xs.astype(jnp.float32))
+    y = y.astype(cdt) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(cdt)
+    assert cw > 1, "conv width must exceed 1"
+    conv_state = xpad[:, -(cw - 1):, :]                      # last cw-1 inputs
+    return out, (conv_state, h_fin)
+
+
+def mamba_step(p, x: jax.Array, cfg: ModelConfig, state):
+    """Decode one token.  x: (B, 1, d); state = (conv_state (B, cw-1, di),
+    ssm_state (B, di, n))."""
+    ssm = cfg.ssm
+    conv_state, h = state
+    bsz = x.shape[0]
+    cdt = x.dtype
+    xz = x[:, 0] @ p["w_in"].astype(cdt)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    cw = ssm.conv_dim
+    win = jnp.concatenate([conv_state, xc[:, None, :]], axis=1)  # (B, cw, di)
+    xconv = jnp.einsum("bcd,cd->bd", win, p["conv_w"].astype(cdt)) \
+        + p["conv_b"].astype(cdt)
+    xs = jax.nn.silu(xconv)
+    bmat, cmat, dt = _mamba_bcdt(p, xs, cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)      # (B, di, n)
+    dbx = (dt.astype(jnp.float32) * xs.astype(jnp.float32))[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]
+    h = h * da + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = y.astype(cdt) * jax.nn.silu(z)
+    out = (y @ p["w_out"].astype(cdt))[:, None, :]
+    return out, (win[:, 1:], h)

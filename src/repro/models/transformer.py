@@ -1,0 +1,548 @@
+"""Decoder-LM assembly for all assigned architectures.
+
+One scan-over-layers body serves every uniform stack; per-layer attention
+windows are traced scalars (gemma2's alternating local/global, hymba's
+listed global layers).  MoE archs unroll their leading dense layers.
+Whisper adds an encoder stack + cross-attention.  Phi-3-vision fuses
+precomputed patch embeddings into the leading positions.
+
+Activation sharding is injected via ``sc(x, logical_axes)`` — the launch
+layer installs a resolver that maps logical axes to mesh axes
+(with_sharding_constraint); defaults to identity so models run un-meshed on
+CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLOBAL_WINDOW, ModelConfig, ShapeConfig
+from repro.models import attention, hymba, layers, moe, ssm
+from repro.models.param_utils import Init, stack_layer_params
+
+__all__ = ["init_params", "forward", "lm_loss", "init_cache", "decode_step",
+           "prefill", "input_specs", "count_params", "active_params"]
+
+Sharder = Callable[[jax.Array, tuple], jax.Array]
+_id_sc: Sharder = lambda x, ax: x
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key: jax.Array, cfg: ModelConfig, *, moe_layer: bool,
+                cross_attn: bool = False):
+    """One decoder layer's params + specs."""
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    if cfg.block_type == "rwkv6":
+        p, s = ssm.rwkv6_block_init(key, cfg)
+        return p, s
+    b.ones("ln_attn", (cfg.d_model,), ("embed",))
+    if cfg.block_type == "hymba":
+        p, s = hymba.hymba_block_init(jax.random.fold_in(key, 1), cfg)
+        b.params["mix"], b.specs["mix"] = p, s
+    elif cfg.mla is not None:
+        p, s = attention.mla_init(jax.random.fold_in(key, 1), cfg)
+        b.params["mix"], b.specs["mix"] = p, s
+    else:
+        p, s = attention.attn_init(jax.random.fold_in(key, 1), cfg)
+        b.params["mix"], b.specs["mix"] = p, s
+    if cross_attn:
+        p, s = attention.attn_init(jax.random.fold_in(key, 2), cfg)
+        b.params["cross"], b.specs["cross"] = p, s
+        b.ones("ln_cross", (cfg.d_model,), ("embed",))
+    b.ones("ln_mlp", (cfg.d_model,), ("embed",))
+    if cfg.post_block_norm:
+        b.ones("ln_attn_post", (cfg.d_model,), ("embed",))
+        b.ones("ln_mlp_post", (cfg.d_model,), ("embed",))
+    if moe_layer:
+        p, s = moe.moe_init(jax.random.fold_in(key, 3), cfg)
+        b.params["ffn"], b.specs["ffn"] = p, s
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and not moe_layer:
+            d_ff = cfg.moe.dense_ff or cfg.d_ff
+        p, s = layers.mlp_init(jax.random.fold_in(key, 4), cfg, d_ff=d_ff)
+        b.params["ffn"], b.specs["ffn"] = p, s
+    return b.done()
+
+
+def _enc_layer_init(key: jax.Array, cfg: ModelConfig):
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    b.ones("ln_attn", (cfg.d_model,), ("embed",))
+    p, s = attention.attn_init(jax.random.fold_in(key, 1), cfg)
+    b.params["mix"], b.specs["mix"] = p, s
+    b.ones("ln_mlp", (cfg.d_model,), ("embed",))
+    p, s = layers.mlp_init(jax.random.fold_in(key, 2), cfg)
+    b.params["ffn"], b.specs["ffn"] = p, s
+    return b.done()
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    """Returns (params, specs) — specs mirror params with logical axes."""
+    b = Init(key, jnp.dtype(cfg.param_dtype))
+    ep, es = layers.embed_init(jax.random.fold_in(key, 0), cfg)
+    b.params["embed"], b.specs["embed"] = ep, es
+    b.ones("final_norm", (cfg.d_model,), ("embed",))
+
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.num_layers - n_dense
+    lkeys = jax.random.split(jax.random.fold_in(key, 1), n_scan)
+    lp, ls = stack_layer_params(
+        lambda k: _layer_init(k, cfg, moe_layer=cfg.moe is not None,
+                              cross_attn=cfg.encoder_decoder), lkeys)
+    b.params["layers"], b.specs["layers"] = lp, ls
+
+    if n_dense:
+        dkeys = jax.random.split(jax.random.fold_in(key, 2), n_dense)
+        dp, dsx = stack_layer_params(
+            lambda k: _layer_init(k, cfg, moe_layer=False), dkeys)
+        b.params["dense_layers"], b.specs["dense_layers"] = dp, dsx
+
+    if cfg.encoder_decoder:
+        ekeys = jax.random.split(jax.random.fold_in(key, 3), cfg.enc_layers)
+        ep2, es2 = stack_layer_params(lambda k: _enc_layer_init(k, cfg),
+                                      ekeys)
+        b.params["encoder"], b.specs["encoder"] = ep2, es2
+        b.ones("enc_final_norm", (cfg.d_model,), ("embed",))
+    return b.done()
+
+
+# ---------------------------------------------------------------------------
+# Layer application (one body for scan)
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p, x, *, cfg: ModelConfig, positions, window, cache=None,
+                 decode_pos=None, enc_out=None, enc_len=None, moe_layer=False,
+                 sc: Sharder = _id_sc):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    train_mode = cache is None and decode_pos is None
+    if cfg.block_type == "rwkv6":
+        if cache is not None and x.shape[1] == 1:
+            x, new_cache = ssm.rwkv6_block_decode(p, x, cfg, cache)
+        else:
+            x, new_cache = ssm.rwkv6_block_apply(p, x, cfg, sc=sc)
+        if train_mode:
+            new_cache = None  # don't stack per-layer states through scan
+        return sc(x, ("batch", "seq", None)), new_cache, aux
+
+    h = layers.rms_norm(x, p["ln_attn"] - 1.0, cfg.norm_eps)
+    if cfg.block_type == "hymba":
+        a, new_cache = hymba.hymba_block_apply(
+            p["mix"], h, cfg=cfg, positions=positions, window=window,
+            cache=cache, decode_pos=decode_pos, sc=sc)
+    elif cfg.mla is not None:
+        a, new_cache = attention.mla_apply(
+            p["mix"], h, cfg=cfg, positions=positions, window=window,
+            cache=cache, decode_pos=decode_pos, sc=sc)
+    else:
+        a, new_cache = attention.attn_apply(
+            p["mix"], h, cfg=cfg, positions=positions, window=window,
+            cache=cache, decode_pos=decode_pos, sc=sc)
+    if cfg.post_block_norm:
+        a = layers.rms_norm(a, p["ln_attn_post"] - 1.0, cfg.norm_eps)
+    if train_mode:
+        new_cache = None  # don't stack per-layer K/V through the train scan
+    x = x + a
+    x = sc(x, ("batch", "seq", None))
+
+    if "cross" in p:
+        hc = layers.rms_norm(x, p["ln_cross"] - 1.0, cfg.norm_eps)
+        if enc_out is None and cache is not None:
+            # decode: the encoder is NOT re-run; cross K/V come from the
+            # cache filled at prefill (EXPERIMENTS.md §Perf W1).
+            kv = (cache["cross_k"].astype(x.dtype),
+                  cache["cross_v"].astype(x.dtype))
+        else:
+            kv = enc_out  # (k, v) tuple precomputed per layer
+        c, _ = attention.attn_apply(
+            p["cross"], hc, cfg=cfg, positions=positions,
+            window=GLOBAL_WINDOW, causal=False, kv_override=kv, sc=sc)
+        x = x + c
+        if new_cache is not None and cfg.encoder_decoder:
+            if enc_out is not None:
+                new_cache = dict(new_cache, cross_k=kv[0].astype(
+                    new_cache["k"].dtype), cross_v=kv[1].astype(
+                        new_cache["k"].dtype))
+            elif cache is not None:
+                new_cache = dict(new_cache, cross_k=cache["cross_k"],
+                                 cross_v=cache["cross_v"])
+
+    h2 = layers.rms_norm(x, p["ln_mlp"] - 1.0, cfg.norm_eps)
+    if moe_layer:
+        moe_fn = moe.moe_apply_ep if cfg.moe_ep else moe.moe_apply
+        f, moe_aux = moe_fn(p["ffn"], h2, cfg, sc=sc)
+        aux = aux + moe_aux["load_balance_loss"]
+    else:
+        f = layers.mlp_apply(p["ffn"], h2, cfg, sc=sc)
+    if cfg.post_block_norm:
+        f = layers.rms_norm(f, p["ln_mlp_post"] - 1.0, cfg.norm_eps)
+    x = x + f
+    return sc(x, ("batch", "seq", None)), new_cache, aux
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.everything_saveable
+
+
+def _window_array(cfg: ModelConfig, n_dense: int) -> jax.Array:
+    return jnp.asarray(
+        [cfg.window_for_layer(i)
+         for i in range(n_dense, cfg.num_layers)], jnp.int32)
+
+
+def _scan_stack(params, x, cfg: ModelConfig, *, positions, cache=None,
+                decode_pos=None, enc_out=None, sc: Sharder = _id_sc,
+                moe_layers: bool):
+    """lax.scan over the uniform layer stack.  cache/enc_out leaves carry a
+    leading L dim; returns (x, new_cache, aux_sum)."""
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    windows = _window_array(cfg, n_dense)
+
+    def body(carry, xs_in):
+        xx, aux = carry
+        p_l, cache_l, enc_l, win = xs_in
+        xx, new_cache, a = _apply_layer(
+            p_l, xx, cfg=cfg, positions=positions, window=win,
+            cache=cache_l, decode_pos=decode_pos, enc_out=enc_l,
+            moe_layer=moe_layers, sc=sc)
+        return (xx, aux + a), new_cache
+
+    body = jax.checkpoint(body, policy=_remat_policy(cfg),
+                          prevent_cse=False)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params, cache, enc_out, windows))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+def _encode_audio(params, frames: jax.Array, cfg: ModelConfig,
+                  sc: Sharder = _id_sc):
+    """frames: (B, F, d) precomputed conv-frontend embeddings (stub)."""
+    b, f, d = frames.shape
+    pos = jnp.arange(f, dtype=jnp.float32)
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) *
+                    jnp.arange(half, dtype=jnp.float32) / half)
+    pe = jnp.concatenate([jnp.sin(pos[:, None] * freqs),
+                          jnp.cos(pos[:, None] * freqs)], axis=-1)
+    x = frames + pe.astype(frames.dtype)
+    positions = jnp.arange(f, dtype=jnp.int32)
+
+    def body(carry, p_l):
+        xx = carry
+        h = layers.rms_norm(xx, p_l["ln_attn"] - 1.0, cfg.norm_eps)
+        a, _ = attention.attn_apply(p_l["mix"], h, cfg=cfg,
+                                    positions=positions,
+                                    window=GLOBAL_WINDOW, causal=False,
+                                    sc=sc)
+        xx = xx + a
+        h2 = layers.rms_norm(xx, p_l["ln_mlp"] - 1.0, cfg.norm_eps)
+        xx = xx + layers.mlp_apply(p_l["ffn"], h2, cfg, sc=sc)
+        return sc(xx, ("batch", "seq", None)), None
+
+    body = jax.checkpoint(body, policy=_remat_policy(cfg), prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.rms_norm(x, params["enc_final_norm"] - 1.0, cfg.norm_eps)
+
+
+def _cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    def per_layer(p_l):
+        cdt = enc_out.dtype
+        k = (enc_out @ p_l["cross"]["wk"].astype(cdt))
+        v = (enc_out @ p_l["cross"]["wv"].astype(cdt))
+        b, f, _ = enc_out.shape
+        return (k.reshape(b, f, cfg.num_kv_heads, cfg.head_dim),
+                v.reshape(b, f, cfg.num_kv_heads, cfg.head_dim))
+    return jax.vmap(per_layer)(params["layers"])
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig, *,
+            vision_embeds=None, audio_frames=None, cache=None,
+            decode_pos=None, sc: Sharder = _id_sc):
+    """tokens: (B, S) -> (hidden (B, S, d), new_cache, aux)."""
+    bsz, s = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    if cfg.vision_tokens and vision_embeds is not None:
+        # VLM stub: patch embeddings replace the leading positions.
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]],
+                            axis=1)
+    x = sc(x, ("batch", "seq", None))
+    if decode_pos is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    else:
+        positions = decode_pos + jnp.arange(s, dtype=jnp.int32)
+
+    enc_out = None
+    if cfg.encoder_decoder and not (s == 1 and cache is not None):
+        assert audio_frames is not None
+        enc_h = _encode_audio(params, audio_frames.astype(x.dtype), cfg, sc)
+        enc_out = _cross_kv(params, enc_h, cfg)
+
+    aux = jnp.zeros((), jnp.float32)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    dense_cache_new = []
+    if n_dense:
+        for i in range(n_dense):
+            p_l = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            c_l = (jax.tree.map(lambda a: a[i], cache["dense"])
+                   if cache is not None else None)
+            x, nc, a = _apply_layer(
+                p_l, x, cfg=cfg, positions=positions,
+                window=cfg.window_for_layer(i), cache=c_l,
+                decode_pos=decode_pos, moe_layer=False, sc=sc)
+            aux = aux + a
+            dense_cache_new.append(nc)
+
+    scan_cache = cache["scan"] if cache is not None else None
+    x, new_scan_cache, a2 = _scan_stack(
+        params["layers"], x, cfg, positions=positions, cache=scan_cache,
+        decode_pos=decode_pos, enc_out=enc_out, sc=sc,
+        moe_layers=cfg.moe is not None)
+    aux = aux + a2
+    x = layers.rms_norm(x, params["final_norm"] - 1.0, cfg.norm_eps)
+
+    new_cache = None
+    if cache is not None or decode_pos is not None:
+        new_cache = dict(scan=new_scan_cache)
+        if n_dense:
+            new_cache["dense"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *dense_cache_new) \
+                if len(dense_cache_new) > 1 else jax.tree.map(
+                    lambda a: a[None], dense_cache_new[0])
+    return x, new_cache, aux
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, *, sc: Sharder = _id_sc):
+    """Chunked softmax-xent: logits materialized one seq-chunk at a time."""
+    h, _, aux = forward(params, batch["tokens"], cfg,
+                        vision_embeds=batch.get("vision_embeds"),
+                        audio_frames=batch.get("audio_frames"), sc=sc)
+    w = layers.unembed_matrix(params["embed"], cfg)
+    targets = batch["labels"]
+    bsz, s, d = h.shape
+    chunk = min(cfg.xent_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hs = h.reshape(bsz, nc, chunk, d).swapaxes(0, 1)
+    ts = targets.reshape(bsz, nc, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        hc, tc = xs
+        logits = (hc.astype(jnp.float32) @ w.astype(jnp.float32))
+        logits = sc(logits, ("batch", None, "vocab"))
+        if cfg.final_logit_softcap:
+            logits = cfg.final_logit_softcap * jnp.tanh(
+                logits / cfg.final_logit_softcap)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(tc, 0)[..., None],
+                                 axis=-1)[..., 0]
+        valid = tc >= 0
+        loss = jnp.where(valid, lse - ll, 0.0)
+        return (acc[0] + loss.sum(), acc[1] + valid.sum()), None
+
+    body = jax.checkpoint(body, policy=_remat_policy(cfg), prevent_cse=False)
+    (tot, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hs, ts))
+    loss = tot / jnp.maximum(n, 1)
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(cfg: ModelConfig, bsz: int, max_len: int):
+    """ShapeDtypeStructs for ONE layer's cache (no leading L dim)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.block_type == "rwkv6":
+        return dict(
+            shift_att=jax.ShapeDtypeStruct((bsz, cfg.d_model), cdt),
+            shift_ffn=jax.ShapeDtypeStruct((bsz, cfg.d_model), cdt),
+            wkv=jax.ShapeDtypeStruct(
+                (bsz, cfg.num_heads, cfg.head_dim, cfg.head_dim),
+                jnp.float32))
+    if cfg.block_type == "hymba":
+        di = cfg.d_model
+        return dict(
+            attn=dict(
+                k=jax.ShapeDtypeStruct(
+                    (bsz, max_len, cfg.num_kv_heads, cfg.head_dim), cdt),
+                v=jax.ShapeDtypeStruct(
+                    (bsz, max_len, cfg.num_kv_heads, cfg.head_dim), cdt)),
+            conv=jax.ShapeDtypeStruct((bsz, cfg.ssm.conv_dim - 1, di), cdt),
+            ssm=jax.ShapeDtypeStruct((bsz, di, cfg.ssm.state_dim),
+                                     jnp.float32))
+    if cfg.mla is not None:
+        return dict(
+            c=jax.ShapeDtypeStruct((bsz, max_len, cfg.mla.kv_lora_rank), cdt),
+            kr=jax.ShapeDtypeStruct((bsz, max_len, cfg.mla.qk_rope_dim), cdt))
+    out = dict(
+        k=jax.ShapeDtypeStruct((bsz, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), cdt),
+        v=jax.ShapeDtypeStruct((bsz, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), cdt))
+    if cfg.encoder_decoder:
+        # cross-attention K/V computed once at prefill, static thereafter
+        out["cross_k"] = jax.ShapeDtypeStruct(
+            (bsz, cfg.enc_frames, cfg.num_kv_heads, cfg.head_dim), cdt)
+        out["cross_v"] = jax.ShapeDtypeStruct(
+            (bsz, cfg.enc_frames, cfg.num_kv_heads, cfg.head_dim), cdt)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, bsz: int, max_len: int):
+    """ShapeDtypeStruct pytree of the full decode cache."""
+    one = _layer_cache_spec(cfg, bsz, max_len)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.num_layers - n_dense
+    stack = lambda n: jax.tree.map(
+        lambda sds: jax.ShapeDtypeStruct((n,) + sds.shape, sds.dtype), one)
+    out = dict(scan=stack(n_scan))
+    if n_dense:
+        out["dense"] = stack(n_dense)
+    return out
+
+
+def init_cache(cfg: ModelConfig, bsz: int, max_len: int):
+    return jax.tree.map(lambda sds: jnp.zeros(sds.shape, sds.dtype),
+                        cache_specs(cfg, bsz, max_len))
+
+
+def _layer_cache_axes(cfg: ModelConfig):
+    """Logical axes for ONE layer's cache (matches _layer_cache_spec)."""
+    if cfg.block_type == "rwkv6":
+        return dict(shift_att=("batch", None), shift_ffn=("batch", None),
+                    wkv=("batch", "heads", None, None))
+    if cfg.block_type == "hymba":
+        return dict(
+            attn=dict(k=("batch", "cache_seq", "kv_heads", None),
+                      v=("batch", "cache_seq", "kv_heads", None)),
+            conv=("batch", None, "ff"),
+            ssm=("batch", "ff", None))
+    if cfg.mla is not None:
+        return dict(c=("batch", "cache_seq", None),
+                    kr=("batch", "cache_seq", None))
+    out = dict(k=("batch", "cache_seq", "kv_heads", None),
+               v=("batch", "cache_seq", "kv_heads", None))
+    if cfg.encoder_decoder:
+        out["cross_k"] = ("batch", None, "kv_heads", None)
+        out["cross_v"] = ("batch", None, "kv_heads", None)
+    return out
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical-axes tree matching cache_specs (leading 'layers' dim)."""
+    one = _layer_cache_axes(cfg)
+    stacked = jax.tree.map(lambda ax: ("layers",) + tuple(ax), one,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    out = dict(scan=stacked)
+    if cfg.moe and cfg.moe.first_dense_layers:
+        out["dense"] = stacked
+    return out
+
+
+def decode_step(params, cache, tokens: jax.Array, decode_pos, cfg: ModelConfig,
+                *, enc_out=None, audio_frames=None, sc: Sharder = _id_sc):
+    """serve_step: one new token per sequence against a filled cache.
+
+    tokens: (B, 1).  Returns (logits (B, 1, V), new_cache).
+    """
+    h, new_cache, _ = forward(params, tokens, cfg, cache=cache,
+                              decode_pos=decode_pos,
+                              audio_frames=audio_frames, sc=sc)
+    w = layers.unembed_matrix(params["embed"], cfg)
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(
+            logits / cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+def prefill(params, tokens: jax.Array, cfg: ModelConfig, *,
+            vision_embeds=None, audio_frames=None, max_len: int | None = None,
+            sc: Sharder = _id_sc):
+    """Run the prompt; returns (last-position logits, filled cache)."""
+    bsz, s = tokens.shape
+    max_len = max_len or s
+    cache = init_cache(cfg, bsz, max_len)
+    h, new_cache, _ = forward(params, tokens, cfg, cache=cache, decode_pos=0,
+                              vision_embeds=vision_embeds,
+                              audio_frames=audio_frames, sc=sc)
+    w = layers.unembed_matrix(params["embed"], cfg)
+    logits = h[:, -1:].astype(jnp.float32) @ w.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(
+            logits / cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins) & parameter counting
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        out = dict(tokens=jax.ShapeDtypeStruct((b, s), jnp.int32),
+                   labels=jax.ShapeDtypeStruct((b, s), jnp.int32))
+    elif shape.kind == "prefill":
+        out = dict(tokens=jax.ShapeDtypeStruct((b, s), jnp.int32))
+    else:  # decode: one new token against an s-long cache
+        out = dict(tokens=jax.ShapeDtypeStruct((b, 1), jnp.int32))
+    if cfg.vision_tokens:
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), cdt)
+    if cfg.encoder_decoder and shape.kind != "decode":
+        # decode serves off the prefill-filled cross-KV cache (§Perf W1)
+        out["audio_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_frames, cfg.d_model), cdt)
+    return out
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import math
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg)[0],
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    d, f = cfg.d_model, m.expert_ff
+    n_moe = cfg.num_layers - m.first_dense_layers
+    per_expert = (3 if cfg.act.endswith("_glu") else 2) * d * f
+    inactive = n_moe * (m.num_experts - m.top_k) * per_expert
+    return total - inactive

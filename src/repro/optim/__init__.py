@@ -1,0 +1,10 @@
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init,
+                               adamw_update, clip_by_global_norm, global_norm)
+from repro.optim.compression import (event_psum, make_compressed_grad_fn,
+                                     quantized_psum, topk_threshold)
+from repro.optim.schedule import constant, warmup_cosine, warmup_linear
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "global_norm", "event_psum",
+           "make_compressed_grad_fn", "quantized_psum", "topk_threshold",
+           "constant", "warmup_cosine", "warmup_linear"]

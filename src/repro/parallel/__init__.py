@@ -1,0 +1,8 @@
+from repro.parallel.pipeline import pipeline_apply
+from repro.parallel.sharding import (ShardingRules, logical_to_pspec,
+                                     make_rules, make_sharder,
+                                     mesh_axis_size, named_sharding_tree)
+
+__all__ = ["pipeline_apply", "ShardingRules", "logical_to_pspec",
+           "make_rules", "make_sharder", "mesh_axis_size",
+           "named_sharding_tree"]

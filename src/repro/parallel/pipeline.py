@@ -1,0 +1,82 @@
+"""GPipe-style pipeline parallelism over a ``pipe`` mesh axis (shard_map).
+
+An optional distribution mode for very deep stacks at >512-chip scale: the
+layer stack splits into ``n_stages`` contiguous stages; microbatches stream
+through stages with ``jax.lax.ppermute`` moving activations stage-to-stage.
+The steady-state schedule overlaps stage compute with neighbor transfers
+(the decoupled access/execute discipline of the paper's PE, lifted to the
+inter-chip level).
+
+The production dry-run mesh uses DP×TP (no pipe axis); this module is
+exercised by its own small-mesh tests and is selectable from the launcher
+via --pipeline.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["pipeline_apply"]
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x: jax.Array, *,
+                   mesh: Mesh, axis: str = "pipe",
+                   n_microbatches: int | None = None) -> jax.Array:
+    """Run ``y = stages(x)`` with each stage on one slice of ``axis``.
+
+    stage_fn(params_slice, microbatch) -> microbatch (same shape).
+    stage_params: pytree with leading dim == n_stages (one slice per stage).
+    x: (n_micro, mb, ...) pre-split microbatches.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0] if n_microbatches is None else n_microbatches
+    assert x.shape[0] == n_micro
+
+    def per_stage(params_local, x_local):
+        # params_local: (1, ...) slice; x_local: (n_micro, mb, ...) only
+        # meaningful on stage 0 at t=0.
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        total_ticks = n_micro + n_stages - 1
+        buf = jnp.zeros_like(x_local[0])
+        outs = jnp.zeros_like(x_local)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # Stage 0 ingests microbatch t (if any) — others take the
+            # neighbor's output from the previous tick (already in buf).
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            inject = jax.lax.dynamic_index_in_dim(x_local, mb_idx, axis=0,
+                                                  keepdims=False)
+            cur = jnp.where(stage == 0,
+                            jnp.where(t < n_micro, inject, jnp.zeros_like(buf)),
+                            buf)
+            live = (t - stage >= 0) & (t - stage < n_micro)
+            y = stage_fn(params_local, cur)
+            y = jnp.where(live, y, jnp.zeros_like(y))
+            # Last stage records its completed microbatch.
+            out_idx = jnp.clip(t - stage, 0, n_micro - 1)
+            rec = jnp.where(live & (stage == n_stages - 1), y, 0.0)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jax.lax.dynamic_index_in_dim(
+                    outs, out_idx, 0, keepdims=False) + rec, out_idx, 0)
+            # Shift activations to the next stage.
+            buf = jax.lax.ppermute(
+                y, axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, total_ticks, tick, (buf, outs))
+        # Only the last stage holds real outputs; psum broadcasts them
+        # (all other stages contribute zeros).
+        return jax.lax.psum(outs, axis)
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(per_stage, mesh=mesh,
+                       in_specs=(spec_params, P()), out_specs=P(),
+                       check_vma=False)
+    return fn(stage_params, x)

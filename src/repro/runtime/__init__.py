@@ -1,0 +1,7 @@
+from repro.runtime.elastic import (choose_mesh_shape, elastic_remesh,
+                                   reshard_tree)
+from repro.runtime.fault_tolerance import (LoopConfig, ResilientLoop,
+                                           StragglerDetector)
+
+__all__ = ["choose_mesh_shape", "elastic_remesh", "reshard_tree",
+           "LoopConfig", "ResilientLoop", "StragglerDetector"]

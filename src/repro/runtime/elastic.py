@@ -1,0 +1,59 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+When a pod/host drops (or capacity grows), the controller calls
+``elastic_remesh``: it picks the largest usable (data, model) factorization
+of the surviving device count, rebuilds sharding rules, and re-places the
+checkpointed state under the new mesh.  Because checkpoints store *logical*
+shapes and shardings are re-resolved from logical axis specs, restore onto
+any mesh is mechanical (checkpoint.restore(shardings=new)).
+
+The data pipeline is stateless-resumable (batch = f(step, host)), so elastic
+re-entry only needs the step counter.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from repro.parallel.sharding import (ShardingRules, make_rules,
+                                     named_sharding_tree)
+
+__all__ = ["choose_mesh_shape", "elastic_remesh", "reshard_tree"]
+
+
+def choose_mesh_shape(n_devices: int, *, model_parallel: int = 16,
+                      max_pod: int = 256) -> tuple:
+    """Largest (pod, data, model) grid using <= n_devices devices.
+
+    Keeps model-parallel fixed (weights must still fit) and gives the rest
+    to data; drops stragglers that break divisibility.
+    """
+    mp = model_parallel
+    while mp > 1 and n_devices % mp:
+        mp //= 2
+    rest = n_devices // mp
+    if rest > max_pod // mp and rest % 2 == 0:
+        return (2, rest // 2, mp)
+    return (rest, mp)
+
+
+def elastic_remesh(n_devices: int, *, model_parallel: int = 16,
+                   devices: Optional[Sequence] = None) -> Mesh:
+    shape = choose_mesh_shape(n_devices, model_parallel=model_parallel)
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    devs = list(devices or jax.devices())[:math.prod(shape)]
+    import numpy as np
+    return Mesh(np.asarray(devs).reshape(shape), axes)
+
+
+def reshard_tree(tree, specs, new_mesh: Mesh, *, fsdp: bool = False,
+                 rules: ShardingRules | None = None):
+    """device_put every leaf under the new mesh's resolved shardings."""
+    rules = rules or make_rules(new_mesh, fsdp=fsdp)
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    shardings = named_sharding_tree(specs, shapes, new_mesh, rules)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -1,0 +1,123 @@
+"""Fault-tolerant training runtime: restart, stragglers, graceful preemption.
+
+``ResilientLoop`` wraps a train-step callable with:
+  * step-atomic async checkpointing every N steps (+ final),
+  * auto-resume from the latest complete checkpoint,
+  * SIGTERM/SIGINT handling — a preemption notice triggers one synchronous
+    checkpoint before exit (standard TPU-pod eviction protocol),
+  * a straggler detector: per-step wall-time EWMA; steps slower than
+    ``straggler_factor``× the EWMA are flagged (on a real pod the hook would
+    feed the controller's drop-and-remesh path; here it feeds metrics and the
+    elastic module's re-mesh decision).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro import checkpoint as ckpt_lib
+
+__all__ = ["LoopConfig", "StragglerDetector", "ResilientLoop"]
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 100
+    keep_last: int = 3
+    straggler_factor: float = 2.5
+    ewma_alpha: float = 0.1
+
+
+class StragglerDetector:
+    """Flags steps (or, multi-host, peers) that exceed factor× EWMA time."""
+
+    def __init__(self, factor: float = 2.5, alpha: float = 0.1):
+        self.factor = factor
+        self.alpha = alpha
+        self.ewma: Optional[float] = None
+        self.flagged: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = dt > self.factor * self.ewma
+        if is_straggler:
+            self.flagged.append((step, dt, self.ewma))
+        # Straggler samples do not poison the EWMA.
+        if not is_straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+class ResilientLoop:
+    def __init__(self, cfg: LoopConfig, step_fn: Callable,
+                 batch_fn: Callable[[int], Any]):
+        """step_fn(state, batch) -> (state, metrics); state is a pytree
+        whose first element convention is (params, opt_state)."""
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.detector = StragglerDetector(cfg.straggler_factor,
+                                          cfg.ewma_alpha)
+        self._preempted = False
+        self._pending_save = None
+        self.metrics_log: list[dict] = []
+
+    def _handle_signal(self, signum, frame):
+        self._preempted = True
+
+    def _maybe_gc(self):
+        steps = ckpt_lib.all_steps(self.cfg.ckpt_dir)
+        for s in steps[:-self.cfg.keep_last]:
+            import shutil, os
+            shutil.rmtree(os.path.join(self.cfg.ckpt_dir,
+                                       f"step_{s:08d}"), ignore_errors=True)
+
+    def run(self, init_state):
+        cfg = self.cfg
+        state = init_state
+        start = 0
+        latest = ckpt_lib.latest_step(cfg.ckpt_dir)
+        if latest is not None:
+            state, start = ckpt_lib.restore(state, cfg.ckpt_dir, latest)
+            start = latest
+        old_term = signal.signal(signal.SIGTERM, self._handle_signal)
+        old_int = signal.signal(signal.SIGINT, self._handle_signal)
+        try:
+            step = start
+            while step < cfg.total_steps and not self._preempted:
+                batch = self.batch_fn(step)
+                t0 = time.monotonic()
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                dt = time.monotonic() - t0
+                straggle = self.detector.observe(step, dt)
+                metrics = dict(metrics, step=step, step_time_s=dt,
+                               straggler=straggle)
+                self.metrics_log.append(
+                    {k: (float(v) if hasattr(v, "dtype") or
+                         isinstance(v, (int, float)) else v)
+                     for k, v in metrics.items()})
+                step += 1
+                if step % cfg.ckpt_every == 0:
+                    if self._pending_save is not None:
+                        self._pending_save.join()
+                    self._pending_save = ckpt_lib.save_async(
+                        state, cfg.ckpt_dir, step)
+                    self._maybe_gc()
+            # Final / preemption checkpoint: synchronous, never skipped.
+            if self._pending_save is not None:
+                self._pending_save.join()
+            ckpt_lib.save(jax.tree.map(lambda x: x, state),
+                          cfg.ckpt_dir, step)
+            return state, step, self._preempted
+        finally:
+            signal.signal(signal.SIGTERM, old_term)
+            signal.signal(signal.SIGINT, old_int)

@@ -1,0 +1,101 @@
+"""Chunked attention vs naive softmax oracle; MLA decode vs expanded."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GLOBAL_WINDOW, MLAConfig, ModelConfig
+from repro.models.attention import chunked_attention, mla_apply, mla_init
+
+
+def naive_attention(q, k, v, *, q_pos, window, causal=True, softcap=None,
+                    kv_len=None, scale=None):
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = d ** -0.5 if scale is None else scale
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q * scale, kk).astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    tpos = jnp.arange(k.shape[1])
+    delta = q_pos[:, None] - tpos[None, :]
+    ok = jnp.ones_like(delta, bool)
+    if kv_len is not None:
+        ok = ok & (tpos[None, :] < kv_len)
+    if causal:
+        ok = ok & (delta >= 0) & (delta < window)
+    else:
+        ok = ok & (jnp.abs(delta) < window)
+    logits = jnp.where(ok[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, vv.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (6, 1)])
+@pytest.mark.parametrize("window", [GLOBAL_WINDOW, 5])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_chunked_vs_naive(rng, h, kh, window, softcap):
+    b, sq, d = 2, 16, 8
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, sq, kh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, sq, kh, d)).astype(np.float32))
+    pos = jnp.arange(sq)
+    out = chunked_attention(q, k, v, q_positions=pos, window=window,
+                            softcap=softcap, chunk=4)
+    ref = naive_attention(q, k, v, q_pos=pos, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_chunked_decode_with_kv_len(rng):
+    """Single query vs partially-filled cache."""
+    b, h, d, smax = 2, 4, 8, 32
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, smax, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, smax, h, d)).astype(np.float32))
+    pos = jnp.asarray([20])
+    out = chunked_attention(q, k, v, q_positions=pos, window=GLOBAL_WINDOW,
+                            kv_len=21, chunk=8)
+    ref = naive_attention(q, k, v, q_pos=pos, window=GLOBAL_WINDOW, kv_len=21)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_non_causal_cross_attention(rng):
+    b, sq, skv, h, d = 1, 6, 10, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, skv, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, skv, h, d)).astype(np.float32))
+    pos = jnp.arange(sq)
+    out = chunked_attention(q, k, v, q_positions=pos, window=GLOBAL_WINDOW,
+                            causal=False, chunk=4)
+    ref = naive_attention(q, k, v, q_pos=pos, window=GLOBAL_WINDOW,
+                          causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_mla_decode_matches_expanded(rng):
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=32, num_heads=4,
+        num_kv_heads=4, d_ff=64, vocab_size=64, head_dim=16,
+        mla=MLAConfig(kv_lora_rank=16, qk_rope_dim=4, qk_nope_dim=8,
+                      v_head_dim=8),
+        compute_dtype="float32", attn_chunk=8)
+    p, _ = mla_init(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 9
+    x = jnp.asarray(rng.normal(size=(b, s, 32)).astype(np.float32)) * 0.3
+    pos = jnp.arange(s)
+    # expanded over the whole sequence
+    full, _ = mla_apply(p, x, cfg=cfg, positions=pos, window=GLOBAL_WINDOW)
+    # prefill s-1 via absorbed cache then decode the last token
+    cache = dict(c=jnp.zeros((b, s, 16), jnp.float32),
+                 kr=jnp.zeros((b, s, 4), jnp.float32))
+    _, cache = mla_apply(p, x[:, :s - 1], cfg=cfg, positions=pos[:s - 1],
+                         window=GLOBAL_WINDOW, cache=cache, decode_pos=0)
+    last, _ = mla_apply(p, x[:, s - 1:], cfg=cfg, positions=pos[s - 1:],
+                        window=GLOBAL_WINDOW, cache=cache,
+                        decode_pos=s - 1)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-3)

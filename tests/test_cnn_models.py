@@ -1,0 +1,56 @@
+"""Paper workloads (AlexNet/VGG16): MNF inference == dense oracle + stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.costmodel.workloads import analytic_network_stats
+from repro.models.cnn import (ALEXNET, VGG16, cnn_forward, init_cnn_params,
+                              layer_dense_macs, run_with_stats)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("spec,size", [(ALEXNET, 64), (VGG16, 32)])
+def test_mnf_equals_dense(rng, spec, size):
+    s = spec.scaled(size)
+    params = init_cnn_params(KEY, s, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, size, size, s.in_ch)))
+    yd = cnn_forward(params, x, s, mnf=False)
+    ym = cnn_forward(params, x, s, mnf=True)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
+                               rtol=5e-3)
+
+
+def test_stats_invariants(rng):
+    s = VGG16.scaled(32)
+    params = init_cnn_params(KEY, s)
+    x = jax.nn.relu(jax.random.normal(KEY, (1, 32, 32, 3)))
+    _, stats = run_with_stats(params, x, s)
+    assert len(stats) == 16                      # 13 convs + 3 FCs
+    for st in stats:
+        assert st["event_macs"] <= st["dense_macs"] * 1.0001
+        assert 0 <= st["in_events"] <= st["in_elems"]
+        assert 0.0 <= st["out_density"] <= 1.0
+
+
+def test_analytic_matches_measured_dense_macs():
+    """Analytic dense-MAC accounting equals the measured path's counts."""
+    s = VGG16.scaled(32)
+    params = init_cnn_params(KEY, s)
+    x = jax.nn.relu(jax.random.normal(KEY, (1, 32, 32, 3)))
+    _, stats = run_with_stats(params, x, s)
+    ana = analytic_network_stats(s, tuple([1.0] * 16))
+    for m, a in zip(stats, ana):
+        assert m["dense_macs"] == pytest.approx(a["dense_macs"])
+
+
+def test_full_res_dense_macs_vgg16():
+    """VGG16@224 dense conv+fc MACs ≈ 15.5G (sanity vs literature)."""
+    total = sum(layer_dense_macs(VGG16))
+    assert 15.0e9 < total < 16.0e9
+
+
+def test_full_res_dense_macs_alexnet():
+    total = sum(layer_dense_macs(ALEXNET))
+    assert 0.6e9 < total < 1.5e9

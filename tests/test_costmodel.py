@@ -1,0 +1,72 @@
+"""Cost model: paper-claim validation (Fig 1/2/8, Table 4 anchors)."""
+import pytest
+
+from repro.costmodel import (PAPER_TABLE4, TABLE1, compare_dataflows,
+                             mnf_utilization_at_density, network_cycles,
+                             snap_utilization_at_density, table4_row)
+from repro.costmodel.table4 import (ALEXNET_DENSITY_PROFILE,
+                                    ALEXNET_W_DENSITY,
+                                    VGG16_DENSITY_PROFILE, VGG16_W_DENSITY)
+from repro.costmodel.workloads import analytic_network_stats
+from repro.models.cnn import ALEXNET, VGG16
+
+
+def test_fig1_mnf_wins_at_every_density():
+    for shape in TABLE1.values():
+        for d in (1.0, 0.6, 0.3, 0.1):
+            e = compare_dataflows(shape, d, 0.6)
+            assert e["mnf"] == min(e.values())
+
+
+def test_fig1_advantage_grows_with_sparsity():
+    shape = TABLE1["layer1"]
+    gains = []
+    for d in (1.0, 0.6, 0.3, 0.1):
+        e = compare_dataflows(shape, d, 0.6)
+        gains.append(min(e["ws"], e["inp"], e["os"]) / e["mnf"])
+    assert gains == sorted(gains)
+
+
+def test_fig2_mnf_flat_snap_decays():
+    ds = (1.0, 0.6, 0.3, 0.1, 0.05)
+    mnf = [mnf_utilization_at_density(d) for d in ds]
+    snap = [snap_utilization_at_density(d) for d in ds]
+    assert min(mnf) > 0.9                      # ~100% at all densities
+    assert max(mnf) - min(mnf) < 0.08          # flat
+    assert snap[0] > snap[-1] and snap[-1] < 0.5
+
+
+def test_fig8_vgg16_anchors():
+    stats = analytic_network_stats(VGG16, VGG16_DENSITY_PROFILE)
+    mnf = network_cycles(stats, "mnf", d_w=VGG16_W_DENSITY)
+    for design, paper in (("scnn_dense", 19.0), ("scnn", 8.31),
+                          ("sparten", 3.15), ("gospa", 2.57)):
+        ours = network_cycles(stats, design, d_w=VGG16_W_DENSITY) / mnf
+        assert ours == pytest.approx(paper, rel=0.02), design
+
+
+def test_fig8_alexnet_heldout_within_20pct():
+    stats = analytic_network_stats(ALEXNET, ALEXNET_DENSITY_PROFILE)
+    mnf = network_cycles(stats, "mnf", d_w=ALEXNET_W_DENSITY)
+    for design, paper in (("scnn", 7.32), ("sparten", 3.51),
+                          ("gospa", 2.68)):
+        ours = network_cycles(stats, design, d_w=ALEXNET_W_DENSITY) / mnf
+        assert abs(ours - paper) / paper < 0.20, (design, ours)
+
+
+def test_table4_frames_and_energy():
+    for name, spec, prof, wd in (
+            ("vgg16", VGG16, VGG16_DENSITY_PROFILE, VGG16_W_DENSITY),
+            ("alexnet", ALEXNET, ALEXNET_DENSITY_PROFILE, ALEXNET_W_DENSITY)):
+        r = table4_row(analytic_network_stats(spec, prof), w_density=wd)
+        p = PAPER_TABLE4[name]
+        assert r["frames_s"] == pytest.approx(p["frames_s"], rel=0.02)
+        assert r["power_mw"] == pytest.approx(p["power_mw"], rel=0.30)
+        assert r["frames_j"] == pytest.approx(p["frames_j"], rel=0.30)
+
+
+def test_event_macs_scale_with_density():
+    lo = analytic_network_stats(VGG16, tuple([0.1] * 16))
+    hi = analytic_network_stats(VGG16, tuple([0.8] * 16))
+    assert sum(s["event_macs"] for s in hi) > \
+        5 * sum(s["event_macs"] for s in lo)

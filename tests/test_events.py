@@ -1,0 +1,76 @@
+"""Event encoding unit + property tests (paper §4 encoding, TPU-adapted)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (decode_block_events, encode_block_events,
+                        encode_scalar_events, block_occupancy,
+                        pad_to_block_multiple)
+
+
+def test_scalar_events_order_and_count(rng):
+    x = jnp.asarray([0.0, 2.0, 0.0, -3.0, 1.0])
+    ev = encode_scalar_events(x)
+    assert int(ev.count) == 3
+    np.testing.assert_array_equal(np.asarray(ev.indices[:3]), [1, 3, 4])
+    np.testing.assert_allclose(np.asarray(ev.values[:3]), [2.0, -3.0, 1.0])
+    # padding slots carry zeros
+    np.testing.assert_allclose(np.asarray(ev.values[3:]), 0.0)
+
+
+def test_scalar_events_threshold():
+    x = jnp.asarray([0.5, -2.0, 0.1])
+    ev = encode_scalar_events(x, threshold=0.4)
+    assert int(ev.count) == 2
+
+
+def test_block_occupancy():
+    x = jnp.zeros((2, 8)).at[0, 5].set(1.0)
+    occ = block_occupancy(x, blk_k=4)
+    np.testing.assert_array_equal(np.asarray(occ),
+                                  [[False, True], [False, False]])
+
+
+def test_pad_to_block_multiple():
+    x = jnp.ones((3, 5))
+    y = pad_to_block_multiple(x, 4, 0)
+    assert y.shape == (4, 5) and float(y[3].sum()) == 0.0
+    assert pad_to_block_multiple(x, 3, 0) is x
+
+
+def test_padding_idx_repeats_last_live(rng):
+    """Padding slots repeat the last live index (DMA no-op downstream)."""
+    x = np.zeros((4, 32), np.float32)
+    x[:, 8:16] = 1.0                      # only block 1 live (blk_k=8)
+    ev = encode_block_events(jnp.asarray(x), blk_m=4, blk_k=8)
+    assert int(ev.counts[0]) == 1
+    np.testing.assert_array_equal(np.asarray(ev.block_idx[0]), [1, 1, 1, 1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m_blocks=st.integers(1, 4), k_blocks=st.integers(1, 6),
+       blk_m=st.sampled_from([1, 2, 4]), blk_k=st.sampled_from([2, 4, 8]),
+       sparsity=st.floats(0.0, 1.0), seed=st.integers(0, 2 ** 16))
+def test_block_roundtrip_property(m_blocks, k_blocks, blk_m, blk_k, sparsity,
+                                  seed):
+    """decode(encode(x)) == x at threshold 0 for any shape/sparsity."""
+    r = np.random.default_rng(seed)
+    m, k = m_blocks * blk_m, k_blocks * blk_k
+    x = r.normal(size=(m, k)) * (r.random((m, k)) > sparsity)
+    x = jnp.asarray(x.astype(np.float32))
+    ev = encode_block_events(x, blk_m=blk_m, blk_k=blk_k)
+    y = decode_block_events(ev, blk_m=blk_m, blk_k=blk_k, m=m, k=k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), cap=st.integers(1, 6))
+def test_capacity_truncation_keeps_first_events(seed, cap):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(4, 48)).astype(np.float32))
+    full = encode_block_events(x, blk_m=4, blk_k=8)
+    trunc = encode_block_events(x, blk_m=4, blk_k=8, capacity=cap)
+    keep = min(cap, int(full.counts[0]))
+    np.testing.assert_array_equal(np.asarray(trunc.block_idx[0, :keep]),
+                                  np.asarray(full.block_idx[0, :keep]))

@@ -1,0 +1,56 @@
+"""Fire phase + int8 quantization (paper §4.2, §5.2.3 step 2)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FireConfig, calibrate, dequantize, fake_quant, fire,
+                        fire_stats, quantize, requantize_accumulator, QParams)
+
+
+def test_fire_is_relu_at_zero(rng):
+    x = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(fire(x)),
+                               np.maximum(np.asarray(x), 0.0))
+
+
+def test_fire_magnitude_mode(rng):
+    x = jnp.asarray([[-2.0, -0.1, 0.1, 2.0]])
+    y = fire(x, FireConfig(threshold=0.5, magnitude=True))
+    np.testing.assert_allclose(np.asarray(y), [[-2.0, 0.0, 0.0, 2.0]])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_fire_idempotent(seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(8, 8)).astype(np.float32))
+    cfg = FireConfig(threshold=0.3)
+    once = fire(x, cfg)
+    np.testing.assert_allclose(np.asarray(fire(once, cfg)), np.asarray(once))
+
+
+def test_fire_stats_density(rng):
+    x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    _, n, density = fire_stats(x)
+    assert abs(float(density) - 0.5) < 0.15      # ~half positive
+    assert int(n) == int((np.asarray(x) > 0).sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_quantize_roundtrip_error_bound(seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(64,)).astype(np.float32))
+    qp = calibrate(x)
+    err = np.abs(np.asarray(fake_quant(x, qp)) - np.asarray(x))
+    assert err.max() <= float(qp.scale) * 0.5001 + 1e-7
+
+
+def test_requantize_accumulator():
+    in_qp = QParams.symmetric(0.1)
+    w_qp = QParams.symmetric(0.05)
+    out_qp = QParams.symmetric(0.2)
+    acc = jnp.asarray([100, -50, 0], jnp.int32)   # real = acc*0.005
+    q = requantize_accumulator(acc, in_qp, w_qp, out_qp)
+    real = np.asarray(acc) * 0.005
+    np.testing.assert_allclose(np.asarray(q) * 0.2, real, atol=0.1)

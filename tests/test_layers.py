@@ -1,0 +1,91 @@
+"""Layer primitives: norms, RoPE, MLP + MNF exactness for ReLU-family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.layers import (activation_fn, apply_rope, embed_apply,
+                                 embed_init, layer_norm, mlp_apply, mlp_init,
+                                 mnf_sparsify, rms_norm)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rms_norm_unit_scale(rng):
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)) * 10
+    y = rms_norm(x, jnp.zeros(64))
+    rms = np.sqrt((np.asarray(y) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_layer_norm_stats(rng):
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)) * 3 + 2
+    y = np.asarray(layer_norm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-3)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative_phase(rng):
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)).astype(np.float32))
+    pos = jnp.arange(8)
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.asarray([i]))
+        kj = apply_rope(k, jnp.asarray([j]))
+        return float(jnp.sum(qi * kj))
+
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(2, 2), dot_at(6, 6), rtol=1e-4)
+
+
+def test_mnf_mlp_exact_for_relu2():
+    """minitron-style squared-ReLU MLP: MNF enabled == disabled exactly."""
+    cfg = get_config("minitron-8b").reduced()
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    cfg_off = dataclasses.replace(
+        cfg, mnf=dataclasses.replace(cfg.mnf, enabled=False))
+    p, _ = mlp_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model), jnp.float32)
+    np.testing.assert_allclose(np.asarray(mlp_apply(p, x, cfg)),
+                               np.asarray(mlp_apply(p, x, cfg_off)),
+                               atol=1e-6)
+
+
+def test_mnf_threshold_sparsifies():
+    cfg = get_config("qwen2-1.5b").reduced()
+    cfg = dataclasses.replace(
+        cfg, compute_dtype="float32",
+        mnf=dataclasses.replace(cfg.mnf, enabled=True, threshold=0.5))
+    h = jax.random.normal(KEY, (16, cfg.d_ff), jnp.float32) * 0.3
+    out = mnf_sparsify(h, cfg)
+    assert (np.asarray(out) == 0).mean() > 0.5
+    kept = np.abs(np.asarray(out)) > 0
+    np.testing.assert_allclose(np.asarray(out)[kept],
+                               np.asarray(h)[kept])
+
+
+def test_activations():
+    x = jnp.asarray([-1.0, 0.5])
+    np.testing.assert_allclose(np.asarray(activation_fn("relu")(x)),
+                               [0.0, 0.5])
+    np.testing.assert_allclose(np.asarray(activation_fn("relu2")(x)),
+                               [0.0, 0.25])
+
+
+def test_embeddings_tied_and_untied(rng):
+    for arch in ("qwen2-0.5b", "qwen2-1.5b"):
+        cfg = get_config(arch).reduced()
+        p, _ = embed_init(KEY, cfg)
+        toks = jnp.asarray([[1, 2], [3, 4]])
+        e = embed_apply(p, toks, cfg)
+        assert e.shape == (2, 2, cfg.d_model)
+        assert ("unembed" in p) == (not cfg.tie_embeddings)

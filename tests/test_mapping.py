@@ -1,0 +1,39 @@
+"""PE mapping equations (paper §5.3, Eq. 1/2, Fig. 7 worked examples)."""
+from repro.core import (PECapacity, conv_pes, fc_pes, noc_grid,
+                        plan_conv_layer, plan_fc_layer)
+
+CAP = PECapacity(neurons=800, weights=9000)
+
+
+def test_fig7_conv_example():
+    """28×28 IFM pad 1, two 3×3 filters, N=800 ⇒ 2 PEs."""
+    assert conv_pes(28, 28, 3, c_out=2, c_in=1, cap=CAP) == 2
+
+
+def test_fc_example():
+    """1568×128 FC, W=9000 ⇒ 23 PEs (paper §5.3)."""
+    assert fc_pes(1568, 128, CAP) == 23
+
+
+def test_noc_grid():
+    assert noc_grid(23) == (5, 5)
+    assert noc_grid(2) == (2, 2)
+    assert noc_grid(1) == (1, 1)
+
+
+def test_plan_conv_layer():
+    m = plan_conv_layer(28, 28, 3, c_out=2, c_in=1, cap=CAP)
+    assert m.pes == 2 and m.event_fanout == 2
+    assert m.neurons_per_pe == 784
+
+
+def test_weight_bound_dominates():
+    # Huge filter bank: weight SRAM forces the PE count.
+    assert conv_pes(4, 4, 3, c_out=512, c_in=512, cap=CAP) == \
+        -(-3 * 3 * 512 * 512 // 9000)
+
+
+def test_table3_capacity():
+    from repro.core.mapping import PAPER_PE
+    assert PAPER_PE.neurons == int(67.5 * 1024 // 4)
+    assert PAPER_PE.weights == int(691.2 * 1024)

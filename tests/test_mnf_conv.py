@@ -1,0 +1,47 @@
+"""Event-driven conv (Alg. 1): scalar walk and tap-matmul == lax.conv."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (dense_conv2d, scalar_event_conv2d, tap_event_conv2d,
+                        conv_out_size)
+from repro.core.mnf_conv import event_params_for_pixel
+
+
+@pytest.mark.parametrize("stride,padding", [(1, 0), (1, 1), (2, 0), (2, 1),
+                                            (4, 2)])
+def test_tap_event_conv_equals_dense(rng, stride, padding):
+    x = jnp.asarray((rng.normal(size=(2, 9, 9, 3)) *
+                     (rng.random((2, 9, 9, 3)) > 0.5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 5)).astype(np.float32))
+    y = tap_event_conv2d(x, w, stride=stride, padding=padding, blk_m=4,
+                         blk_k=3)
+    ref = dense_conv2d(x, w, stride=stride, padding=padding)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, 0), (1, 1), (2, 1)])
+def test_scalar_event_conv_equals_dense(rng, stride, padding):
+    x = jnp.asarray((rng.normal(size=(6, 6, 2)) *
+                     (rng.random((6, 6, 2)) > 0.5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 2, 4)).astype(np.float32))
+    y = scalar_event_conv2d(x, w, stride=stride, padding=padding)
+    ref = dense_conv2d(x[None], w, stride=stride, padding=padding)[0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+
+def test_event_params_match_paper_example():
+    """§4.1.1 worked example: 4×4 IFM, 3×3 filter, stride 1, pixel (1,1)."""
+    sw, sn, xj, yj, oy0, ox0, dy0, dx0 = event_params_for_pixel(
+        1, 1, k=3, stride=1, padding=0, oy_size=2, ox_size=2)
+    assert int(sw) == 4          # start weight address
+    assert int(sn) == 0          # start neuron address
+    assert int(xj) == 1 and int(yj) == 1
+
+
+def test_5x5_kernel(rng):
+    x = jnp.asarray(rng.normal(size=(1, 11, 11, 2)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 5, 2, 3)).astype(np.float32))
+    y = tap_event_conv2d(x, w, stride=1, padding=2, blk_m=4, blk_k=2)
+    ref = dense_conv2d(x, w, stride=1, padding=2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)

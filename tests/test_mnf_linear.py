@@ -1,0 +1,47 @@
+"""Multiply-phase FC paths: scalar events (Alg. 2) and block events == dense."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (block_event_linear, dense_linear, mnf_linear,
+                        scalar_event_linear)
+from repro.core.fire import FireConfig
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 12), k=st.integers(1, 40), n=st.integers(1, 24),
+       sparsity=st.floats(0, 1), seed=st.integers(0, 2 ** 16))
+def test_block_event_linear_equals_dense(m, k, n, sparsity, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray((r.normal(size=(m, k)) *
+                     (r.random((m, k)) > sparsity)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(k, n)).astype(np.float32))
+    y = block_event_linear(a, w, blk_m=4, blk_k=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense_linear(a, w)),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_scalar_event_linear_equals_dense(rng):
+    a = jnp.asarray((rng.normal(size=(32,)) *
+                     (rng.random(32) > 0.6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(scalar_event_linear(a, w)),
+                               np.asarray(dense_linear(a, w)), atol=1e-5)
+
+
+def test_mnf_linear_fire_phase(rng):
+    """threshold-0 fire == ReLU(dense)."""
+    a = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    y = mnf_linear(a, w, fire_cfg=FireConfig(threshold=0.0), blk_m=4, blk_k=8)
+    ref = jnp.maximum(dense_linear(a, w), 0.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4)
+
+
+def test_bias(rng):
+    a = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(block_event_linear(a, w, b, blk_m=4, blk_k=8)),
+        np.asarray(dense_linear(a, w, b)), atol=2e-4)

@@ -1,0 +1,85 @@
+"""RWKV6 chunked formulation and Mamba chunked scan vs naive recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.models.ssm import (WKV_LOG_DECAY_MIN, mamba_apply, mamba_init,
+                              mamba_step, wkv6_chunked, wkv6_step)
+
+
+def test_wkv6_chunked_equals_ref_within_clamp(rng):
+    b, h, t, d = 2, 2, 40, 8
+    mk = lambda: jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    r, k, v = mk(), mk(), mk()
+    wmin = float(np.exp(WKV_LOG_DECAY_MIN)) + 1e-3
+    w = jnp.asarray(rng.uniform(wmin, 0.999, (b, h, t, d)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32))
+    o, s = wkv6_chunked(r, k, v, w, u, chunk=8)
+    orf, srf = jax.vmap(wkv6_ref, in_axes=(1, 1, 1, 1, 0),
+                        out_axes=(1, 1))(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(srf), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_wkv6_chunk_invariance(rng):
+    b, h, t, d = 1, 2, 24, 8
+    mk = lambda: jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(0.3, 0.99, (b, h, t, d)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32))
+    o1, s1 = wkv6_chunked(r, k, v, w, u, chunk=4)
+    o2, s2 = wkv6_chunked(r, k, v, w, u, chunk=12)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-3)
+
+
+def test_wkv6_step_matches_scan(rng):
+    b, h, t, d = 1, 1, 6, 4
+    mk = lambda: jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(0.4, 0.99, (b, h, t, d)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32))
+    orf, srf = jax.vmap(wkv6_ref, in_axes=(1, 1, 1, 1, 0),
+                        out_axes=(1, 1))(r, k, v, w, u)
+    s = jnp.zeros((b, h, d, d), jnp.float32)
+    for i in range(t):
+        o, s = wkv6_step(r[:, :, i], k[:, :, i], v[:, :, i], w[:, :, i], u, s)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf[:, :, -1]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(srf), atol=1e-4)
+
+
+def _naive_mamba(p, x, cfg):
+    """Step-by-step reference using mamba_step."""
+    b, t, d = x.shape
+    di = d * cfg.ssm.expand
+    conv = jnp.zeros((b, cfg.ssm.conv_dim - 1, di), x.dtype)
+    h = jnp.zeros((b, di, cfg.ssm.state_dim), jnp.float32)
+    outs = []
+    state = (conv, h)
+    for i in range(t):
+        o, state = mamba_step(p, x[:, i:i + 1], cfg, state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), state
+
+
+def test_mamba_chunked_equals_stepwise(rng):
+    cfg = get_config("hymba-1.5b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              ssm=dataclasses.replace(cfg.ssm, scan_chunk=5,
+                                                      expand=1))
+    p, _ = mamba_init(jax.random.PRNGKey(0), cfg, d_inner=cfg.d_model)
+    x = jnp.asarray(rng.normal(size=(2, 13, cfg.d_model)).astype(np.float32)) * 0.3
+    y, (conv, h) = mamba_apply(p, x, cfg)
+    yr, (convr, hr) = _naive_mamba(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(conv), np.asarray(convr), atol=1e-5)
