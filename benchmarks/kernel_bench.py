@@ -1,18 +1,27 @@
-"""Kernel microbenchmarks: event_matmul / fire_compact / wkv6.
+"""Kernel microbenchmarks: event_matmul / fire_compact / wkv6 — plus an
+engine backend-comparison mode.
 
 Wall-times are interpret-mode on CPU (correctness harness, not TPU perf);
 the derived columns carry the *structural* quantities that transfer to TPU:
 fraction of weight-tile DMAs skipped (== event sparsity the kernel rides)
 and the ref/kernel agreement.
+
+``--engine`` sweeps every registered ``EngineConfig.backend`` of
+``engine.linear`` over a sparsity grid, compares the chained
+(fire → EventStream → linear) path against the decode→re-encode round-trip,
+and writes BENCH_engine.json.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.kernels import (event_matmul, event_matmul_ref, fire_compact,
                            fire_compact_ref, wkv6, wkv6_ref)
 
@@ -63,7 +72,84 @@ def rows():
     return out
 
 
+def engine_rows(out_path: str = "BENCH_engine.json"):
+    """Backend comparison through the unified engine API.
+
+    Every backend must agree with the dense oracle at threshold 0 — the
+    sweep records that check alongside wall-time, then times the chained
+    EventStream path vs the dense round-trip between two layers.
+    """
+    rng = np.random.default_rng(0)
+    m, k, n = 32, 256, 128
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    entries = []
+    for sparsity in (0.0, 0.7, 0.95):
+        a = rng.normal(size=(m, k)).astype(np.float32)
+        a *= rng.random((m, k)) > sparsity
+        aj = jnp.asarray(a)
+        ref = a @ np.asarray(w)
+        for name in engine.list_backends("linear"):
+            cfg = engine.EngineConfig(backend=name, blk_m=8, blk_k=32,
+                                      blk_n=32)
+            us, y = _time_thunk(lambda: engine.linear(aj, w, cfg=cfg))
+            entries.append(dict(
+                kind="linear", backend=name, sparsity=sparsity,
+                m=m, k=k, n=n, us=round(us, 1),
+                allclose=bool(np.allclose(np.asarray(y), ref, atol=2e-3))))
+
+    # chained vs round-trip: layer1 -> fire -> layer2
+    w2 = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    a *= rng.random((m, k)) > 0.7
+    aj = jnp.asarray(a)
+    for name in engine.list_backends("linear_events"):
+        cfg = engine.EngineConfig(backend=name, blk_m=8, blk_k=32, blk_n=32)
+        acc = engine.linear(aj, w, cfg=cfg)
+        stream = engine.fire(acc, cfg)
+
+        def chained():
+            return engine.linear(stream.without_dense(), w2, cfg=cfg)
+
+        def roundtrip():
+            return engine.linear(stream.dense(), w2, cfg=cfg)
+
+        us_c, yc = _time_thunk(chained)
+        us_r, yr = _time_thunk(roundtrip)
+        entries.append(dict(
+            kind="chained_vs_roundtrip", backend=name,
+            events=int(stream.num_events), occupancy=float(stream.occupancy()),
+            chained_us=round(us_c, 1), roundtrip_us=round(us_r, 1),
+            speedup=round(us_r / max(us_c, 1e-9), 3),
+            bit_exact=bool(jnp.all(yc == yr))))
+    payload = dict(device=jax.default_backend(),
+                   note="CPU interpret-mode wall-times; structural columns "
+                        "(allclose, events, bit_exact) are what transfers",
+                   entries=entries)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return entries
+
+
+def _time_thunk(fn, reps=3):
+    fn()                                  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", action="store_true",
+                    help="sweep EngineConfig.backend and write "
+                         "BENCH_engine.json")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    if args.engine:
+        for e in engine_rows(args.out):
+            print(json.dumps(e))
+        return
     for name, us, derived in rows():
         print(f"{name},{us:.1f},{derived}")
 

@@ -2,9 +2,11 @@
 
 1. Build a sparse activation map, encode it as block events (the paper's
    compressed storage scheme, TPU-tiled).
-2. Run the multiply phase (event_matmul Pallas kernel, interpret mode) and
-   verify it equals the dense oracle.
-3. Run the fire phase and feed the fired events to a second layer.
+2. Run the multiply phase through the unified engine API (`repro.engine`) —
+   one `EngineConfig` picks the backend — and verify it equals the dense
+   oracle.
+3. Run the fire phase: `engine.fire` returns an `EventStream` that feeds the
+   second layer directly (no decode→re-encode between layers).
 4. Price the whole thing with the paper-calibrated cost model.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -13,9 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import encode_block_events, fire, FireConfig
+from repro import engine
+from repro.core import encode_block_events
 from repro.costmodel import compare_dataflows, ConvShape, mnf_layer_cycles
-from repro.kernels import event_matmul, fire_and_encode
 
 rng = np.random.default_rng(0)
 
@@ -39,16 +41,26 @@ print(f"activation density {np.mean(acts != 0):.2f} -> "
       f"{live:.2f} of weight tiles are event-addressed "
       f"({1 - live:.0%} of DMAs + MXU work skipped)")
 
-# --- multiply phase (Pallas kernel, interpret mode on CPU) ---
-y = event_matmul(jnp.asarray(acts), jnp.asarray(w1), interpret=True)
+# --- the engine: one config, every backend ---
+# backend="auto" resolves to the Pallas kernels on TPU and the pure-jnp
+# block-event path on CPU; force backend="pallas" to exercise the kernel in
+# interpret mode anywhere.
+cfg = engine.EngineConfig(backend="pallas", blk_m=8, blk_k=128, blk_n=128)
+print("engine:", engine.describe(cfg))
+
+# --- multiply phase via the engine ---
+y = engine.linear(jnp.asarray(acts), jnp.asarray(w1), cfg=cfg)
 dense = acts @ w1
 print("multiply phase == dense:", np.allclose(y, dense, atol=1e-3))
 
-# --- fire phase: threshold + re-encode for the next layer ---
-fired, ev2 = fire_and_encode(y, blk_m=8, blk_k=128, interpret=True)
-print(f"fired {float((np.asarray(fired) > 0).mean()):.2f} of outputs "
-      f"to layer 2 ({int(ev2.counts.sum())} block events)")
-y2 = event_matmul(fired, jnp.asarray(w2), interpret=True)
+# --- fire phase: threshold + events for the next layer, *chained* ---
+stream = engine.fire(y, cfg)
+print(f"fired {float((np.asarray(stream.dense()) > 0).mean()):.2f} of outputs "
+      f"to layer 2 ({int(stream.num_events)} block events, "
+      f"occupancy {float(stream.occupancy()):.2f})")
+# the EventStream feeds layer 2's multiply phase directly — activations stay
+# compressed between layers (the paper's end-to-end event dataflow)
+y2 = engine.linear(stream.without_dense(), jnp.asarray(w2), cfg=cfg)
 print("layer-2 output:", y2.shape)
 
 # --- what does this cost on the paper's accelerator? ---

@@ -11,8 +11,10 @@ from repro.core.mapping import (PAPER_PE, LayerMapping, PECapacity, conv_pes,
                                 plan_fc_layer)
 from repro.core.mnf_conv import (conv_out_size, dense_conv2d, mnf_conv2d,
                                  scalar_event_conv2d, tap_event_conv2d)
-from repro.core.mnf_linear import (block_event_linear, dense_linear,
-                                   mnf_linear, scalar_event_linear)
+from repro.core.mnf_linear import (block_event_linear,
+                                   block_event_linear_from_events,
+                                   dense_linear, mnf_linear,
+                                   scalar_event_linear)
 from repro.core.quantize import (QParams, calibrate, dequantize, fake_quant,
                                  quantize, requantize_accumulator)
 
@@ -25,7 +27,8 @@ __all__ = [
     "noc_grid", "plan_conv_layer", "plan_fc_layer",
     "conv_out_size", "dense_conv2d", "mnf_conv2d", "scalar_event_conv2d",
     "tap_event_conv2d",
-    "block_event_linear", "dense_linear", "mnf_linear", "scalar_event_linear",
+    "block_event_linear", "block_event_linear_from_events", "dense_linear",
+    "mnf_linear", "scalar_event_linear",
     "QParams", "calibrate", "dequantize", "fake_quant", "quantize",
     "requantize_accumulator",
 ]

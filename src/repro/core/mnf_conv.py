@@ -24,6 +24,8 @@ row pitch of 4 on a 2×2 OFM; we use the mathematically consistent pitch = OX.)
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -128,17 +130,25 @@ def scalar_event_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
 def tap_event_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
                      padding: int = 0, blk_m: int = 8, blk_k: int = 8,
                      capacity: int | None = None,
-                     threshold: float = 0.0) -> jax.Array:
+                     threshold: float = 0.0,
+                     matmul=None) -> jax.Array:
     """TPU-native event conv: Σ_{dy,dx} shift(x) @ W[dy,dx] via block events.
 
     x: (B, H, W, CI), w: (K, K, CI, CO).  Each tap's (B·OY·OX, CI) activation
     matrix goes through the block-event multiply phase; spatial+channel
     sparsity both shrink the event list.
+
+    ``matmul(a, w_tap)`` overrides the per-tap multiply (the engine's pallas
+    conv backend injects the event_matmul kernel here; default is the
+    pure-jnp block-event path).
     """
     bsz, h, wd, ci = x.shape
     k = w.shape[0]
     s, p = stride, padding
     oy, ox = conv_out_size(h, k, s, p), conv_out_size(wd, k, s, p)
+    if matmul is None:
+        matmul = partial(block_event_linear, blk_m=blk_m, blk_k=blk_k,
+                         capacity=capacity, threshold=threshold)
     xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
     acc = jnp.zeros((bsz * oy * ox, w.shape[-1]),
                     jnp.promote_types(x.dtype, w.dtype))
@@ -149,16 +159,19 @@ def tap_event_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
                                 dx + (ox - 1) * s + 1, ci),
                                (1, s, s, 1))          # (B, OY, OX, CI)
             a = xs.reshape(bsz * oy * ox, ci)
-            acc = acc + block_event_linear(a, w[dy, dx], blk_m=blk_m,
-                                           blk_k=blk_k, capacity=capacity,
-                                           threshold=threshold)
+            acc = acc + matmul(a, w[dy, dx])
     return acc.reshape(bsz, oy, ox, -1)
 
 
 def mnf_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
                padding: int = 0, fire_cfg: FireConfig = FireConfig(),
                blk_m: int = 8, blk_k: int = 8) -> jax.Array:
-    """Full MNF conv layer: tap-event multiply phase + fire phase."""
-    acc = tap_event_conv2d(x, w, stride=stride, padding=padding,
-                           blk_m=blk_m, blk_k=blk_k)
+    """Full MNF conv layer: engine multiply phase + fire phase.
+
+    Deprecation shim — new code should call ``repro.engine.conv2d`` with an
+    :class:`~repro.engine.EngineConfig`.
+    """
+    from repro import engine
+    cfg = engine.EngineConfig(backend="block", blk_m=blk_m, blk_k=blk_k)
+    acc = engine.conv2d(x, w, cfg=cfg, stride=stride, padding=padding)
     return fire(acc, fire_cfg)

@@ -25,7 +25,7 @@ from repro.core import events as ev
 from repro.core.fire import FireConfig, fire
 
 __all__ = ["dense_linear", "scalar_event_linear", "block_event_linear",
-           "mnf_linear"]
+           "block_event_linear_from_events", "mnf_linear"]
 
 
 def dense_linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
@@ -77,29 +77,46 @@ def block_event_linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
     assert k == k2
     xp = ev.pad_to_block_multiple(x, blk_m, 0)
     xp = ev.pad_to_block_multiple(xp, blk_k, 1)
-    mp, kp = xp.shape
-    wp = ev.pad_to_block_multiple(w, blk_k, 0)
     bev = ev.encode_block_events(xp, blk_m=blk_m, blk_k=blk_k,
                                  capacity=capacity, threshold=threshold)
-    g, e = bev.block_idx.shape
-    wb = wp.reshape(kp // blk_k, blk_k, n)
+    y = block_event_linear_from_events(bev, w)[:m]
+    if b is not None:
+        y = y + b
+    return y
+
+
+def block_event_linear_from_events(bev: ev.BlockEvents,
+                                   w: jax.Array) -> jax.Array:
+    """Multiply phase on *pre-encoded* block events (pure-jnp twin of
+    kernels/event_matmul.event_matmul_from_events; the engine's chained-layer
+    path rides this so consecutive layers skip the decode→re-encode
+    round-trip).  Returns (G * blk_m, N); callers slice off row padding.
+    """
+    g, e, bm, bk = bev.values.shape
+    n = w.shape[1]
+    wp = ev.pad_to_block_multiple(w, bk, 0)
+    assert wp.shape[0] == bev.num_k_blocks * bk, (w.shape, bev.num_k_blocks, bk)
+    wb = wp.reshape(bev.num_k_blocks, bk, n)
     # Gather the weight tile named by each event's direct block address and
     # contract: acc[g, bm, n] = sum_e vals[g, e, bm, bk] @ W[idx[g, e], bk, n].
     wtiles = wb[bev.block_idx]                            # (G, E, bk, N)
     slot_live = jnp.arange(e, dtype=jnp.int32)[None, :] < bev.counts[:, None]
     vals = jnp.where(slot_live[:, :, None, None], bev.values, 0)
     acc = jnp.einsum("gemk,gekn->gmn", vals, wtiles)
-    y = acc.reshape(mp, n)[:m]
-    if b is not None:
-        y = y + b
-    return y
+    return acc.reshape(g * bm, n)
 
 
 def mnf_linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
                *, fire_cfg: FireConfig = FireConfig(),
                blk_m: int = 8, blk_k: int = 128,
                capacity: int | None = None) -> jax.Array:
-    """Full MNF FC layer: block-event multiply phase + fire phase."""
-    acc = block_event_linear(x, w, b, blk_m=blk_m, blk_k=blk_k,
-                             capacity=capacity)
+    """Full MNF FC layer: engine multiply phase + fire phase.
+
+    Deprecation shim — new code should call ``repro.engine.linear`` +
+    ``repro.engine.fire`` with one :class:`~repro.engine.EngineConfig`.
+    """
+    from repro import engine
+    cfg = engine.EngineConfig(backend="block", blk_m=blk_m, blk_k=blk_k,
+                              capacity=capacity)
+    acc = engine.linear(x, w, b, cfg)
     return fire(acc, fire_cfg)

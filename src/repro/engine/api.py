@@ -1,0 +1,109 @@
+"""Engine front-door ops (DESIGN.md §3) — the only entry points the model
+stack uses for MNF compute.
+
+Every op takes an :class:`EngineConfig` and dispatches through the backend
+registry; ``linear`` additionally accepts an :class:`EventStream` so
+consecutive MNF layers chain events without a decode→re-encode round-trip
+(the paper's end-to-end event dataflow).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.config import EngineConfig
+from repro.engine.registry import dispatch, get_backend, list_backends
+from repro.engine.stream import EventStream
+
+__all__ = ["matmul", "linear", "conv2d", "fire", "sparsify", "describe"]
+
+_DEFAULT = EngineConfig()
+
+
+def matmul(a: jax.Array, w: jax.Array,
+           cfg: EngineConfig = _DEFAULT) -> jax.Array:
+    """y = a @ W via the configured backend.  a: (M, K), w: (K, N)."""
+    return dispatch("matmul", cfg)(a, w, cfg)
+
+
+def linear(x, w: jax.Array, b: jax.Array | None = None,
+           cfg: EngineConfig = _DEFAULT) -> jax.Array:
+    """y = x @ W (+ b).  ``x`` is a dense (..., K) array or an EventStream.
+
+    EventStream inputs are consumed *directly* by event-native backends
+    (block, pallas) — the chained-layer fast path.  Oracle backends (dense,
+    scalar) decode once; that round-trip is exactly what they exist to
+    measure against.
+    """
+    if isinstance(x, EventStream):
+        name = cfg.resolve_backend()
+        if name in list_backends("linear_events"):
+            return get_backend("linear_events", name)(x, w, b, cfg)
+        return linear(x.dense(), w, b, cfg)
+    lead = x.shape[:-1]
+    y = dispatch("linear", cfg)(x.reshape(-1, x.shape[-1]), w, b, cfg)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def conv2d(x, w: jax.Array, b: jax.Array | None = None,
+           cfg: EngineConfig = _DEFAULT, *, stride: int = 1,
+           padding: int = 0) -> jax.Array:
+    """2-D convolution.  x: (B, H, W, CI) dense (an EventStream is decoded —
+    conv chaining rides the per-tap block encoding instead, DESIGN.md §5),
+    w: (KH, KW, CI, CO)."""
+    if isinstance(x, EventStream):
+        x = x.dense()
+    return dispatch("conv2d", cfg)(x, w, b, cfg, stride, padding)
+
+
+def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
+         keep_dense: bool = True) -> EventStream:
+    """Fire phase: threshold ``acc`` (M, K) and emit next-layer events.
+
+    Returns an EventStream ready to feed ``linear`` with no re-encode.
+    ``keep_dense=False`` drops the dense twin so downstream code provably
+    runs event-only.
+    """
+    # Clamp once here and hand the backend the *same* geometry the stream
+    # records — a custom fire backend must see the tile sizes the consuming
+    # linear will assume.
+    c = cfg.for_width(*acc.shape)
+    fired, bev = dispatch("fire", cfg)(acc, c)
+    stream = EventStream(events=bev, fired=fired if keep_dense else None,
+                         shape=acc.shape, blk_m=c.blk_m, blk_k=c.blk_k)
+    return stream
+
+
+def sparsify(h: jax.Array, cfg: EngineConfig = _DEFAULT) -> jax.Array:
+    """Shape-preserving fire + dead-tile masking on (..., K) activations.
+
+    The pure-XLA image of the MNF multiply phase used inside LM blocks
+    (models/layers.mnf_sparsify): with threshold 0 and a ReLU-family
+    activation it is the identity; with threshold > 0 whole event-free
+    (blk_m, blk_k) tiles are zeroed, matching what the event_matmul kernel
+    skips — HLO FLOPs stay truthful for the dry-run (DESIGN.md §2).
+    """
+    from repro.core.fire import FireConfig
+    from repro.core.fire import fire as jnp_fire
+    from repro.kernels.event_matmul.ref import mask_dead_blocks
+
+    fired = jnp_fire(h, FireConfig(threshold=cfg.threshold,
+                                   magnitude=cfg.magnitude))
+    if cfg.threshold <= 0.0:
+        return fired
+    shp = h.shape
+    h2 = fired.reshape(-1, shp[-1])
+    pad_m = (-h2.shape[0]) % cfg.blk_m
+    pad_k = (-h2.shape[1]) % cfg.blk_k
+    h2 = jnp.pad(h2, ((0, pad_m), (0, pad_k)))
+    h2 = mask_dead_blocks(h2, blk_m=cfg.blk_m, blk_k=cfg.blk_k, threshold=0.0)
+    return h2[:h2.shape[0] - pad_m or None, :shp[-1]].reshape(shp)
+
+
+def describe(cfg: EngineConfig = _DEFAULT) -> dict:
+    """Resolved engine configuration (what serve/dry-run report)."""
+    r = cfg.resolved()
+    return dict(backend=r.backend, interpret=r.interpret, blk_m=r.blk_m,
+                blk_k=r.blk_k, blk_n=r.blk_n, capacity=r.capacity,
+                threshold=r.threshold, magnitude=r.magnitude,
+                device=jax.default_backend())

@@ -1,0 +1,160 @@
+"""Built-in engine backends (DESIGN.md §4).
+
+Registers the repo's four existing execution paths of each MNF op under the
+backend registry, with one uniform signature per op:
+
+  matmul        fn(a, w, cfg)                     a: (M, K), w: (K, N)
+  linear        fn(x, w, b, cfg)                  x: (M, K)
+  linear_events fn(stream, w, b, cfg)             stream: EventStream
+  conv2d        fn(x, w, b, cfg, stride, padding) x: (B, H, W, CI), NHWC/HWIO
+  fire          fn(acc, cfg) -> (fired, BlockEvents)   acc: (M, K)
+
+"dense" and "scalar" are oracles (no / scalar event machinery); "block" is
+the pure-jnp block-event dataflow; "pallas" runs the TPU kernels
+(interpret-mode off-TPU per cfg.resolve_interpret()).  Backends that cannot
+consume an EventStream simply don't register ``linear_events`` — the API
+falls back to a documented decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.fire import FireConfig
+from repro.core.fire import fire as jnp_fire
+from repro.core.mnf_conv import (dense_conv2d, scalar_event_conv2d,
+                                 tap_event_conv2d)
+from repro.core.mnf_linear import (block_event_linear,
+                                   block_event_linear_from_events,
+                                   dense_linear, scalar_event_linear)
+from repro.engine.config import EngineConfig
+from repro.engine.registry import register_backend
+from repro.engine.stream import EventStream
+from repro.kernels.event_matmul.ops import (event_matmul, event_matmul_cfg,
+                                            event_matmul_from_events)
+from repro.kernels.fire_compact.ops import fire_and_encode_cfg
+
+__all__ = []  # registration side effects only
+
+
+def _bias(y: jax.Array, b: jax.Array | None) -> jax.Array:
+    return y if b is None else y + b
+
+
+# ---------------------------------------------------------------------------
+# matmul / linear
+# ---------------------------------------------------------------------------
+
+@register_backend("matmul", "dense")
+def _matmul_dense(a, w, cfg: EngineConfig):
+    return dense_linear(a, w)
+
+
+@register_backend("matmul", "scalar")
+def _matmul_scalar(a, w, cfg: EngineConfig):
+    return jax.vmap(lambda row: scalar_event_linear(row, w))(a)
+
+
+@register_backend("matmul", "block")
+def _matmul_block(a, w, cfg: EngineConfig):
+    c = cfg.for_width(*a.shape)
+    return block_event_linear(a, w, blk_m=c.blk_m, blk_k=c.blk_k,
+                              capacity=c.capacity, threshold=c.threshold)
+
+
+register_backend("matmul", "pallas", event_matmul_cfg)
+
+
+for _name in ("dense", "scalar", "block", "pallas"):
+    def _linear(x, w, b, cfg, _name=_name):
+        from repro.engine.registry import get_backend
+        return _bias(get_backend("matmul", _name)(x, w, cfg), b)
+    register_backend("linear", _name, _linear)
+
+
+# ---------------------------------------------------------------------------
+# linear on a pre-encoded EventStream (the chained, no-round-trip path)
+# ---------------------------------------------------------------------------
+
+@register_backend("linear_events", "block")
+def _linear_events_block(stream, w, b, cfg: EngineConfig):
+    m, k = stream.shape
+    assert w.shape[0] == k, (w.shape, stream.shape)
+    y = block_event_linear_from_events(stream.events, w)
+    return _bias(y[:m], b)
+
+
+@register_backend("linear_events", "pallas")
+def _linear_events_pallas(stream, w, b, cfg: EngineConfig):
+    m, k = stream.shape
+    n = w.shape[1]
+    assert w.shape[0] == k, (w.shape, stream.shape)
+    wp = ev.pad_to_block_multiple(w, stream.blk_k, 0)
+    wp = ev.pad_to_block_multiple(wp, cfg.blk_n, 1)
+    y = event_matmul_from_events(stream.events, wp, blk_n=cfg.blk_n,
+                                 interpret=cfg.resolve_interpret())
+    return _bias(y[:m, :n], b)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@register_backend("conv2d", "dense")
+def _conv2d_dense(x, w, b, cfg: EngineConfig, stride, padding):
+    return dense_conv2d(x, w, stride=stride, padding=padding, b=b)
+
+
+@register_backend("conv2d", "scalar")
+def _conv2d_scalar(x, w, b, cfg: EngineConfig, stride, padding):
+    y = jax.vmap(lambda img: scalar_event_conv2d(
+        img, w, stride=stride, padding=padding))(x)
+    return _bias(y, b)
+
+
+@register_backend("conv2d", "block")
+def _conv2d_block(x, w, b, cfg: EngineConfig, stride, padding):
+    ci = x.shape[-1]
+    c = cfg.replace(blk_k=min(cfg.blk_k, ci))
+    y = tap_event_conv2d(x, w, stride=stride, padding=padding, blk_m=c.blk_m,
+                         blk_k=c.blk_k, capacity=c.capacity,
+                         threshold=c.threshold)
+    return _bias(y, b)
+
+
+@register_backend("conv2d", "pallas")
+def _conv2d_pallas(x, w, b, cfg: EngineConfig, stride, padding):
+    ci = x.shape[-1]
+    c = cfg.replace(blk_k=min(cfg.blk_k, ci))
+    interpret = c.resolve_interpret()
+
+    def tap_matmul(a, wt):
+        return event_matmul(a, wt, blk_m=c.blk_m, blk_k=c.blk_k,
+                            blk_n=c.blk_n, capacity=c.capacity,
+                            threshold=c.threshold, interpret=interpret)
+
+    y = tap_event_conv2d(x, w, stride=stride, padding=padding,
+                         matmul=tap_matmul)
+    return _bias(y, b)
+
+
+# ---------------------------------------------------------------------------
+# fire (threshold + re-encode for the next layer)
+# ---------------------------------------------------------------------------
+
+def _fire_jnp(acc, cfg: EngineConfig):
+    c = cfg.for_width(*acc.shape)
+    fired = jnp_fire(acc, FireConfig(threshold=c.threshold,
+                                     magnitude=c.magnitude))
+    bev = EventStream.encode(fired, blk_m=c.blk_m, blk_k=c.blk_k,
+                             capacity=c.capacity, threshold=0.0,
+                             keep_dense=False).events
+    return fired, bev
+
+
+for _name in ("dense", "scalar", "block"):
+    register_backend("fire", _name, _fire_jnp)
+
+
+register_backend("fire", "pallas", fire_and_encode_cfg)

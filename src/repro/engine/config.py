@@ -1,0 +1,91 @@
+"""EngineConfig — the one knob bundle for MNF compute (DESIGN.md §3).
+
+Every execution-path parameter that used to be scattered across
+``mnf_linear`` / ``tap_event_conv2d`` / ``event_matmul`` / ``fire_and_encode``
+call sites (tile shapes, event capacity, fire threshold, interpret mode,
+backend choice) lives here, so layers pass one object down the stack and
+new backends (sharded, quantized) extend the config instead of every
+signature in the repo.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = ["BACKENDS", "EngineConfig"]
+
+#: Execution backends, in "fidelity order" (see DESIGN.md §4):
+#:   dense  — jnp oracle (no event machinery; the correctness reference)
+#:   scalar — paper-faithful Algorithm 1/2 scalar events (semantics/cost ref)
+#:   block  — pure-jnp block-event dataflow (TPU encoding, XLA execution)
+#:   pallas — the Pallas TPU kernels (interpret-mode on CPU)
+BACKENDS = ("dense", "scalar", "block", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """All knobs of the MNF event pipeline, consolidated.
+
+    backend:    one of BACKENDS or "auto" (resolve per device: pallas on TPU,
+                block elsewhere — DESIGN.md §4).
+    blk_m:      event tile rows (row-group height of the block encoding).
+    blk_k:      event tile K width (VMEM lane width on TPU).
+    blk_n:      output tile width of the Pallas multiply kernel.
+    capacity:   static event-list capacity per row group (None = lossless).
+    threshold:  fire/encode threshold (0.0 == exact for ReLU networks).
+    magnitude:  fire on |a| > threshold (LM generalization) vs a > threshold.
+    interpret:  run Pallas kernels in interpret mode; None = auto (interpret
+                everywhere except real TPU devices).
+    out_dtype:  accumulator/output dtype of the multiply phase.
+    """
+
+    backend: str = "auto"
+    blk_m: int = 8
+    blk_k: int = 128
+    blk_n: int = 128
+    capacity: int | None = None
+    threshold: float = 0.0
+    magnitude: bool = False
+    interpret: bool | None = None
+    out_dtype: str = "float32"
+
+    # NOTE: backend names beyond BACKENDS are allowed — the registry is open
+    # (custom backends register at runtime); unknown names fail at dispatch
+    # with the list of what IS registered.
+
+    # -- resolution ---------------------------------------------------------
+
+    def resolve_backend(self) -> str:
+        """Concrete backend name ("auto" -> per-device policy)."""
+        if self.backend != "auto":
+            return self.backend
+        return "pallas" if jax.default_backend() == "tpu" else "block"
+
+    def resolve_interpret(self) -> bool:
+        """Pallas interpret mode (None -> interpret off TPU only)."""
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def resolved(self) -> "EngineConfig":
+        """Pin backend + interpret to their per-device values."""
+        return dataclasses.replace(self, backend=self.resolve_backend(),
+                                   interpret=self.resolve_interpret())
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- adapters -----------------------------------------------------------
+
+    @classmethod
+    def from_mnf(cls, mnf) -> "EngineConfig":
+        """Build from a ``configs.base.MNFConfig`` (the model-stack knobs)."""
+        return cls(backend="pallas" if mnf.use_pallas else "block",
+                   blk_m=mnf.blk_m, blk_k=mnf.blk_k,
+                   threshold=mnf.threshold, magnitude=mnf.magnitude)
+
+    def for_width(self, m: int, k: int) -> "EngineConfig":
+        """Clamp tile sizes to an (M, K) operand (small CPU test shapes)."""
+        return dataclasses.replace(self, blk_m=min(self.blk_m, max(m, 1)),
+                                   blk_k=min(self.blk_k, max(k, 1)))

@@ -1,0 +1,55 @@
+"""Backend registry — the engine's extension seam (DESIGN.md §4).
+
+Implementations register as ``(op, backend_name) -> fn`` pairs; the engine
+API dispatches through here, so a new backend (sharded, quantized, a new
+kernel generation) is one ``register_backend`` call away from every model in
+the repo — no call-site edits.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+__all__ = ["register_backend", "get_backend", "dispatch", "list_backends",
+           "registered_ops"]
+
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+
+def register_backend(op: str, name: str, fn: Callable | None = None):
+    """Register ``fn`` as backend ``name`` of operation ``op``.
+
+    Usable directly or as a decorator::
+
+        @register_backend("linear", "dense")
+        def _dense_linear(x, w, b, cfg): ...
+
+    Re-registration overwrites (latest wins) so notebooks can hot-swap.
+    """
+    def _put(f: Callable) -> Callable:
+        _REGISTRY[(op, name)] = f
+        return f
+
+    return _put if fn is None else _put(fn)
+
+
+def get_backend(op: str, name: str) -> Callable:
+    try:
+        return _REGISTRY[(op, name)]
+    except KeyError:
+        avail = list_backends(op)
+        raise KeyError(
+            f"no backend {name!r} registered for op {op!r}; "
+            f"available: {avail or '(none)'}") from None
+
+
+def dispatch(op: str, cfg) -> Callable:
+    """Resolve ``cfg.backend`` (incl. "auto") and return the implementation."""
+    return get_backend(op, cfg.resolve_backend())
+
+
+def list_backends(op: str) -> list[str]:
+    return sorted(n for (o, n) in _REGISTRY if o == op)
+
+
+def registered_ops() -> list[str]:
+    return sorted({o for (o, _) in _REGISTRY})

@@ -1,0 +1,87 @@
+"""EventStream — the inter-layer currency of the MNF pipeline (DESIGN.md §5).
+
+The paper's point is that activations stay *compressed between layers*: the
+fire phase of layer L emits events, and the multiply phase of layer L+1
+consumes them directly — no dense round-trip.  ``EventStream`` carries the
+``BlockEvents`` of a fired activation matrix together with the logical shape
+and tile geometry needed to consume (or, for oracle backends, to decode)
+them.  ``engine.fire`` produces one; ``engine.linear`` accepts one.
+
+A pytree (jit/vmap/scan-safe): ``events`` and the optional cached ``fired``
+dense twin are children; shape and tile geometry are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import events as ev
+
+__all__ = ["EventStream"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EventStream:
+    """Block events of a fired (M, K) activation matrix, plus geometry.
+
+    events: BlockEvents over the block-padded matrix (Mp = ceil(M/blk_m),
+            Kp = ceil(K/blk_k) multiples).
+    fired:  optional cached dense twin (M, K) — kept when produced for free
+            (the fire phase computes it anyway); ``None`` after transforms
+            that only exist in event form.
+    shape:  logical (M, K) before padding          [static]
+    blk_m, blk_k: tile geometry of the encoding    [static]
+    """
+
+    events: ev.BlockEvents
+    fired: jax.Array | None
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    blk_m: int = dataclasses.field(metadata=dict(static=True))
+    blk_k: int = dataclasses.field(metadata=dict(static=True))
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def encode(cls, x: jax.Array, *, blk_m: int, blk_k: int,
+               capacity: int | None = None, threshold: float = 0.0,
+               keep_dense: bool = True) -> "EventStream":
+        """Encode a dense (M, K) activation matrix into a stream."""
+        m, k = x.shape
+        xp = ev.pad_to_block_multiple(x, blk_m, 0)
+        xp = ev.pad_to_block_multiple(xp, blk_k, 1)
+        bev = ev.encode_block_events(xp, blk_m=blk_m, blk_k=blk_k,
+                                     capacity=capacity, threshold=threshold)
+        return cls(events=bev, fired=x if keep_dense else None,
+                   shape=(m, k), blk_m=blk_m, blk_k=blk_k)
+
+    # -- views --------------------------------------------------------------
+
+    @property
+    def num_events(self) -> jax.Array:
+        """Total live block events (the quantity the cost model prices)."""
+        return self.events.counts.sum()
+
+    def occupancy(self) -> jax.Array:
+        """Live fraction of the (row-group × K-block) event grid."""
+        g = self.events.block_idx.shape[0]
+        return self.num_events / (g * self.events.num_k_blocks)
+
+    def dense(self) -> jax.Array:
+        """Dense (M, K) view.  Free if the fired twin was kept; otherwise a
+        decode (the round-trip the chained path exists to avoid — oracle
+        backends only)."""
+        if self.fired is not None:
+            return self.fired
+        m, k = self.shape
+        g = self.events.block_idx.shape[0]
+        y = ev.decode_block_events(self.events, blk_m=self.blk_m,
+                                   blk_k=self.blk_k, m=g * self.blk_m,
+                                   k=self.events.num_k_blocks * self.blk_k)
+        return y[:m, :k]
+
+    def without_dense(self) -> "EventStream":
+        """Drop the cached dense twin — events-only from here on (what a
+        chained-layer test uses to prove no densify happens)."""
+        return dataclasses.replace(self, fired=None)

@@ -2,17 +2,21 @@
 
 Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
 (jit'd public wrapper), ref.py (pure-jnp oracle).  Kernels are validated in
-interpret=True mode on CPU; the model stack keeps them behind a
-``use_pallas`` switch so dry-run/roofline lower the pure-XLA path (truthful
-cost_analysis — see DESIGN.md §2).
+interpret=True mode on CPU; the model stack reaches them through the
+``repro.engine`` backend registry (they register as the "pallas" backend of
+each op), so dry-run/roofline lower the pure-XLA path (truthful
+cost_analysis — see DESIGN.md §2 and §4).
 """
-from repro.kernels.event_matmul import (event_matmul, event_matmul_from_events,
+from repro.kernels.event_matmul import (event_matmul, event_matmul_cfg,
+                                        event_matmul_from_events,
                                         event_matmul_ref)
-from repro.kernels.fire_compact import (fire_and_encode, fire_compact,
-                                        fire_compact_ref)
+from repro.kernels.fire_compact import (fire_and_encode, fire_and_encode_cfg,
+                                        fire_compact, fire_compact_ref)
 from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
 from repro.kernels.wkv6 import wkv6, wkv6_ref
 
-__all__ = ["event_matmul", "event_matmul_from_events", "event_matmul_ref",
-           "fire_and_encode", "fire_compact", "fire_compact_ref",
+__all__ = ["event_matmul", "event_matmul_cfg", "event_matmul_from_events",
+           "event_matmul_ref",
+           "fire_and_encode", "fire_and_encode_cfg", "fire_compact",
+           "fire_compact_ref",
            "mamba_scan", "mamba_scan_ref", "wkv6", "wkv6_ref"]

@@ -1,5 +1,6 @@
-from repro.kernels.event_matmul.ops import event_matmul, event_matmul_from_events
+from repro.kernels.event_matmul.ops import (event_matmul, event_matmul_cfg,
+                                            event_matmul_from_events)
 from repro.kernels.event_matmul.ref import event_matmul_ref, mask_dead_blocks
 
-__all__ = ["event_matmul", "event_matmul_from_events", "event_matmul_ref",
-           "mask_dead_blocks"]
+__all__ = ["event_matmul", "event_matmul_cfg", "event_matmul_from_events",
+           "event_matmul_ref", "mask_dead_blocks"]

@@ -3,6 +3,11 @@
 ``event_matmul(a, w)`` = encode block events (repro.core.events) + Pallas
 multiply phase.  On CPU use ``interpret=True`` (kernel body executed in
 Python); on TPU the compiled kernel runs with MXU-aligned tiles.
+
+This module is the "pallas" backend of the engine registry
+(``repro.engine``): ``event_matmul_cfg`` translates an EngineConfig into the
+kernel's knobs, and ``event_matmul_from_events`` is the chained-layer entry
+point that consumes a fired EventStream's BlockEvents with no re-encode.
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ import jax.numpy as jnp
 from repro.core import events as ev
 from repro.kernels.event_matmul.kernel import event_matmul_pallas
 
-__all__ = ["event_matmul", "event_matmul_from_events"]
+__all__ = ["event_matmul", "event_matmul_from_events", "event_matmul_cfg"]
 
 
 def event_matmul_from_events(bev: ev.BlockEvents, w: jax.Array, *,
@@ -51,3 +56,15 @@ def event_matmul(a: jax.Array, w: jax.Array, *, blk_m: int = 8,
                                  capacity=capacity, threshold=threshold)
     y = event_matmul_from_events(bev, wp, blk_n=blk_n, interpret=interpret)
     return y[:m, :n]
+
+
+def event_matmul_cfg(a: jax.Array, w: jax.Array, cfg) -> jax.Array:
+    """EngineConfig adapter (the engine registry's "pallas" matmul backend).
+
+    ``cfg`` is a ``repro.engine.EngineConfig``; tile sizes are clamped to the
+    operand so small CPU test shapes don't pad to full MXU tiles.
+    """
+    c = cfg.for_width(*a.shape)
+    return event_matmul(a, w, blk_m=c.blk_m, blk_k=c.blk_k, blk_n=c.blk_n,
+                        capacity=c.capacity, threshold=c.threshold,
+                        interpret=c.resolve_interpret())

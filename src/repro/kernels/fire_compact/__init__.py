@@ -1,4 +1,6 @@
-from repro.kernels.fire_compact.ops import fire_and_encode, fire_compact
+from repro.kernels.fire_compact.ops import (fire_and_encode,
+                                            fire_and_encode_cfg, fire_compact)
 from repro.kernels.fire_compact.ref import fire_compact_ref
 
-__all__ = ["fire_and_encode", "fire_compact", "fire_compact_ref"]
+__all__ = ["fire_and_encode", "fire_and_encode_cfg", "fire_compact",
+           "fire_compact_ref"]

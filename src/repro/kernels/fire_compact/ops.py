@@ -1,4 +1,9 @@
-"""Jit'd wrapper: fire phase + event re-encoding for the next layer."""
+"""Jit'd wrapper: fire phase + event re-encoding for the next layer.
+
+``fire_and_encode`` is the engine registry's "pallas" fire backend
+(``repro.engine.fire`` wraps its output in an EventStream);
+``fire_and_encode_cfg`` translates an EngineConfig into the kernel knobs.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,7 +14,7 @@ import jax.numpy as jnp
 from repro.core import events as ev
 from repro.kernels.fire_compact.kernel import fire_compact_pallas
 
-__all__ = ["fire_compact", "fire_and_encode"]
+__all__ = ["fire_compact", "fire_and_encode", "fire_and_encode_cfg"]
 
 
 @functools.partial(jax.jit, static_argnames=("blk_m", "blk_k", "threshold",
@@ -44,3 +49,12 @@ def fire_and_encode(acc: jax.Array, *, blk_m: int = 8, blk_k: int = 128,
     bev = ev.encode_block_events(fp, blk_m=blk_m, blk_k=blk_k,
                                  capacity=capacity, threshold=0.0)
     return fired, bev
+
+
+def fire_and_encode_cfg(acc: jax.Array, cfg):
+    """EngineConfig adapter (the engine registry's "pallas" fire backend)."""
+    c = cfg.for_width(*acc.shape)
+    return fire_and_encode(acc, blk_m=c.blk_m, blk_k=c.blk_k,
+                           threshold=c.threshold, magnitude=c.magnitude,
+                           capacity=c.capacity,
+                           interpret=c.resolve_interpret())

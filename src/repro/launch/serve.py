@@ -6,6 +6,7 @@
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -26,11 +27,24 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mnf", action="store_true",
+                    help="enable the MNF fire phase in MLP blocks")
+    ap.add_argument("--mnf-threshold", type=float, default=0.0)
+    ap.add_argument("--mnf-pallas", action="store_true",
+                    help="route the MNF multiply phase through the Pallas "
+                         "engine backend (default: pure-XLA block backend)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    # --mnf-threshold / --mnf-pallas imply --mnf: a sub-flag alone must not
+    # silently benchmark the dense path.
+    if args.mnf or args.mnf_pallas or args.mnf_threshold != 0.0:
+        cfg = dataclasses.replace(
+            cfg, mnf=dataclasses.replace(cfg.mnf, enabled=True,
+                                         threshold=args.mnf_threshold,
+                                         use_pallas=args.mnf_pallas))
     max_len = args.prompt_len + args.gen
     shape = ShapeConfig("serve", max_len, args.batch, "decode")
     ndev = len(jax.devices())
@@ -81,6 +95,8 @@ def main():
         generated=args.gen,
         prefill_s=round(t_prefill, 3),
         decode_tok_per_s=round(args.gen * args.batch / t_decode, 1),
+        mnf=cfg.mnf.enabled,
+        engine=dataclasses.asdict(srv.engine),
         sample_tokens=[int(t) for t in gen[0][:8]])))
 
 

@@ -15,13 +15,25 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.engine import EngineConfig
 from repro.models import transformer as tfm
 from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
 from repro.parallel.sharding import (ShardingRules, make_rules, make_sharder,
                                      named_sharding_tree)
 
 __all__ = ["CellPlan", "plan_cell", "make_train_step", "make_prefill_step",
-           "make_serve_step"]
+           "make_serve_step", "cell_engine_config"]
+
+
+def cell_engine_config(cfg: ModelConfig) -> EngineConfig:
+    """Resolve the MNF engine configuration a cell runs under.
+
+    One seam for every step factory: the model-level MNFConfig maps onto an
+    EngineConfig with backend/interpret pinned per device (DESIGN.md §4), so
+    dry-run reports and serving logs state exactly which multiply-phase
+    implementation the cell uses.
+    """
+    return EngineConfig.from_mnf(cfg.mnf).resolved()
 
 
 @dataclasses.dataclass
@@ -37,6 +49,7 @@ class CellPlan:
     fn: Any                     # jitted step function
     arg_specs: tuple            # ShapeDtypeStructs to lower with
     donate: tuple = ()
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
 
 
 def _dp_spec(mesh: Mesh) -> P:
@@ -126,7 +139,8 @@ def make_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
     oshapes = jax.eval_shape(adamw_init, pshapes)
     return CellPlan(cfg=cfg, shape=shape, mesh=mesh, rules=rules,
                     param_shapes=pshapes, param_shardings=pshard, fn=fn,
-                    arg_specs=(pshapes, oshapes, inputs), donate=(0, 1))
+                    arg_specs=(pshapes, oshapes, inputs), donate=(0, 1),
+                    engine=cell_engine_config(cfg))
 
 
 def _cache_shardings(cfg: ModelConfig, bsz: int, max_len: int, mesh: Mesh,
@@ -158,7 +172,8 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
                  out_shardings=(None, cshard))
     return CellPlan(cfg=cfg, shape=shape, mesh=mesh, rules=rules,
                     param_shapes=pshapes, param_shardings=pshard, fn=fn,
-                    arg_specs=(pshapes, inputs))
+                    arg_specs=(pshapes, inputs),
+                    engine=cell_engine_config(cfg))
 
 
 def make_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
@@ -185,7 +200,7 @@ def make_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
     return CellPlan(cfg=cfg, shape=shape, mesh=mesh, rules=rules,
                     param_shapes=pshapes, param_shardings=pshard, fn=fn,
                     arg_specs=(pshapes, cshapes, inputs, pos_spec),
-                    donate=(1,))
+                    donate=(1,), engine=cell_engine_config(cfg))
 
 
 def plan_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

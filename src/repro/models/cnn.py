@@ -1,9 +1,13 @@
 """The paper's evaluation workloads: AlexNet and VGG16 with MNF inference.
 
-Two execution paths over identical params:
-  * dense  — plain conv/linear + ReLU (the oracle),
-  * mnf    — event-driven: tap-event convs + block-event FC with the fire
-             phase between layers (numerically identical at threshold 0).
+Two execution paths over identical params, both dispatched through
+``repro.engine`` (DESIGN.md §3):
+  * dense  — the engine's dense backend + ReLU (the oracle),
+  * mnf    — event-driven: engine conv2d/linear on the configured event
+             backend, with the fire phase between layers (numerically
+             identical at threshold 0).  Consecutive FC layers chain
+             ``EventStream``s — the fired events of layer L feed layer L+1's
+             multiply phase with no decode→re-encode round-trip.
 
 ``run_with_stats`` instruments every layer with the event counts the cost
 model needs: input events fired (non-zero activations), MACs a dense
@@ -18,11 +22,9 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import events as ev
+from repro import engine
 from repro.core.fire import FireConfig, fire
-from repro.core.mnf_conv import (conv_out_size, dense_conv2d,
-                                 tap_event_conv2d)
-from repro.core.mnf_linear import block_event_linear, dense_linear
+from repro.core.mnf_conv import conv_out_size
 
 __all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
            "init_cnn_params", "cnn_forward", "run_with_stats",
@@ -159,39 +161,63 @@ def layer_dense_macs(spec: CNNSpec):
     return out
 
 
+def _layer_cfg(base: engine.EngineConfig | None, *, mnf: bool,
+               fire_cfg: FireConfig) -> engine.EngineConfig:
+    cfg = base or engine.EngineConfig(backend="block")
+    if not mnf:
+        cfg = cfg.replace(backend="dense")
+    return cfg.replace(threshold=fire_cfg.threshold,
+                       magnitude=fire_cfg.magnitude)
+
+
 def cnn_forward(params, x: jax.Array, spec: CNNSpec, *, mnf: bool = True,
-                fire_cfg: FireConfig = FireConfig()):
-    """x: (B, H, W, C) -> logits (B, classes).  mnf=False is the oracle."""
+                fire_cfg: FireConfig = FireConfig(),
+                engine_cfg: engine.EngineConfig | None = None):
+    """x: (B, H, W, C) -> logits (B, classes).  mnf=False is the oracle.
+
+    All compute dispatches through ``repro.engine``; ``engine_cfg`` picks the
+    backend (default: pure-jnp block events).  On the MNF path consecutive
+    FC layers pass an ``EventStream`` directly — the inter-layer densify
+    only happens where a pool/flatten genuinely needs spatial form.
+    """
+    cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
+    # Event chaining preserves fire semantics only for the plain-threshold
+    # fire decision (no int8 requantization between layers).
+    chain = mnf and not fire_cfg.quantize_to_int8
     for layer, wgt in zip(spec.layers, params):
         if isinstance(layer, ConvSpec):
-            if mnf:
-                acc = tap_event_conv2d(x, wgt, stride=layer.stride,
-                                       padding=layer.padding,
-                                       blk_m=8, blk_k=min(8, x.shape[-1]))
-            else:
-                acc = dense_conv2d(x, wgt, stride=layer.stride,
-                                   padding=layer.padding)
+            xd = _dense(x)
+            ccfg = cfg.replace(blk_k=min(8, xd.shape[-1]), threshold=0.0)
+            acc = engine.conv2d(xd, wgt, cfg=ccfg, stride=layer.stride,
+                                padding=layer.padding)
             x = fire(acc, fire_cfg)                  # fire phase == ReLU @ 0
         elif isinstance(layer, PoolSpec):
             x = jax.lax.reduce_window(
-                x, -jnp.inf, jax.lax.max,
+                _dense(x), -jnp.inf, jax.lax.max,
                 (1, layer.k, layer.k, 1), (1, layer.stride, layer.stride, 1),
                 "VALID")
         elif isinstance(layer, FCSpec):
-            flat = x.reshape(x.shape[0], -1)
-            if mnf:
-                acc = block_event_linear(flat, wgt, blk_m=min(8, flat.shape[0]),
-                                         blk_k=min(128, flat.shape[1]))
-            else:
-                acc = dense_linear(flat, wgt)
+            flat = x if isinstance(x, engine.EventStream) \
+                else x.reshape(x.shape[0], -1)
+            acc = engine.linear(flat, wgt, cfg=cfg.replace(threshold=0.0))
             last = layer is spec.layers[-1]
-            x = acc if last else fire(acc, fire_cfg)
-    return x
+            if last:
+                x = acc
+            elif chain:
+                x = engine.fire(acc, cfg)            # fire -> EventStream
+            else:
+                x = fire(acc, fire_cfg)
+    return _dense(x)
+
+
+def _dense(x) -> jax.Array:
+    return x.dense() if isinstance(x, engine.EventStream) else x
 
 
 def run_with_stats(params, x: jax.Array, spec: CNNSpec,
-                   fire_cfg: FireConfig = FireConfig()):
-    """MNF forward + per-layer event accounting.
+                   fire_cfg: FireConfig = FireConfig(),
+                   engine_cfg: engine.EngineConfig | None = None):
+    """MNF forward + per-layer event accounting (via ``repro.engine``).
 
     Returns (logits, stats list).  Each compute layer's stats:
       dense_macs  — MACs of the dense dataflow
@@ -200,6 +226,8 @@ def run_with_stats(params, x: jax.Array, spec: CNNSpec,
       in_elems    — dense input element count
       out_density — fraction of outputs that fire
     """
+    cfg = _layer_cfg(engine_cfg, mnf=True, fire_cfg=fire_cfg)
+    cfg = cfg.replace(threshold=0.0)     # encode lossless; fire() thresholds
     stats = []
     for layer, wgt in zip(spec.layers, params):
         if isinstance(layer, ConvSpec):
@@ -210,9 +238,8 @@ def run_with_stats(params, x: jax.Array, spec: CNNSpec,
             event_macs = jnp.sum(nz * touched[None, :, :, None]) \
                 * layer.out_ch
             in_events = jnp.sum(nz)
-            acc = tap_event_conv2d(x, wgt, stride=layer.stride,
-                                   padding=layer.padding,
-                                   blk_m=8, blk_k=min(8, c))
+            acc = engine.conv2d(x, wgt, cfg=cfg.replace(blk_k=min(8, c)),
+                                stride=layer.stride, padding=layer.padding)
             oy = conv_out_size(h, layer.k, layer.stride, layer.padding)
             ox = conv_out_size(w, layer.k, layer.stride, layer.padding)
             dense_macs = b * oy * ox * layer.k * layer.k * c * layer.out_ch
@@ -235,8 +262,7 @@ def run_with_stats(params, x: jax.Array, spec: CNNSpec,
             in_events = jnp.sum(nz)
             event_macs = in_events * layer.out                   # Algorithm 2
             dense_macs = flat.shape[0] * flat.shape[1] * layer.out
-            acc = block_event_linear(flat, wgt, blk_m=min(8, flat.shape[0]),
-                                     blk_k=min(128, flat.shape[1]))
+            acc = engine.linear(flat, wgt, cfg=cfg)
             last = layer is spec.layers[-1]
             x = acc if last else fire(acc, fire_cfg)
             stats.append(dict(

@@ -12,8 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.fire import FireConfig, fire
-from repro.kernels.event_matmul.ref import mask_dead_blocks
 from repro.models.param_utils import Init
 
 __all__ = ["rms_norm", "layer_norm", "apply_rope", "activation_fn",
@@ -80,25 +78,16 @@ def mnf_sparsify(h: jax.Array, cfg: ModelConfig) -> jax.Array:
     projection — the MNF multiply phase's *semantics* on the pure-XLA path.
 
     With threshold 0 and a ReLU-family activation this is the identity (the
-    activation already fired), so dense == MNF exactly.  On TPU the
-    event_matmul kernel consumes the same block structure and skips dead
-    weight tiles; here the masked tensor keeps HLO FLOPs truthful (dense
-    upper bound) for the dry-run.
+    activation already fired), so dense == MNF exactly.  Delegates to
+    ``repro.engine.sparsify`` (the engine owns tile geometry and the
+    event_matmul kernel parity — DESIGN.md §3); this wrapper only adapts the
+    model-level MNFConfig.
     """
     m = cfg.mnf
     if not m.enabled:
         return h
-    fired = fire(h, FireConfig(threshold=m.threshold, magnitude=m.magnitude))
-    if m.threshold > 0.0:
-        shp = h.shape
-        h2 = fired.reshape(-1, shp[-1])
-        # zero whole dead tiles (event granularity); pure-jnp twin of kernel
-        pad_m = (-h2.shape[0]) % m.blk_m
-        pad_k = (-h2.shape[1]) % m.blk_k
-        h2 = jnp.pad(h2, ((0, pad_m), (0, pad_k)))
-        h2 = mask_dead_blocks(h2, blk_m=m.blk_m, blk_k=m.blk_k, threshold=0.0)
-        fired = h2[:h2.shape[0] - pad_m or None, :shp[-1]].reshape(shp)
-    return fired
+    from repro import engine
+    return engine.sparsify(h, engine.EngineConfig.from_mnf(m))
 
 
 # ---------------------------------------------------------------------------

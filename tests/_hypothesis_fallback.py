@@ -1,0 +1,109 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+The container images the suite runs in don't always ship hypothesis (see
+requirements-dev.txt for the real dependency).  Rather than hard-failing
+collection, ``conftest.py`` installs this module as ``hypothesis`` when the
+real package is absent.  It implements exactly the surface the tests use —
+``@settings(max_examples=..., deadline=...)``, ``@given(**strategies)``, and
+``st.integers / st.floats / st.sampled_from / st.booleans`` — drawing a
+deterministic (per-test-name seeded) batch of examples instead of doing real
+property search.  No shrinking, no database; just enough to keep the
+property tests meaningful everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sampler, desc: str):
+        self._sampler = sampler
+        self._desc = desc
+
+    def sample(self, rng: np.random.Generator):
+        return self._sampler(rng)
+
+    def __repr__(self):
+        return f"st.{self._desc}"
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)),
+                     f"integers({min_value}, {max_value})")
+
+
+def _floats(min_value: float, max_value: float, **_) -> _Strategy:
+    return _Strategy(lambda r: float(r.uniform(min_value, max_value)),
+                     f"floats({min_value}, {max_value})")
+
+
+def _sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda r: elems[int(r.integers(0, len(elems)))],
+                     f"sampled_from({elems})")
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.integers(0, 2)), "booleans()")
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
+
+
+class HealthCheck:
+    """Placeholder constants (accepted, ignored)."""
+    too_slow = data_too_large = filter_too_much = all = None
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*args, **strategy_kwargs):
+    if args:
+        raise NotImplementedError(
+            "hypothesis fallback shim supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            # Deterministic per-test stream so failures reproduce.
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                example = {k: s.sample(rng)
+                           for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*a, **example, **kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): "
+                        f"{fn.__name__}({example!r})") from e
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution: expose only the remaining (real fixture) params.
+        sig = inspect.signature(fn)
+        left = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=left)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,0 +1,176 @@
+"""Engine API: every registered backend == dense oracle; registry seams."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import engine
+from repro.kernels.event_matmul.ref import mask_dead_blocks
+
+
+def _sparse(r, shape, sparsity):
+    return jnp.asarray((r.normal(size=shape) *
+                        (r.random(shape) > sparsity)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_all_builtin_backends_registered():
+    for op in ("matmul", "linear", "conv2d", "fire"):
+        assert set(engine.BACKENDS) <= set(engine.list_backends(op)), op
+    # the chained path exists for the event-native backends
+    assert set(engine.list_backends("linear_events")) == {"block", "pallas"}
+
+
+def test_register_and_dispatch_custom_backend():
+    calls = []
+
+    def fancy(a, w, cfg):
+        calls.append(a.shape)
+        return a @ w
+
+    engine.register_backend("matmul", "fancy", fancy)
+    try:
+        cfg = engine.EngineConfig(backend="fancy")
+        y = engine.matmul(jnp.ones((2, 3)), jnp.ones((3, 4)), cfg)
+        assert calls == [(2, 3)] and y.shape == (2, 4)
+    finally:
+        engine.registry._REGISTRY.pop(("matmul", "fancy"))
+
+
+def test_unknown_backend_errors():
+    with pytest.raises(KeyError, match="available"):
+        engine.matmul(jnp.ones((2, 2)), jnp.ones((2, 2)),
+                      engine.EngineConfig(backend="nope"))
+    with pytest.raises(KeyError):
+        engine.get_backend("matmul", "nope")
+
+
+def test_auto_resolves_off_tpu():
+    cfg = engine.EngineConfig(backend="auto")
+    assert cfg.resolve_backend() in engine.BACKENDS
+    r = cfg.resolved()
+    assert r.backend != "auto" and r.interpret is not None
+
+
+# ---------------------------------------------------------------------------
+# linear: all backends == dense oracle at threshold 0
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 10), k=st.integers(1, 33), n=st.integers(1, 17),
+       sparsity=st.floats(0, 1), seed=st.integers(0, 2 ** 16))
+def test_linear_backends_agree_with_dense(m, k, n, sparsity, seed):
+    r = np.random.default_rng(seed)
+    a = _sparse(r, (m, k), sparsity)
+    w = jnp.asarray(r.normal(size=(k, n)).astype(np.float32))
+    b = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    ref = np.asarray(a) @ np.asarray(w) + np.asarray(b)
+    for name in engine.list_backends("linear"):
+        cfg = engine.EngineConfig(backend=name, blk_m=4, blk_k=8, blk_n=8)
+        y = engine.linear(a, w, b, cfg)
+        np.testing.assert_allclose(np.asarray(y), ref, atol=2e-3, rtol=2e-3,
+                                   err_msg=f"backend={name}")
+
+
+def test_linear_leading_dims():
+    r = np.random.default_rng(0)
+    x = _sparse(r, (2, 3, 16), 0.5)
+    w = jnp.asarray(r.normal(size=(16, 5)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_m=4, blk_k=8)
+    y = engine.linear(x, w, cfg=cfg)
+    assert y.shape == (2, 3, 5)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x) @ np.asarray(w), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv2d: all backends == dense oracle at threshold 0
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(stride=st.sampled_from([1, 2]), padding=st.sampled_from([0, 1]),
+       sparsity=st.floats(0, 1), seed=st.integers(0, 2 ** 16))
+def test_conv2d_backends_agree_with_dense(stride, padding, sparsity, seed):
+    r = np.random.default_rng(seed)
+    x = _sparse(r, (2, 7, 7, 3), sparsity)
+    w = jnp.asarray(r.normal(size=(3, 3, 3, 4)).astype(np.float32))
+    ref = engine.conv2d(x, w, cfg=engine.EngineConfig(backend="dense"),
+                        stride=stride, padding=padding)
+    for name in engine.list_backends("conv2d"):
+        cfg = engine.EngineConfig(backend=name, blk_m=4, blk_k=8, blk_n=4)
+        y = engine.conv2d(x, w, cfg=cfg, stride=stride, padding=padding)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-3,
+                                   rtol=2e-3, err_msg=f"backend={name}")
+
+
+# ---------------------------------------------------------------------------
+# lossy paths: capacity truncation and threshold > 0
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@pytest.mark.parametrize("cap", [1, 2, 3])
+def test_capacity_truncation_semantics(backend, cap):
+    """With capacity < live blocks, the engine multiplies exactly the kept
+    (first, in ascending K-block order) events — decode(encode_cap(x)) @ w."""
+    r = np.random.default_rng(7)
+    a = jnp.asarray(r.normal(size=(4, 40)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(40, 6)).astype(np.float32))
+    cfg = engine.EngineConfig(backend=backend, blk_m=4, blk_k=8, blk_n=2,
+                              capacity=cap)
+    y = engine.linear(a, w, cfg=cfg)
+    kept = engine.EventStream.encode(a, blk_m=4, blk_k=8, capacity=cap,
+                                     keep_dense=False).dense()
+    ref = np.asarray(kept) @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-4, rtol=1e-4)
+    # and it is genuinely lossy here
+    full = np.asarray(a) @ np.asarray(w)
+    assert not np.allclose(ref, full)
+
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+def test_threshold_drops_dead_tiles(backend):
+    """threshold > 0 must match the dead-tile-masked dense oracle."""
+    r = np.random.default_rng(3)
+    a = np.full((8, 32), 1e-4, np.float32)
+    a[:4, :8] = r.normal(size=(4, 8))
+    w = jnp.asarray(r.normal(size=(32, 6)).astype(np.float32))
+    cfg = engine.EngineConfig(backend=backend, blk_m=4, blk_k=8, blk_n=2,
+                              threshold=1e-2)
+    y = engine.linear(jnp.asarray(a), w, cfg=cfg)
+    masked = mask_dead_blocks(jnp.asarray(a), blk_m=4, blk_k=8,
+                              threshold=1e-2)
+    ref = np.asarray(masked) @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-4, rtol=1e-4)
+    assert not np.allclose(ref, np.asarray(a) @ np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# engine-only model stack (acceptance: no direct kernel calls in models/)
+# ---------------------------------------------------------------------------
+
+def test_models_use_engine_only():
+    import inspect
+
+    import repro.models.cnn as cnn
+    import repro.models.layers as layers
+    for mod in (cnn, layers):
+        src = inspect.getsource(mod)
+        for sym in ("block_event_linear", "tap_event_conv2d",
+                    "event_matmul"):
+            assert f"{sym}(" not in src and f"import {sym}" not in src \
+                and f"{sym}," not in src, \
+                f"{mod.__name__} calls {sym} directly"
+
+
+def test_sparsify_identity_at_zero_threshold():
+    r = np.random.default_rng(0)
+    h = jnp.asarray(r.normal(size=(3, 5, 16)).astype(np.float32))
+    cfg = engine.EngineConfig(threshold=0.0, magnitude=True)
+    np.testing.assert_array_equal(np.asarray(engine.sparsify(h, cfg)),
+                                  np.asarray(h))
+    cfg = engine.EngineConfig(threshold=0.5, magnitude=True, blk_m=4, blk_k=8)
+    y = engine.sparsify(h, cfg)
+    assert float(jnp.mean(y == 0)) > 0.0
