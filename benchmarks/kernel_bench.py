@@ -1,20 +1,29 @@
-"""Kernel microbenchmarks: event_matmul / fire_compact / wkv6 — plus an
-engine backend-comparison mode.
+"""Kernel microbenchmarks: event_matmul / fire_compact / wkv6 — plus engine
+backend-comparison and CNN chained-pipeline modes.
 
 Wall-times are interpret-mode on CPU (correctness harness, not TPU perf);
 the derived columns carry the *structural* quantities that transfer to TPU:
-fraction of weight-tile DMAs skipped (== event sparsity the kernel rides)
-and the ref/kernel agreement.
+fraction of weight-tile DMAs skipped (== event sparsity the kernel rides),
+per-boundary decode counts, and the ref/kernel agreement.
+
+Every jitted path is warmed before timing: the first call's wall-time is
+recorded separately as ``compile_us`` (trace+compile dominated) and the
+steady-state ``us`` is averaged over post-warm reps — compile time never
+pollutes the trajectory numbers.
 
 ``--engine`` sweeps every registered ``EngineConfig.backend`` of
-``engine.linear`` over a sparsity grid, compares the chained
-(fire → EventStream → linear) path against the decode→re-encode round-trip,
-and writes BENCH_engine.json.
+``engine.linear`` over a sparsity grid and compares the chained
+(fire → EventStream → linear) path against the decode→re-encode round-trip.
+``--cnn-chain`` times the event-resident CNN pipeline (one jit per network,
+conv streams chained end-to-end) against the per-layer round-trip twin and
+records where each path densifies.  Both write/merge BENCH_engine.json.
+``--smoke`` runs a fast subset of everything (CI anti-rot).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -26,16 +35,24 @@ from repro.kernels import (event_matmul, event_matmul_ref, fire_compact,
                            fire_compact_ref, wkv6, wkv6_ref)
 
 
-def _timeit(fn, *args, reps=3, **kw):
-    fn(*args, **kw)                       # compile/warm
+def _time_thunk(fn, reps=3):
+    """(steady_us, compile_us, out): first call timed apart as compile."""
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    compile_us = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args, **kw)
+        out = fn()
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6, out
+    return (time.perf_counter() - t0) / reps * 1e6, compile_us, out
 
 
-def rows():
+def _timeit(fn, *args, reps=3, **kw):
+    return _time_thunk(lambda: fn(*args, **kw), reps=reps)
+
+
+def rows(reps=3):
     rng = np.random.default_rng(0)
     out = []
     for sparsity in (0.0, 0.7, 0.95):
@@ -43,19 +60,19 @@ def rows():
         a = rng.normal(size=(m, k)).astype(np.float32)
         a *= rng.random((m, k)) > sparsity
         w = rng.normal(size=(k, n)).astype(np.float32)
-        us, y = _timeit(event_matmul, jnp.asarray(a), jnp.asarray(w),
-                        blk_m=8, blk_k=128, interpret=True)
+        us, cus, y = _timeit(event_matmul, jnp.asarray(a), jnp.asarray(w),
+                             blk_m=8, blk_k=128, interpret=True, reps=reps)
         yr = event_matmul_ref(jnp.asarray(a), jnp.asarray(w), blk_m=8,
                               blk_k=128)
         live = np.abs(a.reshape(8, 8, 8, 128)).max(axis=(1, 3)) > 0
-        out.append((f"event_matmul_s{sparsity}", us,
+        out.append((f"event_matmul_s{sparsity}", us, cus,
                     f"tiles_skipped={1-live.mean():.2f};"
                     f"allclose={np.allclose(y, yr, atol=1e-4)}"))
     acc = jnp.asarray(rng.normal(size=(128, 1024)), jnp.float32)
-    us, (f, occ) = _timeit(fire_compact, acc, blk_m=8, blk_k=128,
-                           interpret=True)
+    us, cus, (f, occ) = _timeit(fire_compact, acc, blk_m=8, blk_k=128,
+                                interpret=True, reps=reps)
     fr, occr = fire_compact_ref(acc, blk_m=8, blk_k=128)
-    out.append(("fire_compact", us,
+    out.append(("fire_compact", us, cus,
                 f"allclose={np.allclose(f, fr)};"
                 f"occ_match={np.array_equal(np.asarray(occ), np.asarray(occr))}"))
     b, h, t, d = 2, 2, 64, 32
@@ -63,16 +80,38 @@ def rows():
                 for _ in range(3))
     w6 = jnp.asarray(rng.uniform(0.3, 0.99, (b, h, t, d)), jnp.float32)
     u = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
-    us, (o, s) = _timeit(wkv6, r, k2, v, w6, u, chunk=16, interpret=True)
+    us, cus, (o, s) = _timeit(wkv6, r, k2, v, w6, u, chunk=16,
+                              interpret=True, reps=reps)
     orf, srf = jax.vmap(wkv6_ref, in_axes=(1, 1, 1, 1, 0),
                         out_axes=(1, 1))(r, k2, v, w6, u)
-    out.append(("wkv6_chunked", us,
+    out.append(("wkv6_chunked", us, cus,
                 f"allclose={np.allclose(o, orf, atol=1e-4)};"
                 f"state_ok={np.allclose(s, srf, atol=1e-4)}"))
     return out
 
 
-def engine_rows(out_path: str = "BENCH_engine.json"):
+def _merge_bench(out_path: str, entries, drop_kinds: set):
+    """Read-modify-write BENCH_engine.json: each mode owns its entry kinds."""
+    payload = dict(device=jax.default_backend(),
+                   note="CPU interpret-mode wall-times; structural columns "
+                        "(allclose, events, bit_exact, boundaries) are what "
+                        "transfers; compile_us is trace+compile, us is "
+                        "steady-state",
+                   entries=[])
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+            payload["entries"] = [e for e in prev.get("entries", [])
+                                  if e.get("kind") not in drop_kinds]
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload["entries"].extend(entries)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def engine_rows(out_path: str = "BENCH_engine.json", reps=3):
     """Backend comparison through the unified engine API.
 
     Every backend must agree with the dense oracle at threshold 0 — the
@@ -91,10 +130,11 @@ def engine_rows(out_path: str = "BENCH_engine.json"):
         for name in engine.list_backends("linear"):
             cfg = engine.EngineConfig(backend=name, blk_m=8, blk_k=32,
                                       blk_n=32)
-            us, y = _time_thunk(lambda: engine.linear(aj, w, cfg=cfg))
+            us, cus, y = _time_thunk(
+                lambda: engine.linear(aj, w, cfg=cfg), reps=reps)
             entries.append(dict(
                 kind="linear", backend=name, sparsity=sparsity,
-                m=m, k=k, n=n, us=round(us, 1),
+                m=m, k=k, n=n, us=round(us, 1), compile_us=round(cus, 1),
                 allclose=bool(np.allclose(np.asarray(y), ref, atol=2e-3))))
 
     # chained vs round-trip: layer1 -> fire -> layer2
@@ -113,30 +153,109 @@ def engine_rows(out_path: str = "BENCH_engine.json"):
         def roundtrip():
             return engine.linear(stream.dense(), w2, cfg=cfg)
 
-        us_c, yc = _time_thunk(chained)
-        us_r, yr = _time_thunk(roundtrip)
+        us_c, cus_c, yc = _time_thunk(chained, reps=reps)
+        us_r, cus_r, yr = _time_thunk(roundtrip, reps=reps)
         entries.append(dict(
             kind="chained_vs_roundtrip", backend=name,
             events=int(stream.num_events), occupancy=float(stream.occupancy()),
             chained_us=round(us_c, 1), roundtrip_us=round(us_r, 1),
+            chained_compile_us=round(cus_c, 1),
+            roundtrip_compile_us=round(cus_r, 1),
             speedup=round(us_r / max(us_c, 1e-9), 3),
             bit_exact=bool(jnp.all(yc == yr))))
-    payload = dict(device=jax.default_backend(),
-                   note="CPU interpret-mode wall-times; structural columns "
-                        "(allclose, events, bit_exact) are what transfers",
-                   entries=entries)
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
+    _merge_bench(out_path, entries, {"linear", "chained_vs_roundtrip"})
     return entries
 
 
-def _time_thunk(fn, reps=3):
-    fn()                                  # compile/warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6, out
+def _smoke_spec():
+    """Tiny 2-conv + pool + FC net: exercises every chain seam in seconds."""
+    from repro.models.cnn import CNNSpec, ConvSpec, FCSpec, PoolSpec
+    return CNNSpec("mini", 8, 3,
+                   (ConvSpec(8, 3, 1, 1), ConvSpec(8, 3, 1, 1), PoolSpec(),
+                    FCSpec(10)))
+
+
+def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
+                   batch=2, reps=3):
+    """Event-resident CNN pipeline vs per-layer round-trip (one jit each).
+
+    Chained and round-trip paths use identical compute geometry
+    (pixel-granular conv tiles) so logits are bit-exact; the difference is
+    purely the inter-layer format: events stay resident across conv
+    boundaries vs a dense materialize + re-encode at every boundary.
+    ``boundaries`` records where each compiled graph densifies.
+    """
+    from repro.models.cnn import (ALEXNET, ConvSpec, FCSpec, PoolSpec,
+                                  cnn_forward, init_cnn_params,
+                                  make_cnn_pipeline)
+
+    nets = [(_smoke_spec(), 8)] if smoke else [(ALEXNET, 64)]
+    entries = []
+    for spec, size in nets:
+        spec = spec.scaled(size)
+        n_conv = sum(isinstance(l, ConvSpec) for l in spec.layers)
+        n_fc = sum(isinstance(l, FCSpec) for l in spec.layers)
+        n_pool = sum(isinstance(l, PoolSpec) for l in spec.layers)
+        params = init_cnn_params(jax.random.PRNGKey(0), spec,
+                                 weight_sparsity=0.5)
+        x = jax.nn.relu(jax.random.normal(
+            jax.random.PRNGKey(1), (batch, size, size, spec.in_ch)))
+
+        # Structural accounting: abstract-trace one forward per mode
+        # (records fire at trace time — eval_shape runs no numeric work).
+        counts = {}
+        for mode, chain in (("chained", True), ("roundtrip", False)):
+            with engine.trace_dispatch() as recs:
+                jax.eval_shape(
+                    lambda p, xx, chain=chain: cnn_forward(
+                        p, xx, spec, mnf=True, chain=chain), params, x)
+            counts[mode] = dict(
+                events_only_boundaries=sum(
+                    1 for r in recs if r.get("chained")),
+                decodes=sum(1 for r in recs if r.get("decode")),
+                fallback_decodes=sum(
+                    1 for r in recs if r.get("fallback_decode")))
+
+        fns = {mode: make_cnn_pipeline(spec, mnf=True, chain=chain,
+                                       donate=False)
+               for mode, chain in (("chained", True), ("roundtrip", False))}
+        # Compile each once (compile_us), then time the two pipelines in
+        # interleaved rounds and keep the per-mode minimum: back-to-back
+        # rep loops right after compilation catch allocator/scheduler
+        # transients on share-capped CPUs and can swing 2-3x.
+        compile_us, best, out = {}, {}, {}
+        for mode, fn in fns.items():
+            t0 = time.perf_counter()
+            out[mode] = fn(params, x)
+            jax.block_until_ready(out[mode])
+            compile_us[mode] = (time.perf_counter() - t0) * 1e6
+            best[mode] = float("inf")
+        for _ in range(max(reps, 3)):
+            for mode, fn in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(params, x))
+                best[mode] = min(best[mode],
+                                 (time.perf_counter() - t0) * 1e6)
+        us_c, cus_c, yc = best["chained"], compile_us["chained"], \
+            out["chained"]
+        us_r, cus_r, yr = best["roundtrip"], compile_us["roundtrip"], \
+            out["roundtrip"]
+        entries.append(dict(
+            kind="cnn_chain", net=spec.name, input_size=size, batch=batch,
+            chained_us=round(us_c, 1), roundtrip_us=round(us_r, 1),
+            chained_compile_us=round(cus_c, 1),
+            roundtrip_compile_us=round(cus_r, 1),
+            speedup=round(us_r / max(us_c, 1e-9), 3),
+            bit_exact=bool(jnp.all(yc == yr)),
+            boundaries=dict(
+                conv=n_conv, fc=n_fc, pool=n_pool,
+                # chained: only pool boundaries densify (cached twin + the
+                # permitted re-encode); roundtrip: every boundary is dense.
+                chained=dict(densify=n_pool, **counts["chained"]),
+                roundtrip=dict(densify=n_conv + n_fc + n_pool - 1,
+                               **counts["roundtrip"]))))
+    _merge_bench(out_path, entries, {"cnn_chain"})
+    return entries
 
 
 def main():
@@ -144,14 +263,33 @@ def main():
     ap.add_argument("--engine", action="store_true",
                     help="sweep EngineConfig.backend and write "
                          "BENCH_engine.json")
+    ap.add_argument("--cnn-chain", action="store_true",
+                    help="time the event-resident CNN pipeline vs the "
+                         "per-layer round-trip (cnn_chain entries)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: 1-rep kernel microbench + engine "
+                         "sweep + mini-net cnn chain — keeps every "
+                         "benchmark path from rotting")
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args()
+    if args.smoke:
+        for name, us, compile_us, derived in rows(reps=1):
+            print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")
+        for e in engine_rows(args.out, reps=1):
+            print(json.dumps(e))
+        for e in cnn_chain_rows(args.out, smoke=True, reps=1):
+            print(json.dumps(e))
+        return
     if args.engine:
         for e in engine_rows(args.out):
             print(json.dumps(e))
+    if args.cnn_chain:
+        for e in cnn_chain_rows(args.out):
+            print(json.dumps(e))
+    if args.engine or args.cnn_chain:
         return
-    for name, us, derived in rows():
-        print(f"{name},{us:.1f},{derived}")
+    for name, us, compile_us, derived in rows():
+        print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")
 
 
 if __name__ == "__main__":

@@ -16,8 +16,8 @@ import numpy as np
 
 from repro.costmodel import network_cycles, table4_row
 from repro.data import cnn_batch
-from repro.models.cnn import ALEXNET, VGG16, cnn_forward, init_cnn_params, \
-    run_with_stats
+from repro.models.cnn import ALEXNET, VGG16, init_cnn_params, \
+    make_cnn_pipeline, run_with_stats
 
 
 def main():
@@ -33,6 +33,9 @@ def main():
     spec = (ALEXNET if args.net == "alexnet" else VGG16).scaled(args.size)
     params = init_cnn_params(jax.random.PRNGKey(0), spec,
                              weight_sparsity=args.weight_sparsity)
+    # One compiled oracle per network (DESIGN.md §5.1); the MNF path is the
+    # single-jit instrumented pipeline inside run_with_stats.
+    ref_fn = make_cnn_pipeline(spec, mnf=False, donate=False)
 
     total_events = total_dense = total_event_macs = 0.0
     t0 = time.time()
@@ -40,7 +43,7 @@ def main():
         x = cnn_batch(args.batch, args.size, spec.in_ch, step,
                       activation_sparsity=args.act_sparsity)
         logits, stats = run_with_stats(params, x, spec)
-        ref = cnn_forward(params, x, spec, mnf=False)
+        ref = ref_fn(params, x)
         assert np.allclose(np.asarray(logits), np.asarray(ref), atol=5e-3,
                            rtol=5e-3), "event path diverged from dense!"
         preds = np.argmax(np.asarray(logits), -1)

@@ -34,6 +34,7 @@ __all__ = [
     "block_occupancy",
     "encode_block_events",
     "decode_block_events",
+    "gather_row_groups",
     "pad_to_block_multiple",
 ]
 
@@ -176,6 +177,25 @@ def encode_block_events(a: jax.Array, *, blk_m: int, blk_k: int,
     vals = jnp.where(slot_live[:, :, None, None], vals, 0)
     return BlockEvents(values=vals, block_idx=idx, counts=counts,
                        num_k_blocks=nkb)
+
+
+def gather_row_groups(bev: BlockEvents, idx: jax.Array,
+                      live: jax.Array) -> BlockEvents:
+    """Re-index row groups of ``bev`` — the event-domain image of a row gather.
+
+    idx:  (G',) int32   source row-group index per output group
+    live: (G',) bool    False marks groups with no source (e.g. a conv tap
+                        reading outside the padded feature map); their counts
+                        are zeroed so consumers treat them as event-free.
+
+    This is what lets a conv tap consume the *fired feature-map events* of
+    the previous layer directly: a shifted spatial slice of a pixel-granular
+    (blk_m == 1) encoding is exactly a gather of its row groups — no dense
+    map is ever materialized (DESIGN.md §5).
+    """
+    counts = jnp.where(live, bev.counts[idx], 0)
+    return BlockEvents(values=bev.values[idx], block_idx=bev.block_idx[idx],
+                       counts=counts, num_k_blocks=bev.num_k_blocks)
 
 
 def decode_block_events(ev: BlockEvents, *, blk_m: int, blk_k: int,

@@ -21,12 +21,13 @@ Typical use::
     s = engine.fire(engine.linear(x, w1, cfg=cfg), cfg)   # layer 1
     y = engine.linear(s, w2, cfg=cfg)                     # layer 2, chained
 """
-from repro.engine.api import (conv2d, describe, fire, linear, matmul,
-                              sparsify)
+from repro.engine.api import (conv2d, describe, fire, fire_conv, linear,
+                              matmul, sparsify)
 from repro.engine.config import BACKENDS, EngineConfig
 from repro.engine.registry import (dispatch, get_backend, list_backends,
                                    register_backend, registered_ops)
 from repro.engine.stream import EventStream
+from repro.engine.trace import trace_dispatch
 
 import repro.engine.backends  # noqa: F401  (registers built-in backends)
 
@@ -34,5 +35,6 @@ __all__ = [
     "BACKENDS", "EngineConfig", "EventStream",
     "register_backend", "get_backend", "dispatch", "list_backends",
     "registered_ops",
-    "matmul", "linear", "conv2d", "fire", "sparsify", "describe",
+    "matmul", "linear", "conv2d", "fire", "fire_conv", "sparsify", "describe",
+    "trace_dispatch",
 ]

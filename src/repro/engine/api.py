@@ -11,11 +11,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.engine import trace
 from repro.engine.config import EngineConfig
 from repro.engine.registry import dispatch, get_backend, list_backends
 from repro.engine.stream import EventStream
 
-__all__ = ["matmul", "linear", "conv2d", "fire", "sparsify", "describe"]
+__all__ = ["matmul", "linear", "conv2d", "fire", "fire_conv", "sparsify",
+           "describe"]
 
 _DEFAULT = EngineConfig()
 
@@ -38,7 +40,9 @@ def linear(x, w: jax.Array, b: jax.Array | None = None,
     if isinstance(x, EventStream):
         name = cfg.resolve_backend()
         if name in list_backends("linear_events"):
+            trace.record(op="linear", backend=name, chained=True)
             return get_backend("linear_events", name)(x, w, b, cfg)
+        trace.record(op="linear", backend=name, fallback_decode=True)
         return linear(x.dense(), w, b, cfg)
     lead = x.shape[:-1]
     y = dispatch("linear", cfg)(x.reshape(-1, x.shape[-1]), w, b, cfg)
@@ -48,11 +52,26 @@ def linear(x, w: jax.Array, b: jax.Array | None = None,
 def conv2d(x, w: jax.Array, b: jax.Array | None = None,
            cfg: EngineConfig = _DEFAULT, *, stride: int = 1,
            padding: int = 0) -> jax.Array:
-    """2-D convolution.  x: (B, H, W, CI) dense (an EventStream is decoded —
-    conv chaining rides the per-tap block encoding instead, DESIGN.md §5),
-    w: (KH, KW, CI, CO)."""
+    """2-D convolution.  x: (B, H, W, CI) dense or a conv ``EventStream``
+    (NHWC ``logical_shape``, pixel-granular encoding — what ``fire_conv``
+    emits), w: (KH, KW, CI, CO).
+
+    Conv streams are consumed *directly* by event-native backends via
+    ``conv2d_events`` — layer L's fired feature-map events feed layer L+1's
+    k·k taps as row-group gathers, with no dense map materialized
+    (DESIGN.md §5).  Backends without a registered ``conv2d_events`` decode
+    once; that fallback is visible to ``trace_dispatch``.
+    """
     if isinstance(x, EventStream):
-        x = x.dense()
+        name = cfg.resolve_backend()
+        if (x.logical_shape is not None and len(x.logical_shape) == 4
+                and name in list_backends("conv2d_events")):
+            trace.record(op="conv2d", backend=name, chained=True)
+            return get_backend("conv2d_events", name)(x, w, b, cfg, stride,
+                                                      padding)
+        trace.record(op="conv2d", backend=name, fallback_decode=True)
+        x = x.dense_nhwc() if (x.logical_shape is not None
+                               and len(x.logical_shape) == 4) else x.dense()
     return dispatch("conv2d", cfg)(x, w, b, cfg, stride, padding)
 
 
@@ -72,6 +91,26 @@ def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
     stream = EventStream(events=bev, fired=fired if keep_dense else None,
                          shape=acc.shape, blk_m=c.blk_m, blk_k=c.blk_k)
     return stream
+
+
+def fire_conv(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
+              keep_dense: bool = True) -> EventStream:
+    """Fire phase over a conv accumulator (B, OY, OX, CO) -> conv stream.
+
+    The emitted stream is pixel-granular (blk_m == 1, K = the channel axis)
+    so the next conv layer's taps can consume it as row-group gathers —
+    ``engine.conv2d`` accepts it with no re-encode.  ``keep_dense=False``
+    drops the fired twin so a conv→conv boundary provably runs event-only;
+    keep it when the consumer is a pool (the pool reads the twin for free —
+    the fire phase computes it anyway).
+    """
+    b, h, w, c = acc.shape
+    acc2 = acc.reshape(b * h * w, c)
+    c2 = cfg.replace(blk_m=1).for_width(*acc2.shape)
+    fired, bev = dispatch("fire_conv", cfg)(acc2, c2)
+    return EventStream(events=bev, fired=fired if keep_dense else None,
+                       shape=acc2.shape, blk_m=1, blk_k=c2.blk_k,
+                       logical_shape=(b, h, w, c))
 
 
 def sparsify(h: jax.Array, cfg: EngineConfig = _DEFAULT) -> jax.Array:

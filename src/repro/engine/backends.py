@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from repro.core import events as ev
 from repro.core.fire import FireConfig
 from repro.core.fire import fire as jnp_fire
-from repro.core.mnf_conv import (dense_conv2d, scalar_event_conv2d,
-                                 tap_event_conv2d)
+from repro.core.mnf_conv import (conv_out_size, dense_conv2d,
+                                 scalar_event_conv2d, tap_event_conv2d)
 from repro.core.mnf_linear import (block_event_linear,
                                    block_event_linear_from_events,
                                    dense_linear, scalar_event_linear)
@@ -115,8 +115,7 @@ def _conv2d_scalar(x, w, b, cfg: EngineConfig, stride, padding):
 
 @register_backend("conv2d", "block")
 def _conv2d_block(x, w, b, cfg: EngineConfig, stride, padding):
-    ci = x.shape[-1]
-    c = cfg.replace(blk_k=min(cfg.blk_k, ci))
+    c = cfg.for_conv(x.shape[-1])
     y = tap_event_conv2d(x, w, stride=stride, padding=padding, blk_m=c.blk_m,
                          blk_k=c.blk_k, capacity=c.capacity,
                          threshold=c.threshold)
@@ -125,8 +124,7 @@ def _conv2d_block(x, w, b, cfg: EngineConfig, stride, padding):
 
 @register_backend("conv2d", "pallas")
 def _conv2d_pallas(x, w, b, cfg: EngineConfig, stride, padding):
-    ci = x.shape[-1]
-    c = cfg.replace(blk_k=min(cfg.blk_k, ci))
+    c = cfg.for_conv(x.shape[-1])
     interpret = c.resolve_interpret()
 
     def tap_matmul(a, wt):
@@ -137,6 +135,78 @@ def _conv2d_pallas(x, w, b, cfg: EngineConfig, stride, padding):
     y = tap_event_conv2d(x, w, stride=stride, padding=padding,
                          matmul=tap_matmul)
     return _bias(y, b)
+
+
+# ---------------------------------------------------------------------------
+# conv2d on a pre-encoded conv EventStream (the event-resident path):
+# layer L's fired feature-map events feed layer L+1's k·k taps as row-group
+# gathers — the dense map is never materialized (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+def _tap_row_map(stream, k: int, stride: int, padding: int):
+    """Yield (dy, dx, idx, live) per tap: the row-group gather that realizes
+    the shifted spatial slice of the tap decomposition in the event domain.
+
+    For output pixel (b, oy, ox), tap (dy, dx) reads input pixel
+    (iy, ix) = (oy·s + dy − p, ox·s + dx − p); ``live`` masks taps that fall
+    in the zero padding border (no source group — no events).
+    """
+    bsz, h, wd, _ = stream.logical_shape
+    oy = conv_out_size(h, k, stride, padding)
+    ox = conv_out_size(wd, k, stride, padding)
+    bi = jnp.arange(bsz, dtype=jnp.int32)[:, None, None]
+    oyi = jnp.arange(oy, dtype=jnp.int32)[None, :, None]
+    oxi = jnp.arange(ox, dtype=jnp.int32)[None, None, :]
+    for dy in range(k):
+        for dx in range(k):
+            iy = oyi * stride + dy - padding
+            ix = oxi * stride + dx - padding
+            live = (iy >= 0) & (iy < h) & (ix >= 0) & (ix < wd)
+            idx = (bi * h + jnp.clip(iy, 0, h - 1)) * wd \
+                + jnp.clip(ix, 0, wd - 1)
+            live = jnp.broadcast_to(live, (bsz, oy, ox)).reshape(-1)
+            idx = jnp.broadcast_to(idx, (bsz, oy, ox)).reshape(-1)
+            yield dy, dx, idx, live
+
+
+def _conv2d_events(stream, w, b, cfg: EngineConfig, stride, padding,
+                   tap_matmul):
+    """Shared event-resident conv: Σ_taps tap_matmul(gathered events, W_tap)."""
+    assert stream.blk_m == 1, \
+        "conv streams are pixel-granular (emit with engine.fire_conv)"
+    bsz, h, wd, ci = stream.logical_shape
+    k, _, ci2, co = w.shape
+    assert ci == ci2, (stream.logical_shape, w.shape)
+    oy = conv_out_size(h, k, stride, padding)
+    ox = conv_out_size(wd, k, stride, padding)
+    acc = jnp.zeros((bsz * oy * ox, co),
+                    jnp.promote_types(stream.events.values.dtype, w.dtype))
+    for dy, dx, idx, live in _tap_row_map(stream, k, stride, padding):
+        tap = ev.gather_row_groups(stream.events, idx, live)
+        acc = acc + tap_matmul(tap, w[dy, dx])
+    return _bias(acc.reshape(bsz, oy, ox, co), b)
+
+
+@register_backend("conv2d_events", "block")
+def _conv2d_events_block(stream, w, b, cfg: EngineConfig, stride, padding):
+    return _conv2d_events(stream, w, b, cfg, stride, padding,
+                          block_event_linear_from_events)
+
+
+@register_backend("conv2d_events", "pallas")
+def _conv2d_events_pallas(stream, w, b, cfg: EngineConfig, stride, padding):
+    co = w.shape[-1]
+    blk_n = min(cfg.blk_n, max(co, 1))
+    interpret = cfg.resolve_interpret()
+
+    def tap_matmul(tap, wt):
+        wp = ev.pad_to_block_multiple(wt, stream.blk_k, 0)
+        wp = ev.pad_to_block_multiple(wp, blk_n, 1)
+        y = event_matmul_from_events(tap, wp, blk_n=blk_n,
+                                     interpret=interpret)
+        return y[:, :co]
+
+    return _conv2d_events(stream, w, b, cfg, stride, padding, tap_matmul)
 
 
 # ---------------------------------------------------------------------------
@@ -158,3 +228,15 @@ for _name in ("dense", "scalar", "block"):
 
 
 register_backend("fire", "pallas", fire_and_encode_cfg)
+
+
+# fire_conv shares the fire implementations — ``engine.fire_conv`` hands the
+# backend the flattened (B·OY·OX, CO) accumulator with a pixel-granular
+# (blk_m == 1) config.  A separate registry op keeps the seam open for a
+# backend that fuses the conv fire phase differently (e.g. an NHWC-native
+# Pallas kernel).
+for _name in ("dense", "scalar", "block"):
+    register_backend("fire_conv", _name, _fire_jnp)
+
+
+register_backend("fire_conv", "pallas", fire_and_encode_cfg)

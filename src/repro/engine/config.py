@@ -89,3 +89,12 @@ class EngineConfig:
         """Clamp tile sizes to an (M, K) operand (small CPU test shapes)."""
         return dataclasses.replace(self, blk_m=min(self.blk_m, max(m, 1)),
                                    blk_k=min(self.blk_k, max(k, 1)))
+
+    def for_conv(self, ci: int) -> "EngineConfig":
+        """Clamp the K tile to a conv's input-channel depth.
+
+        Conv taps contract over CI, so a ``blk_k`` wider than CI would only
+        pad; every conv backend applies this one clamp (the shared twin of
+        ``for_width`` for the channel axis).
+        """
+        return dataclasses.replace(self, blk_k=min(self.blk_k, max(ci, 1)))

@@ -7,6 +7,12 @@ consumes them directly — no dense round-trip.  ``EventStream`` carries the
 and tile geometry needed to consume (or, for oracle backends, to decode)
 them.  ``engine.fire`` produces one; ``engine.linear`` accepts one.
 
+One stream type is the currency for both FC and conv layers: a conv feature
+map rides the same flattened (M, K) = (B·H·W, C) event view, with the
+batched NHWC ``logical_shape`` carried alongside so ``conv2d`` can address
+row groups spatially (pixel-granular ``blk_m == 1`` encoding — each row
+group is one pixel, so a shifted tap slice is a gather of groups).
+
 A pytree (jit/vmap/scan-safe): ``events`` and the optional cached ``fired``
 dense twin are children; shape and tile geometry are static.
 """
@@ -15,8 +21,10 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import events as ev
+from repro.engine import trace
 
 __all__ = ["EventStream"]
 
@@ -33,6 +41,9 @@ class EventStream:
             that only exist in event form.
     shape:  logical (M, K) before padding          [static]
     blk_m, blk_k: tile geometry of the encoding    [static]
+    logical_shape: batched pre-flatten shape       [static] — (B, H, W, C)
+            for conv feature maps (rows are raster-order pixels, K is the
+            channel axis); ``None`` for plain (M, K) FC activations.
     """
 
     events: ev.BlockEvents
@@ -40,6 +51,8 @@ class EventStream:
     shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     blk_m: int = dataclasses.field(metadata=dict(static=True))
     blk_k: int = dataclasses.field(metadata=dict(static=True))
+    logical_shape: tuple | None = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     # -- construction -------------------------------------------------------
 
@@ -56,6 +69,23 @@ class EventStream:
         return cls(events=bev, fired=x if keep_dense else None,
                    shape=(m, k), blk_m=blk_m, blk_k=blk_k)
 
+    @classmethod
+    def encode_nhwc(cls, x: jax.Array, *, blk_k: int,
+                    capacity: int | None = None, threshold: float = 0.0,
+                    keep_dense: bool = True) -> "EventStream":
+        """Encode a dense (B, H, W, C) feature map into a conv stream.
+
+        Rows of the event view are raster-order pixels (blk_m == 1 — the
+        granularity ``conv2d`` needs to gather shifted tap slices in the
+        event domain); K is the channel axis.
+        """
+        b, h, w, c = x.shape
+        flat = x.reshape(b * h * w, c)
+        s = cls.encode(flat, blk_m=1, blk_k=min(blk_k, max(c, 1)),
+                       capacity=capacity, threshold=threshold,
+                       keep_dense=keep_dense)
+        return dataclasses.replace(s, logical_shape=(b, h, w, c))
+
     # -- views --------------------------------------------------------------
 
     @property
@@ -64,22 +94,40 @@ class EventStream:
         return self.events.counts.sum()
 
     def occupancy(self) -> jax.Array:
-        """Live fraction of the (row-group × K-block) event grid."""
+        """Live fraction of the (row-group × K-block) event grid.
+
+        A degenerate stream (0-row or 0-column logical shape) has an empty
+        grid; its occupancy is defined as 0.0 rather than 0/0.
+        """
         g = self.events.block_idx.shape[0]
-        return self.num_events / (g * self.events.num_k_blocks)
+        denom = g * self.events.num_k_blocks
+        if denom == 0:
+            return jnp.zeros((), jnp.float32)
+        return self.num_events / denom
 
     def dense(self) -> jax.Array:
         """Dense (M, K) view.  Free if the fired twin was kept; otherwise a
         decode (the round-trip the chained path exists to avoid — oracle
-        backends only)."""
+        backends only).  Real decodes are visible to ``trace_dispatch``."""
         if self.fired is not None:
             return self.fired
+        trace.record(op="stream.dense", decode=True, shape=self.shape)
         m, k = self.shape
         g = self.events.block_idx.shape[0]
         y = ev.decode_block_events(self.events, blk_m=self.blk_m,
                                    blk_k=self.blk_k, m=g * self.blk_m,
                                    k=self.events.num_k_blocks * self.blk_k)
         return y[:m, :k]
+
+    def dense_nhwc(self) -> jax.Array:
+        """Dense (B, H, W, C) view of a conv stream (``logical_shape`` set).
+
+        Same cost semantics as :meth:`dense`: free via the cached fired twin,
+        a recorded decode otherwise.
+        """
+        assert self.logical_shape is not None and \
+            len(self.logical_shape) == 4, self.logical_shape
+        return self.dense().reshape(self.logical_shape)
 
     def without_dense(self) -> "EventStream":
         """Drop the cached dense twin — events-only from here on (what a

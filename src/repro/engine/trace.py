@@ -1,0 +1,49 @@
+"""Dispatch tracing — make the engine's fallbacks visible (DESIGN.md §5.1).
+
+The engine API silently degrades in two places: a backend without a
+registered ``linear_events`` / ``conv2d_events`` op decodes the incoming
+``EventStream`` (the round-trip the chained path exists to avoid), and
+``EventStream.dense()`` on a twin-less stream is a real decode.  Both used to
+be invisible.  ``trace_dispatch()`` collects a record per dispatch so tests
+and benchmarks can assert *where* densification happens::
+
+    with engine.trace_dispatch() as records:
+        y = engine.linear(stream, w, cfg=cfg)
+    assert not any(r.get("fallback_decode") for r in records)
+
+Records are appended at Python dispatch time, which under ``jax.jit`` means
+trace time: the counts describe the compiled graph's structure (how many
+decode ops it contains), which is exactly the per-boundary accounting the
+benchmarks report.  Nesting is supported; each context sees every record
+emitted while it is active.
+"""
+from __future__ import annotations
+
+import contextlib
+
+__all__ = ["record", "trace_dispatch"]
+
+_SINKS: list[list] = []
+
+
+def record(**fields) -> None:
+    """Append one dispatch record to every active ``trace_dispatch`` context.
+
+    No-op (and allocation-free) when no context is active — safe to call on
+    every hot-path dispatch.
+    """
+    if _SINKS:
+        rec = dict(fields)
+        for sink in _SINKS:
+            sink.append(rec)
+
+
+@contextlib.contextmanager
+def trace_dispatch():
+    """Context manager yielding the list of dispatch records."""
+    sink: list = []
+    _SINKS.append(sink)
+    try:
+        yield sink
+    finally:
+        _SINKS.remove(sink)

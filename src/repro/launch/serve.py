@@ -1,7 +1,15 @@
-"""Batched serving driver: prefill + decode loop with a KV cache.
+"""Batched serving driver: LM prefill + decode loop, or event-resident CNN.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+CNN mode serves batched image requests through the single-jit MNF pipeline
+(models/cnn.make_cnn_pipeline — activations stay event-resident between conv
+layers, DESIGN.md §5/§5.1).  MNF is the default; ``--dense`` serves the
+oracle path instead:
+
+  PYTHONPATH=src python -m repro.launch.serve --cnn alexnet --cnn-size 64 \
+      --batch 4 --batches 8
 """
 from __future__ import annotations
 
@@ -15,8 +23,55 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.steps import (make_cnn_serve_step, make_prefill_step,
+                                make_serve_step)
 from repro.models import init_params
+
+
+def serve_cnn(args) -> None:
+    """Batched CNN inference through the compiled event-resident pipeline."""
+    from repro import engine
+    from repro.core.fire import FireConfig
+    from repro.models.cnn import ALEXNET, VGG16, init_cnn_params
+
+    spec = (ALEXNET if args.cnn == "alexnet" else VGG16).scaled(args.cnn_size)
+    ecfg = engine.EngineConfig(
+        backend="pallas" if args.mnf_pallas else "auto",
+        threshold=args.mnf_threshold)
+    plan = make_cnn_serve_step(spec, args.batch, mnf=not args.dense,
+                               engine_cfg=ecfg,
+                               fire_cfg=FireConfig(
+                                   threshold=args.mnf_threshold))
+
+    key = jax.random.PRNGKey(0)
+    params = init_cnn_params(key, spec, weight_sparsity=args.weight_sparsity)
+
+    def batch_at(step: int) -> jax.Array:
+        # Fresh buffer per request — the pipeline donates its input.
+        return jax.nn.relu(jax.random.normal(
+            jax.random.fold_in(key, step),
+            (args.batch, spec.input_size, spec.input_size, spec.in_ch)))
+
+    t0 = time.time()
+    logits = plan.fn(params, batch_at(0))
+    jax.block_until_ready(logits)
+    t_compile = time.time() - t0
+
+    t0 = time.time()
+    preds = []
+    for step in range(1, args.batches + 1):
+        logits = plan.fn(params, batch_at(step))
+        preds.append(jnp.argmax(logits, axis=-1))
+    jax.block_until_ready(preds[-1])
+    t_serve = time.time() - t0
+
+    print(json.dumps(dict(
+        net=spec.name, input_size=spec.input_size, batch=args.batch,
+        batches=args.batches, mnf=not args.dense,
+        compile_s=round(t_compile, 3),
+        frames_per_s=round(args.batches * args.batch / max(t_serve, 1e-9), 2),
+        engine=dataclasses.asdict(plan.engine),
+        sample_preds=[int(t) for t in preds[-1][:4]])))
 
 
 def main():
@@ -28,12 +83,33 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mnf", action="store_true",
-                    help="enable the MNF fire phase in MLP blocks")
+                    help="enable the MNF fire phase (LM MLP blocks / CNN "
+                         "event pipeline)")
     ap.add_argument("--mnf-threshold", type=float, default=0.0)
     ap.add_argument("--mnf-pallas", action="store_true",
                     help="route the MNF multiply phase through the Pallas "
                          "engine backend (default: pure-XLA block backend)")
+    ap.add_argument("--cnn", choices=("alexnet", "vgg16"),
+                    help="serve a CNN workload through the single-jit "
+                         "event-resident pipeline instead of an LM")
+    ap.add_argument("--cnn-size", type=int, default=64,
+                    help="CNN input resolution (224 = paper scale)")
+    ap.add_argument("--batches", type=int, default=8,
+                    help="CNN mode: number of batched requests to serve")
+    ap.add_argument("--dense", action="store_true",
+                    help="CNN mode: serve the dense oracle path instead of "
+                         "MNF events (the default)")
+    ap.add_argument("--weight-sparsity", type=float, default=0.5,
+                    help="CNN mode: unstructured weight pruning density")
     args = ap.parse_args()
+
+    if args.cnn:
+        if args.dense and (args.mnf or args.mnf_pallas
+                           or args.mnf_threshold != 0.0):
+            ap.error("--dense conflicts with --mnf/--mnf-pallas/"
+                     "--mnf-threshold (CNN mode serves MNF by default)")
+        serve_cnn(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

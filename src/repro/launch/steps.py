@@ -21,8 +21,9 @@ from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
 from repro.parallel.sharding import (ShardingRules, make_rules, make_sharder,
                                      named_sharding_tree)
 
-__all__ = ["CellPlan", "plan_cell", "make_train_step", "make_prefill_step",
-           "make_serve_step", "cell_engine_config"]
+__all__ = ["CellPlan", "CNNCellPlan", "plan_cell", "make_train_step",
+           "make_prefill_step", "make_serve_step", "make_cnn_serve_step",
+           "cell_engine_config"]
 
 
 def cell_engine_config(cfg: ModelConfig) -> EngineConfig:
@@ -201,6 +202,49 @@ def make_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
                     param_shapes=pshapes, param_shardings=pshard, fn=fn,
                     arg_specs=(pshapes, cshapes, inputs, pos_spec),
                     donate=(1,), engine=cell_engine_config(cfg))
+
+
+@dataclasses.dataclass
+class CNNCellPlan:
+    """Serving plan for a CNN workload (the paper's inference driver).
+
+    The whole network is one compiled pipeline (models/cnn.make_cnn_pipeline,
+    DESIGN.md §5.1): ``fn(params, images) -> logits`` with the image buffer
+    donated — batched requests ride a single jit per (network, batch shape).
+    """
+
+    spec: Any                   # models.cnn.CNNSpec
+    batch: int
+    fn: Any                     # jitted whole-network pipeline
+    arg_specs: tuple            # (param ShapeDtypeStructs, image SDS)
+    donate: tuple = (1,)
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+
+
+def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
+                        engine_cfg: EngineConfig | None = None,
+                        fire_cfg=None, donate: bool = True) -> CNNCellPlan:
+    """Compile the event-resident CNN pipeline for batched serving.
+
+    ``spec`` is a ``models.cnn.CNNSpec`` (already ``.scaled(...)`` to the
+    serving resolution).  One jit covers conv→fire→…→FC; the MNF path keeps
+    activations event-resident between conv layers (DESIGN.md §5).
+    """
+    from repro.core.fire import FireConfig
+    from repro.models import cnn as cnn_mod
+
+    fire_cfg = fire_cfg or FireConfig()
+    ecfg = (engine_cfg or EngineConfig(backend="auto")).resolved()
+    fn = cnn_mod.make_cnn_pipeline(spec, mnf=mnf, fire_cfg=fire_cfg,
+                                   engine_cfg=ecfg, donate=donate)
+    pshapes = jax.eval_shape(
+        lambda k: cnn_mod.init_cnn_params(k, spec),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, spec.input_size, spec.input_size, spec.in_ch), jnp.float32)
+    return CNNCellPlan(spec=spec, batch=batch, fn=fn,
+                       arg_specs=(pshapes, x_spec),
+                       donate=(1,) if donate else (), engine=ecfg)
 
 
 def plan_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

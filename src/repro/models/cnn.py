@@ -3,13 +3,19 @@
 Two execution paths over identical params, both dispatched through
 ``repro.engine`` (DESIGN.md §3):
   * dense  — the engine's dense backend + ReLU (the oracle),
-  * mnf    — event-driven: engine conv2d/linear on the configured event
-             backend, with the fire phase between layers (numerically
-             identical at threshold 0).  Consecutive FC layers chain
-             ``EventStream``s — the fired events of layer L feed layer L+1's
-             multiply phase with no decode→re-encode round-trip.
+  * mnf    — event-resident: one ``EventStream`` threads the whole network.
+             Each conv's fire phase emits a pixel-granular conv stream
+             (``engine.fire_conv``) that the next conv's taps consume as
+             row-group gathers — the dense feature map is never
+             materialized between conv layers.  Pools read the fire phase's
+             cached dense twin (computed for free) and the pooled map is
+             re-encoded — the only densify point on the chain (DESIGN.md
+             §5).  FC layers chain ``EventStream``s as before.
 
-``run_with_stats`` instruments every layer with the event counts the cost
+``make_cnn_pipeline`` wraps the whole forward in a **single jitted
+function** with a donated input buffer — one jit per network, no per-layer
+dispatch or retracing (DESIGN.md §5.1).  ``run_with_stats`` rides the same
+single-jit body and instruments every layer with the event counts the cost
 model needs: input events fired (non-zero activations), MACs a dense
 accelerator would do, and MACs the MNF multiply phase actually does
 (Σ_events touched_outputs × C_out — Algorithm 1's walk length).
@@ -17,7 +23,7 @@ accelerator would do, and MACs the MNF multiply phase actually does
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +31,11 @@ import jax.numpy as jnp
 from repro import engine
 from repro.core.fire import FireConfig, fire
 from repro.core.mnf_conv import conv_out_size
+from repro.models.layers import max_pool_nhwc
 
 __all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
-           "init_cnn_params", "cnn_forward", "run_with_stats",
-           "layer_dense_macs"]
+           "init_cnn_params", "cnn_forward", "make_cnn_pipeline",
+           "run_with_stats", "layer_dense_macs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,48 +177,177 @@ def _layer_cfg(base: engine.EngineConfig | None, *, mnf: bool,
                        magnitude=fire_cfg.magnitude)
 
 
-def cnn_forward(params, x: jax.Array, spec: CNNSpec, *, mnf: bool = True,
-                fire_cfg: FireConfig = FireConfig(),
-                engine_cfg: engine.EngineConfig | None = None):
-    """x: (B, H, W, C) -> logits (B, classes).  mnf=False is the oracle.
+def _dense(x) -> jax.Array:
+    return x.dense() if isinstance(x, engine.EventStream) else x
 
-    All compute dispatches through ``repro.engine``; ``engine_cfg`` picks the
-    backend (default: pure-jnp block events).  On the MNF path consecutive
-    FC layers pass an ``EventStream`` directly — the inter-layer densify
-    only happens where a pool/flatten genuinely needs spatial form.
+
+def _dense_nhwc(x) -> jax.Array:
+    return x.dense_nhwc() if isinstance(x, engine.EventStream) else x
+
+
+def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
+             cfg: engine.EngineConfig, chain: bool, stats: list | None = None):
+    """The one traced forward body behind ``cnn_forward`` /
+    ``make_cnn_pipeline`` / ``run_with_stats``.
+
+    ``chain=True`` threads one EventStream through conv→fire→conv→…→FC:
+    conv→conv boundaries stay event-only (the fired twin is dropped), pools
+    read the cached twin and re-encode — the chain's only densify point.
+    ``chain=False`` is the per-layer round-trip twin (dense at every
+    boundary, identical compute geometry) that the chained path is measured
+    against.  ``stats`` (a list to append to) requests per-layer event
+    accounting; instrumentation reads cached dense twins, never decodes.
     """
-    cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
-    # Event chaining preserves fire semantics only for the plain-threshold
-    # fire decision (no int8 requantization between layers).
-    chain = mnf and not fire_cfg.quantize_to_int8
-    for layer, wgt in zip(spec.layers, params):
+    layers = spec.layers
+    # Conv tiles are pixel-granular (blk_m == 1) in both modes so the
+    # chained and round-trip paths multiply identical tiles in identical
+    # order — bit-for-bit equality, not just allclose (DESIGN.md §5).
+    conv_base = cfg.replace(blk_m=1, blk_k=min(8, cfg.blk_k))
+    for i, (layer, wgt) in enumerate(zip(layers, params)):
+        nxt = layers[i + 1] if i + 1 < len(layers) else None
         if isinstance(layer, ConvSpec):
-            xd = _dense(x)
-            ccfg = cfg.replace(blk_k=min(8, xd.shape[-1]), threshold=0.0)
-            acc = engine.conv2d(xd, wgt, cfg=ccfg, stride=layer.stride,
+            ci = x.logical_shape[-1] if isinstance(x, engine.EventStream) \
+                else x.shape[-1]
+            ccfg = conv_base.replace(threshold=0.0).for_conv(ci)
+            if stats is not None:
+                xd = _dense_nhwc(x)
+                b, h, w, c = xd.shape
+                nz = (jnp.abs(xd) > 0).astype(jnp.float32)
+                touched = _touched_outputs(h, w, layer.k, layer.stride,
+                                           layer.padding)
+                stats.append(dict(
+                    event_macs=jnp.sum(
+                        nz * touched[None, :, :, None].astype(jnp.float32))
+                    * layer.out_ch,
+                    in_events=jnp.sum(nz)))
+            acc = engine.conv2d(x, wgt, cfg=ccfg, stride=layer.stride,
                                 padding=layer.padding)
-            x = fire(acc, fire_cfg)                  # fire phase == ReLU @ 0
+            if chain:
+                # Drop the dense twin at conv→conv boundaries (events-only);
+                # keep it when a pool/FC consumes it, or for instrumentation.
+                keep = stats is not None or not isinstance(nxt, ConvSpec)
+                x = engine.fire_conv(acc, conv_base, keep_dense=keep)
+            else:
+                x = fire(acc, fire_cfg)              # fire phase == ReLU @ 0
+            if stats is not None:
+                stats[-1]["out_density"] = jnp.mean(
+                    jnp.abs(_dense_nhwc(x)) > 0)
         elif isinstance(layer, PoolSpec):
-            x = jax.lax.reduce_window(
-                _dense(x), -jnp.inf, jax.lax.max,
-                (1, layer.k, layer.k, 1), (1, layer.stride, layer.stride, 1),
-                "VALID")
+            pooled = max_pool_nhwc(_dense_nhwc(x), layer.k, layer.stride)
+            if chain and isinstance(nxt, ConvSpec):
+                # Re-encode after the pool — the chain's only densify point.
+                x = engine.EventStream.encode_nhwc(
+                    pooled, blk_k=conv_base.blk_k,
+                    keep_dense=stats is not None)
+            else:
+                x = pooled
         elif isinstance(layer, FCSpec):
+            if isinstance(x, engine.EventStream) \
+                    and x.logical_shape is not None:
+                # A conv stream cannot re-tile to the FC's (B, H·W·C) view;
+                # both workloads pool before FC so the twin is cached.
+                x = x.dense_nhwc()
             flat = x if isinstance(x, engine.EventStream) \
                 else x.reshape(x.shape[0], -1)
+            if stats is not None:
+                fd = _dense(flat) if isinstance(flat, engine.EventStream) \
+                    else flat
+                stats.append(dict(
+                    event_macs=jnp.sum((jnp.abs(fd) > 0).astype(jnp.float32))
+                    * layer.out,                                 # Algorithm 2
+                    in_events=jnp.sum(jnp.abs(fd) > 0,
+                                      dtype=jnp.float32)))
             acc = engine.linear(flat, wgt, cfg=cfg.replace(threshold=0.0))
             last = layer is spec.layers[-1]
             if last:
                 x = acc
             elif chain:
-                x = engine.fire(acc, cfg)            # fire -> EventStream
+                x = engine.fire(acc, cfg, keep_dense=stats is not None)
             else:
                 x = fire(acc, fire_cfg)
+            if stats is not None:
+                stats[-1]["out_density"] = jnp.mean(jnp.abs(_dense(x)) > 0)
+    if isinstance(x, engine.EventStream) and x.logical_shape is not None:
+        return x.dense_nhwc()        # conv-final spec: keep the NHWC view
     return _dense(x)
 
 
-def _dense(x) -> jax.Array:
-    return x.dense() if isinstance(x, engine.EventStream) else x
+def cnn_forward(params, x: jax.Array, spec: CNNSpec, *, mnf: bool = True,
+                fire_cfg: FireConfig = FireConfig(),
+                engine_cfg: engine.EngineConfig | None = None,
+                chain: bool | None = None):
+    """x: (B, H, W, C) -> logits (B, classes).  mnf=False is the oracle.
+
+    All compute dispatches through ``repro.engine``; ``engine_cfg`` picks
+    the backend (default: pure-jnp block events).  ``chain`` selects the
+    event-resident path (default: on for MNF without int8 requantization —
+    chaining preserves fire semantics only for the plain-threshold fire
+    decision); ``chain=False`` forces the per-layer dense round-trip twin.
+    """
+    cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
+    if chain is None:
+        chain = mnf and not fire_cfg.quantize_to_int8
+    return _forward(params, x, spec, mnf=mnf, fire_cfg=fire_cfg, cfg=cfg,
+                    chain=chain and mnf)
+
+
+def make_cnn_pipeline(spec: CNNSpec, *, mnf: bool = True,
+                      fire_cfg: FireConfig = FireConfig(),
+                      engine_cfg: engine.EngineConfig | None = None,
+                      chain: bool | None = None, donate: bool = True):
+    """One jitted forward per network: ``fn(params, x) -> logits``.
+
+    The whole conv→fire→…→FC pipeline compiles as a single ``jax.jit`` —
+    no per-layer dispatch, one trace per input shape (DESIGN.md §5.1).
+    ``donate=True`` donates the input image buffer (serving never reuses a
+    consumed batch; pass ``donate=False`` when the caller does).
+    """
+    cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
+    if chain is None:
+        chain = mnf and not fire_cfg.quantize_to_int8
+    chain = chain and mnf
+
+    def fwd(params, x):
+        return _forward(params, x, spec, mnf=mnf, fire_cfg=fire_cfg,
+                        cfg=cfg, chain=chain)
+
+    return jax.jit(fwd, donate_argnums=(1,) if donate else ())
+
+
+def _static_layer_stats(spec: CNNSpec, batch: int):
+    """Shape-derived stats fields (no tracing): dense MACs, element counts.
+
+    ``dense_macs`` comes from :func:`layer_dense_macs` (one accounting,
+    shared with the cost model) scaled by the batch size.
+    """
+    shapes = _trace_shapes(spec)
+    macs = iter(layer_dense_macs(spec))
+    out = []
+    for i, layer in enumerate(spec.layers):
+        h, w, c = shapes[i]
+        if isinstance(layer, (ConvSpec, FCSpec)):
+            out.append(dict(
+                kind="conv" if isinstance(layer, ConvSpec) else "fc",
+                c_out=layer.out_ch if isinstance(layer, ConvSpec)
+                else layer.out,
+                dense_macs=float(batch * next(macs)),
+                in_elems=float(batch * h * w * c)))
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def _stats_pipeline(spec: CNNSpec, fire_cfg: FireConfig,
+                    cfg: engine.EngineConfig):
+    """Cached single-jit instrumented forward for ``run_with_stats``."""
+    chain = not fire_cfg.quantize_to_int8
+
+    def fwd(params, x):
+        stats: list = []
+        logits = _forward(params, x, spec, mnf=True, fire_cfg=fire_cfg,
+                          cfg=cfg, chain=chain, stats=stats)
+        return logits, tuple(stats)
+
+    return jax.jit(fwd)
 
 
 def run_with_stats(params, x: jax.Array, spec: CNNSpec,
@@ -219,7 +355,9 @@ def run_with_stats(params, x: jax.Array, spec: CNNSpec,
                    engine_cfg: engine.EngineConfig | None = None):
     """MNF forward + per-layer event accounting (via ``repro.engine``).
 
-    Returns (logits, stats list).  Each compute layer's stats:
+    One jitted call per (network, shape): the traced body returns per-layer
+    event counters alongside the logits; shape-only quantities are derived
+    statically.  Returns (logits, stats list).  Each compute layer's stats:
       dense_macs  — MACs of the dense dataflow
       event_macs  — MACs the MNF multiply phase performs (Algorithm 1 walk)
       in_events   — input events fired into the layer
@@ -227,47 +365,13 @@ def run_with_stats(params, x: jax.Array, spec: CNNSpec,
       out_density — fraction of outputs that fire
     """
     cfg = _layer_cfg(engine_cfg, mnf=True, fire_cfg=fire_cfg)
-    cfg = cfg.replace(threshold=0.0)     # encode lossless; fire() thresholds
+    logits, traced = _stats_pipeline(spec, fire_cfg, cfg)(params, x)
     stats = []
-    for layer, wgt in zip(spec.layers, params):
-        if isinstance(layer, ConvSpec):
-            b, h, w, c = x.shape
-            nz = (jnp.abs(x) > 0).astype(jnp.float32)            # (B,H,W,C)
-            touched = _touched_outputs(h, w, layer.k, layer.stride,
-                                       layer.padding).astype(jnp.float32)
-            event_macs = jnp.sum(nz * touched[None, :, :, None]) \
-                * layer.out_ch
-            in_events = jnp.sum(nz)
-            acc = engine.conv2d(x, wgt, cfg=cfg.replace(blk_k=min(8, c)),
-                                stride=layer.stride, padding=layer.padding)
-            oy = conv_out_size(h, layer.k, layer.stride, layer.padding)
-            ox = conv_out_size(w, layer.k, layer.stride, layer.padding)
-            dense_macs = b * oy * ox * layer.k * layer.k * c * layer.out_ch
-            x = fire(acc, fire_cfg)
-            ev_f = float(in_events)
-            stats.append(dict(
-                kind="conv", dense_macs=float(dense_macs),
-                event_macs=float(event_macs), in_events=ev_f,
-                in_elems=float(b * h * w * c), c_out=layer.out_ch,
-                avg_touched=float(event_macs) / max(ev_f * layer.out_ch, 1.0),
-                out_density=float(jnp.mean(jnp.abs(x) > 0))))
-        elif isinstance(layer, PoolSpec):
-            x = jax.lax.reduce_window(
-                x, -jnp.inf, jax.lax.max,
-                (1, layer.k, layer.k, 1), (1, layer.stride, layer.stride, 1),
-                "VALID")
-        elif isinstance(layer, FCSpec):
-            flat = x.reshape(x.shape[0], -1)
-            nz = (jnp.abs(flat) > 0).astype(jnp.float32)
-            in_events = jnp.sum(nz)
-            event_macs = in_events * layer.out                   # Algorithm 2
-            dense_macs = flat.shape[0] * flat.shape[1] * layer.out
-            acc = engine.linear(flat, wgt, cfg=cfg)
-            last = layer is spec.layers[-1]
-            x = acc if last else fire(acc, fire_cfg)
-            stats.append(dict(
-                kind="fc", dense_macs=float(dense_macs),
-                event_macs=float(event_macs), in_events=float(in_events),
-                in_elems=float(flat.size), c_out=layer.out, avg_touched=1.0,
-                out_density=float(jnp.mean(jnp.abs(x) > 0))))
-    return x, stats
+    for st, tr in zip(_static_layer_stats(spec, x.shape[0]), traced):
+        d = dict(st)
+        d.update({k: float(v) for k, v in tr.items()})
+        d["avg_touched"] = (
+            d["event_macs"] / max(d["in_events"] * d["c_out"], 1.0)
+            if d["kind"] == "conv" else 1.0)
+        stats.append(d)
+    return logits, stats

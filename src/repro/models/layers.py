@@ -15,8 +15,20 @@ from repro.configs.base import ModelConfig
 from repro.models.param_utils import Init
 
 __all__ = ["rms_norm", "layer_norm", "apply_rope", "activation_fn",
-           "mlp_init", "mlp_apply", "embed_init", "embed_apply",
-           "mnf_sparsify"]
+           "max_pool_nhwc", "mlp_init", "mlp_apply", "embed_init",
+           "embed_apply", "mnf_sparsify"]
+
+
+def max_pool_nhwc(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """VALID max-pool over the spatial axes of a (B, H, W, C) feature map.
+
+    The CNN stack's only densify point on the chained MNF path: the pool
+    consumes the fire phase's cached dense twin, and the pooled map is
+    re-encoded for the next conv (DESIGN.md §5).
+    """
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
+        "VALID")
 
 
 def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
