@@ -16,8 +16,13 @@ pollutes the trajectory numbers.
 (fire → EventStream → linear) path against the decode→re-encode round-trip.
 ``--cnn-chain`` times the event-resident CNN pipeline (one jit per network,
 conv streams chained end-to-end) against the per-layer round-trip twin and
-records where each path densifies.  Both write/merge BENCH_engine.json.
-``--smoke`` runs a fast subset of everything (CI anti-rot).
+records where each path densifies plus per-conv-layer launch counts (taps
+fused vs per-tap).  ``--conv-fused`` times the fused strip-tiled conv
+kernel (one launch per layer, 8x smaller event grid) against the per-tap
+chained path at matched shapes.  All write/merge BENCH_engine.json.
+``--smoke`` runs a fast subset of everything (CI anti-rot) and **fails**
+if an eligible strip layer falls back to a decode (fallback_decode) — the
+silent-degrade bug class.
 """
 from __future__ import annotations
 
@@ -175,6 +180,80 @@ def _smoke_spec():
                     FCSpec(10)))
 
 
+def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
+                    reps=3):
+    """Fused strip-tiled conv (one launch per layer) vs the per-tap chained
+    path, matched shapes, per backend (conv_fused entries).
+
+    Same events in, same outputs (bit-exact): the difference is purely one
+    fused launch over an 8x-smaller strip event grid vs k*k re-dispatches
+    over per-tap gathered pixel grids.  Structural columns (event-grid
+    reduction, launches, bit_exact) transfer to TPU; wall times are the
+    CPU harness.  Only the pallas backend (the kernel under test) is
+    timed — the block strip path is a correctness twin, pinned bitwise in
+    tests/test_conv_strips.py, not a deployment path.  CI-fatal if an
+    eligible strip layer falls back (fallback_decode) instead of riding
+    the fused path.
+    """
+    from repro.kernels.event_conv import fused_conv_plan
+
+    rng = np.random.default_rng(0)
+    shapes = [(1, 8, 8, 8, 8, 3, 1)]
+    if not smoke:
+        shapes.append((2, 16, 16, 8, 16, 3, 1))
+    entries = []
+    for (b, h, w0, ci, co, k, p) in shapes:
+        x = rng.normal(size=(b, h, w0, ci)).astype(np.float32)
+        x *= rng.random(x.shape) > 0.5
+        x = jnp.maximum(jnp.asarray(x), 0.0)
+        wgt = jnp.asarray(rng.normal(size=(k, k, ci, co)).astype(np.float32))
+        for backend in ("pallas",):
+            cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=8,
+                                      blk_n=8)
+            strip = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W,
+                                     keep_dense=False)
+            pixel = engine.fire_conv(x, cfg, blk_m=1, keep_dense=False)
+
+            fused_fn = jax.jit(lambda s: engine.conv2d(s, wgt, cfg=cfg,
+                                                       padding=p))
+            pertap_fn = jax.jit(lambda s: engine.conv2d(s, wgt, cfg=cfg,
+                                                        padding=p))
+            for stream, want_strip in ((strip, True), (pixel, False)):
+                with engine.trace_dispatch() as recs:
+                    jax.eval_shape(lambda s: engine.conv2d(
+                        s, wgt, cfg=cfg, padding=p), stream)
+                ok = (not any(r.get("fallback_decode") for r in recs)
+                      and any(r.get("chained")
+                              and bool(r.get("strip")) == want_strip
+                              for r in recs))
+                if not ok:
+                    raise RuntimeError(
+                        f"conv_fused[{backend}]: "
+                        f"{'strip' if want_strip else 'per-tap'} path fell "
+                        f"back instead of consuming events: {recs}")
+            us_f, cus_f, yf = _time_thunk(lambda: fused_fn(strip), reps=reps)
+            us_p, cus_p, yp = _time_thunk(lambda: pertap_fn(pixel), reps=reps)
+            plan = fused_conv_plan((b, h, w0, ci), k, p,
+                                   nkb=strip.events.num_k_blocks)
+            entries.append(dict(
+                kind="conv_fused", backend=backend, b=b, h=h, w=w0, ci=ci,
+                co=co, k=k, padding=p,
+                fused_us=round(us_f, 1), per_tap_us=round(us_p, 1),
+                fused_compile_us=round(cus_f, 1),
+                per_tap_compile_us=round(cus_p, 1),
+                speedup=round(us_p / max(us_f, 1e-9), 3),
+                bit_exact=bool(jnp.all(yf == yp)),
+                launches_fused=plan["launches_fused"],
+                launches_per_tap=plan["launches_per_tap"],
+                event_grid_strip=plan["event_grid_strip"],
+                event_grid_pixel=plan["event_grid_pixel"],
+                grid_reduction=plan["grid_reduction"],
+                gathered_groups_per_tap=plan["gathered_groups_per_tap"],
+                gathered_groups_fused=plan["gathered_groups_fused"]))
+    _merge_bench(out_path, entries, {"conv_fused"})
+    return entries
+
+
 def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                    batch=2, reps=3):
     """Event-resident CNN pipeline vs per-layer round-trip (one jit each).
@@ -185,11 +264,13 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
     boundaries vs a dense materialize + re-encode at every boundary.
     ``boundaries`` records where each compiled graph densifies.
     """
-    from repro.models.cnn import (ALEXNET, ConvSpec, FCSpec, PoolSpec,
-                                  cnn_forward, init_cnn_params,
-                                  make_cnn_pipeline)
+    from repro.models.cnn import (ALEXNET, VGG16, ConvSpec, FCSpec, PoolSpec,
+                                  _trace_shapes, cnn_forward,
+                                  init_cnn_params, make_cnn_pipeline)
 
-    nets = [(_smoke_spec(), 8)] if smoke else [(ALEXNET, 64)]
+    # AlexNet@64 has no strip-eligible layer (stride-4 conv1, W=7/3 tails);
+    # VGG16@32 runs six of its twelve chained convs on the fused strip path.
+    nets = [(_smoke_spec(), 8)] if smoke else [(ALEXNET, 64), (VGG16, 32)]
     entries = []
     for spec, size in nets:
         spec = spec.scaled(size)
@@ -214,7 +295,44 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                     1 for r in recs if r.get("chained")),
                 decodes=sum(1 for r in recs if r.get("decode")),
                 fallback_decodes=sum(
-                    1 for r in recs if r.get("fallback_decode")))
+                    1 for r in recs if r.get("fallback_decode")),
+                chained_conv_launches=sum(
+                    r.get("launches", 0) for r in recs
+                    if r.get("chained") and r.get("op") == "conv2d"))
+        if counts["chained"]["fallback_decodes"]:
+            raise RuntimeError(
+                f"cnn_chain[{spec.name}]: chained pipeline hit "
+                f"fallback_decode — an eligible strip layer (or a chained "
+                f"boundary) silently densified")
+
+        # Per-layer launch accounting (taps fused vs per-tap): the strip
+        # layers of the chained graph run 1 launch each, everything else
+        # (incl. the whole round-trip twin) pays k*k per conv layer.
+        shapes = _trace_shapes(spec)
+        per_layer, compute_idx = [], 0
+        for i, layer in enumerate(spec.layers):
+            if not isinstance(layer, ConvSpec):
+                continue
+            h_in, w_in, _ = shapes[i]
+            strip = bool(compute_idx > 0 and engine.strip_eligible(
+                w_in, layer.k, layer.stride, layer.padding))
+            per_layer.append(dict(
+                layer=i, k=layer.k, w_in=w_in, strip=strip,
+                launches_chained=1 if strip else layer.k ** 2,
+                launches_roundtrip=layer.k ** 2))
+            compute_idx += 1
+        launches = dict(
+            per_layer=per_layer,
+            chained_total=sum(l["launches_chained"] for l in per_layer),
+            roundtrip_total=sum(l["launches_roundtrip"] for l in per_layer))
+        # the first conv consumes the dense image (no chained record), so
+        # trace-derived launches cover all but its k*k
+        want = launches["chained_total"] - per_layer[0]["launches_chained"]
+        got = counts["chained"]["chained_conv_launches"]
+        if got != want:
+            raise RuntimeError(
+                f"cnn_chain[{spec.name}]: launch accounting drifted from "
+                f"the traced graph (static {want} != traced {got})")
 
         fns = {mode: make_cnn_pipeline(spec, mnf=True, chain=chain,
                                        donate=False)
@@ -247,6 +365,7 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
             roundtrip_compile_us=round(cus_r, 1),
             speedup=round(us_r / max(us_c, 1e-9), 3),
             bit_exact=bool(jnp.all(yc == yr)),
+            launches=launches,
             boundaries=dict(
                 conv=n_conv, fc=n_fc, pool=n_pool,
                 # chained: only pool boundaries densify (cached twin + the
@@ -266,10 +385,15 @@ def main():
     ap.add_argument("--cnn-chain", action="store_true",
                     help="time the event-resident CNN pipeline vs the "
                          "per-layer round-trip (cnn_chain entries)")
+    ap.add_argument("--conv-fused", action="store_true",
+                    help="time the fused strip-tiled conv kernel (one "
+                         "launch/layer) vs the per-tap chained path "
+                         "(conv_fused entries)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: 1-rep kernel microbench + engine "
-                         "sweep + mini-net cnn chain — keeps every "
-                         "benchmark path from rotting")
+                         "sweep + mini-net cnn chain + one conv_fused "
+                         "shape — keeps every benchmark path from rotting "
+                         "and fails on strip-layer fallback_decode")
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args()
     if args.smoke:
@@ -279,6 +403,8 @@ def main():
             print(json.dumps(e))
         for e in cnn_chain_rows(args.out, smoke=True, reps=1):
             print(json.dumps(e))
+        for e in conv_fused_rows(args.out, smoke=True, reps=1):
+            print(json.dumps(e))
         return
     if args.engine:
         for e in engine_rows(args.out):
@@ -286,7 +412,10 @@ def main():
     if args.cnn_chain:
         for e in cnn_chain_rows(args.out):
             print(json.dumps(e))
-    if args.engine or args.cnn_chain:
+    if args.conv_fused:
+        for e in conv_fused_rows(args.out):
+            print(json.dumps(e))
+    if args.engine or args.cnn_chain or args.conv_fused:
         return
     for name, us, compile_us, derived in rows():
         print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")

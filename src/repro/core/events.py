@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "STRIP_CO_MIN",
+    "STRIP_W",
     "ScalarEvents",
     "BlockEvents",
     "encode_scalar_events",
@@ -35,8 +37,17 @@ __all__ = [
     "encode_block_events",
     "decode_block_events",
     "gather_row_groups",
+    "gather_row_strips",
     "pad_to_block_multiple",
+    "scalar_event_rows",
+    "strip_eligible",
+    "strip_ineligible_reason",
+    "strip_tap_map",
 ]
+
+#: Pixels per row strip of the strip-aligned conv encoding (DESIGN.md §6).
+#: Matches the TPU sublane count so a strip event is one (8, blk_k) tile.
+STRIP_W = 8
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +207,156 @@ def gather_row_groups(bev: BlockEvents, idx: jax.Array,
     counts = jnp.where(live, bev.counts[idx], 0)
     return BlockEvents(values=bev.values[idx], block_idx=bev.block_idx[idx],
                        counts=counts, num_k_blocks=bev.num_k_blocks)
+
+
+def gather_row_strips(bev: BlockEvents, idx: jax.Array, live: jax.Array,
+                      shift: int) -> BlockEvents:
+    """Tap-shifted strip gather — the strip analogue of :func:`gather_row_groups`.
+
+    Gathers row-strip groups (``idx``/``live`` exactly as in
+    ``gather_row_groups``) and then moves rows *within* each (blk_m, blk_k)
+    tile by the static ``shift``: output row i takes source row i + shift,
+    rows whose source falls outside [0, blk_m) are zero.  A conv tap at
+    stride 1 whose x-offset is not a multiple of STRIP_W straddles two
+    adjacent strips; one ``gather_row_strips`` per (tap, straddle-half)
+    realizes the shifted slice in the event domain (DESIGN.md §6).
+
+    The row move is a slice + zero-pad — no FP arithmetic — so gathered
+    values are bit-identical to the source rows.
+    """
+    g = gather_row_groups(bev, idx, live)
+    bm = g.values.shape[2]
+    d = int(shift)
+    if d == 0:
+        return g
+    if d >= bm or d <= -bm:
+        return dataclasses.replace(g, values=jnp.zeros_like(g.values),
+                                   counts=jnp.zeros_like(g.counts))
+    if d > 0:        # out rows [0, bm-d) <- src rows [d, bm)
+        vals = jnp.pad(g.values[:, :, d:, :],
+                       ((0, 0), (0, 0), (0, d), (0, 0)))
+    else:            # out rows [-d, bm) <- src rows [0, bm+d)
+        vals = jnp.pad(g.values[:, :, :bm + d, :],
+                       ((0, 0), (0, 0), (-d, 0), (0, 0)))
+    return dataclasses.replace(g, values=vals)
+
+
+def scalar_event_rows(bev: BlockEvents) -> jax.Array:
+    """Per-row scalar-event (non-zero activation) counts, (G * blk_m,) f32.
+
+    Derived from the compacted event values alone — no dense twin needed —
+    because the block encoding is lossless at threshold 0: every non-zero
+    activation sits in exactly one live tile (twin-free instrumentation).
+    """
+    g, e, bm, bk = bev.values.shape
+    slot_live = jnp.arange(e, dtype=jnp.int32)[None, :] < bev.counts[:, None]
+    nz = (bev.values != 0) & slot_live[:, :, None, None]
+    return jnp.sum(nz, axis=(1, 3), dtype=jnp.float32).reshape(g * bm)
+
+
+#: Output-channel granule for the strip path.  The bit-exactness contract
+#: (strip == per-tap, bitwise) relies on the backend lowering the
+#: (8, bk) @ (bk, n) and (1, bk) @ (bk, n) dots with the same per-element
+#: K-reduction; XLA picks M-dependent strategies when n has a ragged lane
+#: remainder (observed divergence at n = 2 and n = 9, while n = 8, 12, 16
+#: hold), so strips require whole sublane groups of output channels.
+#: Real conv nets (AlexNet/VGG co in {64, 96, ..., 512}) always qualify.
+STRIP_CO_MIN = 8
+
+
+def strip_ineligible_reason(width: int, k: int, stride: int, padding: int,
+                            co: int | None = None) -> str | None:
+    """Why a conv layer cannot consume a strip-aligned stream (None = it can).
+
+    Strip tiling (blk_m == STRIP_W) needs every tap's shifted slice to be a
+    row-shift of at most two adjacent strips: stride 1 (so output pixel x
+    maps affinely to input pixel x with unit step), input and output widths
+    tiling into whole strips, and tap x-offsets within one strip of the
+    origin.  When the output-channel count ``co`` is known it must be a
+    multiple of STRIP_CO_MIN (see its note) so strip == per-tap stays
+    bitwise.
+    """
+    out_w = width + 2 * padding - k + 1
+    if stride != 1:
+        return f"stride {stride} != 1 (tap slices are not row shifts)"
+    if width <= 0 or width % STRIP_W:
+        return f"input width {width} not a multiple of STRIP_W={STRIP_W}"
+    if out_w <= 0 or out_w % STRIP_W:
+        return (f"output width {out_w} (W + 2p - k + 1) not a multiple of "
+                f"STRIP_W={STRIP_W}")
+    if padding > STRIP_W or k - 1 - padding > STRIP_W:
+        return (f"tap x-offsets [-{padding}, {k - 1 - padding}] leave the "
+                f"adjacent-strip window (|dx - p| <= {STRIP_W})")
+    if co is not None and (co < STRIP_CO_MIN or co % STRIP_CO_MIN):
+        return (f"output channels {co} not a multiple of "
+                f"STRIP_CO_MIN={STRIP_CO_MIN} (bitwise contract needs an "
+                f"M-invariant dot lowering — ragged lane remainders break it)")
+    return None
+
+
+def strip_eligible(width: int, k: int, stride: int, padding: int,
+                   co: int | None = None) -> bool:
+    """True iff a k x k / stride / padding conv over maps of width ``width``
+    (and, when given, ``co`` output channels) can consume a strip-aligned
+    (blk_m == STRIP_W) event stream."""
+    return strip_ineligible_reason(width, k, stride, padding, co) is None
+
+
+def strip_tap_map(logical_shape: tuple, k: int, padding: int):
+    """Static subtap gather plan for the fused strip conv (DESIGN.md §6).
+
+    For each output strip and each of the 2*k*k subtaps (tap (dy, dx) split
+    into its two straddle halves A/B), the plan names the source strip group
+    and the in-tile row shift that realize the tap's shifted slice:
+
+      src   (G_out, T) int32  source strip group (clamped when dead)
+      live  (G_out, T) bool   False = no source (zero-padding border / dead half)
+      shift (T,)       int32  signed row shift d: out row i <- src row i + d
+      tap   (T,)       int32  flat filter index dy*k + dx of the subtap
+
+    Subtaps are ordered tap-major (dy, dx ascending — the per-tap oracle's
+    loop order), A half (shift d = (dx-p) mod 8) before B half (d - 8), so a
+    consumer accumulating in plan order reproduces the per-tap reduction
+    tree bit-for-bit.  Everything here is shape-derived — plain numpy,
+    evaluated at trace time.
+    """
+    import numpy as np
+
+    b, h, w, _ = logical_shape
+    assert w % STRIP_W == 0, (logical_shape, "strip encoding needs W % 8 == 0")
+    oh = h + 2 * padding - k + 1
+    ow = w + 2 * padding - k + 1
+    assert ow > 0 and ow % STRIP_W == 0, (logical_shape, k, padding)
+    nsx_in = w // STRIP_W
+    nsx_out = ow // STRIP_W
+    g_out = b * oh * nsx_out
+    gidx = np.arange(g_out, dtype=np.int64)
+    sx = gidx % nsx_out
+    oy = (gidx // nsx_out) % oh
+    bb = gidx // (nsx_out * oh)
+    t_n = 2 * k * k
+    src = np.zeros((g_out, t_n), np.int32)
+    live = np.zeros((g_out, t_n), bool)
+    shift = np.zeros((t_n,), np.int32)
+    tap = np.zeros((t_n,), np.int32)
+    t = 0
+    for dy in range(k):
+        for dx in range(k):
+            iy = oy + dy - padding
+            s = dx - padding                       # tap x-offset
+            base = sx + (s // STRIP_W)             # first straddled strip
+            r = s % STRIP_W                        # in-strip row offset
+            for tx, d in ((base, r), (base + 1, r - STRIP_W)):
+                ok = (iy >= 0) & (iy < h) & (tx >= 0) & (tx < nsx_in)
+                if d <= -STRIP_W or d >= STRIP_W:
+                    ok = np.zeros_like(ok)         # r == 0: B half is dead
+                src[:, t] = ((bb * h + np.clip(iy, 0, h - 1)) * nsx_in
+                             + np.clip(tx, 0, nsx_in - 1)).astype(np.int32)
+                live[:, t] = ok
+                shift[t] = d
+                tap[t] = dy * k + dx
+                t += 1
+    return src, live, shift, tap
 
 
 def decode_block_events(ev: BlockEvents, *, blk_m: int, blk_k: int,

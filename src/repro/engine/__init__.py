@@ -21,6 +21,8 @@ Typical use::
     s = engine.fire(engine.linear(x, w1, cfg=cfg), cfg)   # layer 1
     y = engine.linear(s, w2, cfg=cfg)                     # layer 2, chained
 """
+from repro.core.events import (STRIP_CO_MIN, STRIP_W, strip_eligible,
+                               strip_ineligible_reason)
 from repro.engine.api import (conv2d, describe, fire, fire_conv, linear,
                               matmul, sparsify)
 from repro.engine.config import BACKENDS, EngineConfig
@@ -33,6 +35,7 @@ import repro.engine.backends  # noqa: F401  (registers built-in backends)
 
 __all__ = [
     "BACKENDS", "EngineConfig", "EventStream",
+    "STRIP_CO_MIN", "STRIP_W", "strip_eligible", "strip_ineligible_reason",
     "register_backend", "get_backend", "dispatch", "list_backends",
     "registered_ops",
     "matmul", "linear", "conv2d", "fire", "fire_conv", "sparsify", "describe",

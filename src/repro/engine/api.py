@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import events as ev
 from repro.engine import trace
 from repro.engine.config import EngineConfig
 from repro.engine.registry import dispatch, get_backend, list_backends
@@ -53,25 +54,46 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
            cfg: EngineConfig = _DEFAULT, *, stride: int = 1,
            padding: int = 0) -> jax.Array:
     """2-D convolution.  x: (B, H, W, CI) dense or a conv ``EventStream``
-    (NHWC ``logical_shape``, pixel-granular encoding — what ``fire_conv``
-    emits), w: (KH, KW, CI, CO).
+    (NHWC ``logical_shape`` — what ``fire_conv`` emits), w: (KH, KW, CI, CO).
 
-    Conv streams are consumed *directly* by event-native backends via
-    ``conv2d_events`` — layer L's fired feature-map events feed layer L+1's
-    k·k taps as row-group gathers, with no dense map materialized
-    (DESIGN.md §5).  Backends without a registered ``conv2d_events`` decode
-    once; that fallback is visible to ``trace_dispatch``.
+    Conv streams are consumed *directly* by event-native backends — layer
+    L's fired feature-map events feed layer L+1's k·k taps with no dense map
+    materialized (DESIGN.md §5).  A strip-aligned stream (blk_m == STRIP_W)
+    on a strip-eligible layer rides ``conv2d_events_strip`` — the fused-tap
+    path: one kernel launch for the whole layer, event grid STRIP_W-fold
+    smaller (DESIGN.md §6).  A pixel-granular stream takes the per-tap
+    ``conv2d_events`` path (k·k row-group gathers — the oracle the fused
+    kernel is bit-exact against).  Backends without the matching event op,
+    and strip streams whose geometry cannot ride the fused kernel, decode
+    once; every such fallback is visible to ``trace_dispatch``.
     """
     if isinstance(x, EventStream):
         name = cfg.resolve_backend()
-        if (x.logical_shape is not None and len(x.logical_shape) == 4
-                and name in list_backends("conv2d_events")):
-            trace.record(op="conv2d", backend=name, chained=True)
+        is_conv_stream = (x.logical_shape is not None
+                          and len(x.logical_shape) == 4)
+        k = w.shape[0]
+        if is_conv_stream and x.blk_m == ev.STRIP_W:
+            if (ev.strip_eligible(x.logical_shape[2], k, stride, padding,
+                                  co=w.shape[-1])
+                    and name in list_backends("conv2d_events_strip")):
+                trace.record(op="conv2d", backend=name, chained=True,
+                             strip=True, launches=1)
+                return get_backend("conv2d_events_strip", name)(
+                    x, w, b, cfg, stride, padding)
+            # A strip stream the fused path cannot consume (ineligible
+            # geometry or backend without the op): visible decode, never a
+            # silent re-tile.
+            trace.record(op="conv2d", backend=name, fallback_decode=True,
+                         strip=True)
+            x = x.dense_nhwc()
+        elif is_conv_stream and name in list_backends("conv2d_events"):
+            trace.record(op="conv2d", backend=name, chained=True,
+                         launches=k * k)
             return get_backend("conv2d_events", name)(x, w, b, cfg, stride,
                                                       padding)
-        trace.record(op="conv2d", backend=name, fallback_decode=True)
-        x = x.dense_nhwc() if (x.logical_shape is not None
-                               and len(x.logical_shape) == 4) else x.dense()
+        else:
+            trace.record(op="conv2d", backend=name, fallback_decode=True)
+            x = x.dense_nhwc() if is_conv_stream else x.dense()
     return dispatch("conv2d", cfg)(x, w, b, cfg, stride, padding)
 
 
@@ -94,22 +116,28 @@ def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
 
 
 def fire_conv(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
-              keep_dense: bool = True) -> EventStream:
+              keep_dense: bool = True, blk_m: int = 1) -> EventStream:
     """Fire phase over a conv accumulator (B, OY, OX, CO) -> conv stream.
 
-    The emitted stream is pixel-granular (blk_m == 1, K = the channel axis)
-    so the next conv layer's taps can consume it as row-group gathers —
-    ``engine.conv2d`` accepts it with no re-encode.  ``keep_dense=False``
-    drops the fired twin so a conv→conv boundary provably runs event-only;
-    keep it when the consumer is a pool (the pool reads the twin for free —
-    the fire phase computes it anyway).
+    ``blk_m`` picks the emitted granularity: 1 (default) is pixel-granular —
+    the per-tap path's row-group gather unit; STRIP_W emits a strip-aligned
+    stream (8-pixel row strips, requires W % STRIP_W == 0) for a consumer
+    the fused-tap kernel can serve (DESIGN.md §6) — choose it from the
+    *next* layer's geometry (``core.events.strip_eligible``).  Either way
+    ``engine.conv2d`` accepts the stream with no re-encode.
+    ``keep_dense=False`` drops the fired twin so a conv→conv boundary
+    provably runs event-only; keep it when the consumer is a pool (the pool
+    reads the twin for free — the fire phase computes it anyway).
     """
     b, h, w, c = acc.shape
+    assert blk_m == 1 or (blk_m == ev.STRIP_W and w % ev.STRIP_W == 0), \
+        (blk_m, acc.shape, "strip streams need blk_m == STRIP_W and "
+                           "W % STRIP_W == 0")
     acc2 = acc.reshape(b * h * w, c)
-    c2 = cfg.replace(blk_m=1).for_width(*acc2.shape)
+    c2 = cfg.replace(blk_m=blk_m).for_width(*acc2.shape)
     fired, bev = dispatch("fire_conv", cfg)(acc2, c2)
     return EventStream(events=bev, fired=fired if keep_dense else None,
-                       shape=acc2.shape, blk_m=1, blk_k=c2.blk_k,
+                       shape=acc2.shape, blk_m=c2.blk_m, blk_k=c2.blk_k,
                        logical_shape=(b, h, w, c))
 
 

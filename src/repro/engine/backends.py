@@ -210,6 +210,42 @@ def _conv2d_events_pallas(stream, w, b, cfg: EngineConfig, stride, padding):
 
 
 # ---------------------------------------------------------------------------
+# conv2d on a *strip-aligned* conv EventStream (the fused-tap path): one
+# launch per layer, the whole k·k tap loop fused inside — 8x smaller event
+# grid than the per-tap gathers above, bit-exact with them (DESIGN.md §6).
+# The per-tap ``conv2d_events`` path stays registered as the oracle.
+# ---------------------------------------------------------------------------
+
+def _strip_out_shape(stream, w, stride, padding):
+    assert stride == 1, "strip path is stride-1 only (engine.conv2d gates)"
+    bsz, h, wd, ci = stream.logical_shape
+    k, _, ci2, co = w.shape
+    assert ci == ci2, (stream.logical_shape, w.shape)
+    return bsz, conv_out_size(h, k, stride, padding), \
+        conv_out_size(wd, k, stride, padding), co
+
+
+@register_backend("conv2d_events_strip", "block")
+def _conv2d_events_strip_block(stream, w, b, cfg: EngineConfig, stride,
+                               padding):
+    from repro.kernels.event_conv.ref import fused_event_conv2d_ref
+    bsz, oy, ox, co = _strip_out_shape(stream, w, stride, padding)
+    y = fused_event_conv2d_ref(stream, w, padding=padding)
+    return _bias(y.reshape(bsz, oy, ox, co), b)
+
+
+@register_backend("conv2d_events_strip", "pallas")
+def _conv2d_events_strip_pallas(stream, w, b, cfg: EngineConfig, stride,
+                                padding):
+    from repro.kernels.event_conv.ops import fused_event_conv2d
+    bsz, oy, ox, co = _strip_out_shape(stream, w, stride, padding)
+    blk_n = min(cfg.blk_n, max(co, 1))
+    y = fused_event_conv2d(stream, w, padding=padding, blk_n=blk_n,
+                           interpret=cfg.resolve_interpret())
+    return _bias(y.reshape(bsz, oy, ox, co), b)
+
+
+# ---------------------------------------------------------------------------
 # fire (threshold + re-encode for the next layer)
 # ---------------------------------------------------------------------------
 

@@ -90,11 +90,40 @@ class EngineConfig:
         return dataclasses.replace(self, blk_m=min(self.blk_m, max(m, 1)),
                                    blk_k=min(self.blk_k, max(k, 1)))
 
-    def for_conv(self, ci: int) -> "EngineConfig":
-        """Clamp the K tile to a conv's input-channel depth.
+    def for_conv(self, ci: int, *, width: int | None = None,
+                 k: int | None = None, stride: int = 1, padding: int = 0,
+                 co: int | None = None,
+                 strips: bool | None = None) -> "EngineConfig":
+        """Clamp the K tile to a conv's input-channel depth; optionally pick
+        the event-row granularity (strip vs pixel tiling — DESIGN.md §6).
 
         Conv taps contract over CI, so a ``blk_k`` wider than CI would only
         pad; every conv backend applies this one clamp (the shared twin of
         ``for_width`` for the channel axis).
+
+        With ``width`` and ``k`` given, also resolves ``blk_m``: STRIP_W
+        (8-pixel row strips — the fused-tap kernel's granularity) when the
+        layer is strip-eligible, 1 (pixel) otherwise.  ``strips=True``
+        *requires* strip tiling: a stride/width combo that would silently
+        degrade to pixel granularity raises ``ValueError`` naming the
+        failing rule instead.  ``strips=False`` forces pixel tiling.
         """
-        return dataclasses.replace(self, blk_k=min(self.blk_k, max(ci, 1)))
+        from repro.core.events import STRIP_W, strip_ineligible_reason
+
+        cfg = dataclasses.replace(self, blk_k=min(self.blk_k, max(ci, 1)))
+        if width is None and k is None and strips is None:
+            return cfg
+        if strips is False:
+            return dataclasses.replace(cfg, blk_m=1)
+        if width is None or k is None:
+            raise ValueError(
+                "for_conv strip selection needs the conv geometry: "
+                "width= and k= (got width=%r, k=%r)" % (width, k))
+        reason = strip_ineligible_reason(width, k, stride, padding, co)
+        if strips and reason is not None:
+            raise ValueError(
+                f"strip tiling explicitly requested but the conv geometry "
+                f"(width={width}, k={k}, stride={stride}, padding={padding}) "
+                f"would silently degrade to pixel granularity: {reason}")
+        return dataclasses.replace(cfg,
+                                   blk_m=1 if reason is not None else STRIP_W)

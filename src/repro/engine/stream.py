@@ -70,18 +70,24 @@ class EventStream:
                    shape=(m, k), blk_m=blk_m, blk_k=blk_k)
 
     @classmethod
-    def encode_nhwc(cls, x: jax.Array, *, blk_k: int,
+    def encode_nhwc(cls, x: jax.Array, *, blk_k: int, blk_m: int = 1,
                     capacity: int | None = None, threshold: float = 0.0,
                     keep_dense: bool = True) -> "EventStream":
         """Encode a dense (B, H, W, C) feature map into a conv stream.
 
-        Rows of the event view are raster-order pixels (blk_m == 1 — the
-        granularity ``conv2d`` needs to gather shifted tap slices in the
-        event domain); K is the channel axis.
+        Rows of the event view are raster-order pixels; K is the channel
+        axis.  ``blk_m == 1`` (default) is the pixel-granular encoding the
+        per-tap ``conv2d`` path gathers; ``blk_m == STRIP_W`` is the
+        strip-aligned encoding (each row group is an 8-pixel strip along W,
+        which must divide W) that the fused-tap kernel consumes with an
+        STRIP_W-fold smaller event grid (DESIGN.md §6).
         """
         b, h, w, c = x.shape
+        assert blk_m == 1 or (blk_m == ev.STRIP_W and w % ev.STRIP_W == 0), \
+            (blk_m, x.shape, "strip encoding needs blk_m == STRIP_W and "
+                             "W % STRIP_W == 0")
         flat = x.reshape(b * h * w, c)
-        s = cls.encode(flat, blk_m=1, blk_k=min(blk_k, max(c, 1)),
+        s = cls.encode(flat, blk_m=blk_m, blk_k=min(blk_k, max(c, 1)),
                        capacity=capacity, threshold=threshold,
                        keep_dense=keep_dense)
         return dataclasses.replace(s, logical_shape=(b, h, w, c))
@@ -92,6 +98,19 @@ class EventStream:
     def num_events(self) -> jax.Array:
         """Total live block events (the quantity the cost model prices)."""
         return self.events.counts.sum()
+
+    def per_row_scalar_events(self) -> jax.Array:
+        """Non-zero activation count per logical row, (M,) f32 — derived
+        from the compacted event values alone (no dense twin), lossless at
+        threshold 0.  For conv streams, row r is raster-order pixel r, so
+        ``.reshape(B, H, W)`` is the per-pixel fired-event map the cost
+        model weights by receptive-field fan-out."""
+        return ev.scalar_event_rows(self.events)[:self.shape[0]]
+
+    @property
+    def num_scalar_events(self) -> jax.Array:
+        """Total non-zero activations (the paper's event count), twin-free."""
+        return self.per_row_scalar_events().sum()
 
     def occupancy(self) -> jax.Array:
         """Live fraction of the (row-group × K-block) event grid.

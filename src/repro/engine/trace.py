@@ -14,8 +14,11 @@ and benchmarks can assert *where* densification happens::
 Records are appended at Python dispatch time, which under ``jax.jit`` means
 trace time: the counts describe the compiled graph's structure (how many
 decode ops it contains), which is exactly the per-boundary accounting the
-benchmarks report.  Nesting is supported; each context sees every record
-emitted while it is active.
+benchmarks report.  Conv dispatches additionally mark the tiling they
+rode — ``strip=True, launches=1`` for the fused strip kernel vs
+``launches=k*k`` for the per-tap path — so grid/launch accounting and the
+strip-degradation CI guard read straight off the records.  Nesting is
+supported; each context sees every record emitted while it is active.
 """
 from __future__ import annotations
 

@@ -7,6 +7,8 @@ interpret=True mode on CPU; the model stack reaches them through the
 each op), so dry-run/roofline lower the pure-XLA path (truthful
 cost_analysis — see DESIGN.md §2 and §4).
 """
+from repro.kernels.event_conv import (fused_conv_plan, fused_event_conv2d,
+                                      fused_event_conv2d_ref)
 from repro.kernels.event_matmul import (event_matmul, event_matmul_cfg,
                                         event_matmul_from_events,
                                         event_matmul_ref)
@@ -17,6 +19,7 @@ from repro.kernels.wkv6 import wkv6, wkv6_ref
 
 __all__ = ["event_matmul", "event_matmul_cfg", "event_matmul_from_events",
            "event_matmul_ref",
+           "fused_conv_plan", "fused_event_conv2d", "fused_event_conv2d_ref",
            "fire_and_encode", "fire_and_encode_cfg", "fire_compact",
            "fire_compact_ref",
            "mamba_scan", "mamba_scan_ref", "wkv6", "wkv6_ref"]

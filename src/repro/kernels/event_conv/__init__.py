@@ -1,0 +1,7 @@
+from repro.kernels.event_conv.kernel import (event_conv_kernel,
+                                             event_conv_pallas)
+from repro.kernels.event_conv.ops import fused_conv_plan, fused_event_conv2d
+from repro.kernels.event_conv.ref import fused_event_conv2d_ref
+
+__all__ = ["event_conv_kernel", "event_conv_pallas", "fused_conv_plan",
+           "fused_event_conv2d", "fused_event_conv2d_ref"]

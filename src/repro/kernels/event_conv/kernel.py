@@ -1,0 +1,132 @@
+"""Fused-tap Pallas TPU kernel for strip-tiled event convolution.
+
+One launch computes an entire conv layer from a strip-aligned event stream
+(DESIGN.md §6).  The per-tap path re-dispatches ``event_matmul`` k*k times
+per layer and materializes a gathered event grid per tap; this kernel keeps
+the k*k tap loop *inside* the launch as two grid dimensions (subtap, event)
+and never materializes a gather at all — scalar-prefetched plan arrays
+(``src``/``cnt``/``shift``/``tap`` from ``core.events.strip_tap_map``) drive
+the indirection through BlockSpec index maps:
+
+  a_vals (G_in, E, bm, bk)   strip event tiles, consumed in place — the
+                             a-tile DMA'd for grid step (g, ., t, e) is
+                             ``a_vals[src[g, t], e]``.
+  ws     (k*k*nkb*bk, N)     tap-stacked weights; the w-tile is block row
+                             ``tap[t] * nkb + a_idx[src[g, t], e]`` — the
+                             event's direct weight address offset into its
+                             tap's slab.
+
+Grid (G_out, N/bn, T, E), T = 2*k*k subtaps (each tap split into its two
+strip-straddle halves), E innermost.  Per subtap a scratch ``tap_acc``
+accumulates events exactly like the per-tap ``event_matmul`` kernel does,
+then flushes into the layer accumulator — reproducing the per-tap oracle's
+reduction tree bit-for-bit (the straddle half that does not source a given
+output row contributes exact zeros).  The in-tile row shift of a straddling
+tap is applied as a 0/1 selection matmul (``sel @ a``), which moves rows
+exactly (no rounding) and rides the MXU.
+
+``@pl.when(e < cnt[g, t])`` idles the unit on padded event slots and on
+dead subtaps (zero-padding border, r == 0 second halves) — the paper's
+low-power idle, now covering the whole tap loop of a layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["event_conv_kernel", "event_conv_pallas"]
+
+
+def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
+                      # ^ scalar-prefetch refs (plan + event addresses)
+                      a_vals_ref, w_ref,       # VMEM inputs
+                      out_ref,                 # VMEM output
+                      acc_ref, tap_acc_ref):   # VMEM scratch (bm, bn) f32
+    g = pl.program_id(0)
+    t = pl.program_id(2)
+    e = pl.program_id(3)
+    num_t = pl.num_programs(2)
+    num_e = pl.num_programs(3)
+
+    @pl.when((t == 0) & (e == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(e == 0)
+    def _tap_init():
+        tap_acc_ref[...] = jnp.zeros_like(tap_acc_ref)
+
+    @pl.when(e < cnt_ref[g, t])
+    def _mac():
+        a = a_vals_ref[0, 0]                     # (bm, bk) source strip tile
+        bm = a.shape[0]
+        d = shift_ref[t]
+        # Exact row shift: out row i <- src row i + d (0/1 selection matmul).
+        i = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+        j = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+        sel = (j == i + d).astype(a.dtype)
+        shifted = jnp.dot(sel, a, preferred_element_type=jnp.float32)
+        tap_acc_ref[...] += jnp.dot(shifted, w_ref[...],
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(e == num_e - 1)
+    def _tap_flush():
+        # Matches the per-tap oracle's outer `acc = acc + tap_result`;
+        # dead subtaps flush exact zeros (bitwise no-op).
+        acc_ref[...] += tap_acc_ref[...]
+
+    @pl.when((t == num_t - 1) & (e == num_e - 1))
+    def _writeback():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nkb", "blk_n", "interpret",
+                                             "out_dtype"))
+def event_conv_pallas(a_vals: jax.Array, a_idx: jax.Array, tap: jax.Array,
+                      shift: jax.Array, src: jax.Array, cnt: jax.Array,
+                      ws: jax.Array, *, nkb: int, blk_n: int = 128,
+                      interpret: bool = False,
+                      out_dtype=jnp.float32) -> jax.Array:
+    """One fused launch: y[g] = sum_t sum_e shift_t(a[src[g,t], e]) @ W_tile.
+
+    a_vals/a_idx: strip-encoded events (G_in, E, bm, bk) / (G_in, E).
+    tap/shift: (T,) subtap plan; src/cnt: (G_out, T) source strip + live
+    event count per (output strip, subtap).  ws: tap-stacked weights
+    (k*k*nkb*bk, N), N a multiple of blk_n.  Returns (G_out, bm, N).
+    """
+    g_in, e, bm, bk = a_vals.shape
+    g_out, t_n = src.shape
+    rows, n = ws.shape
+    assert rows == (t_n // 2) * nkb * bk, (ws.shape, t_n, nkb, bk)
+    assert n % blk_n == 0, (n, blk_n)
+
+    grid = (g_out, n // blk_n, t_n, e)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda gi, ni, ti, ei, tp, sh, sr, ct, ai:
+                         (sr[gi, ti], ei, 0, 0)),
+            pl.BlockSpec((bk, blk_n),
+                         lambda gi, ni, ti, ei, tp, sh, sr, ct, ai:
+                         (tp[ti] * nkb + ai[sr[gi, ti], ei], ni)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, blk_n),
+                               lambda gi, ni, ti, ei, tp, sh, sr, ct, ai:
+                               (gi, 0, ni)),
+        scratch_shapes=[pltpu.VMEM((bm, blk_n), jnp.float32),
+                        pltpu.VMEM((bm, blk_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        event_conv_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g_out, bm, n), out_dtype),
+        interpret=interpret,
+        name="mnf_event_conv_fused",
+    )(tap, shift, src, cnt, a_idx, a_vals, ws)
+    return out

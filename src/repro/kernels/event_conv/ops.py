@@ -1,0 +1,84 @@
+"""Public wrappers around the fused-tap strip conv kernel.
+
+``fused_event_conv2d`` consumes a strip-aligned conv ``EventStream``
+(blk_m == STRIP_W, NHWC ``logical_shape``) and computes the whole conv layer
+in **one** Pallas launch — the engine registry's "pallas" backend of
+``conv2d_events_strip``.  ``fused_conv_plan`` exposes the static launch
+accounting (grid size, launches, event-grid reduction vs the per-tap path)
+that the benchmarks and BENCH_engine.json report.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.mnf_conv import conv_out_size
+from repro.kernels.event_conv.kernel import event_conv_pallas
+
+__all__ = ["fused_event_conv2d", "fused_conv_plan"]
+
+
+def _stacked_weights(w: jax.Array, bk: int, nkb: int,
+                     blk_n: int) -> jax.Array:
+    """(K, K, CI, CO) -> (k*k*nkb*bk, N): per-tap weight slabs, K-block rows.
+
+    Block row ``tap * nkb + kb`` of the result is W[dy, dx] rows
+    [kb*bk, (kb+1)*bk) — the tile the kernel's index map addresses from an
+    event's direct K-block address.
+    """
+    k, k2, ci, co = w.shape
+    assert k == k2, w.shape
+    wf = w.reshape(k * k, ci, co)
+    wf = ev.pad_to_block_multiple(wf, bk, 1)
+    assert wf.shape[1] == nkb * bk, (wf.shape, nkb, bk)
+    ws = wf.reshape(k * k * nkb * bk, co)
+    return ev.pad_to_block_multiple(ws, blk_n, 1)
+
+
+def fused_event_conv2d(stream, w: jax.Array, *, padding: int = 0,
+                       blk_n: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """Strip-tiled fused-tap conv, one Pallas launch.  Returns (B*OY*OX, CO).
+
+    ``stream`` must be strip-aligned (blk_m == STRIP_W) and the layer
+    strip-eligible (stride 1 — see ``core.events.strip_eligible``; the
+    engine API enforces this before dispatching here).
+    """
+    b, h, wd, ci = stream.logical_shape
+    k, _, ci2, co = w.shape
+    assert ci == ci2, (stream.logical_shape, w.shape)
+    assert stream.blk_m == ev.STRIP_W, stream.blk_m
+    bev = stream.events
+    bk = stream.blk_k
+    nkb = bev.num_k_blocks
+    src, live, shift, tap = ev.strip_tap_map((b, h, wd, ci), k, padding)
+    src_j = jnp.asarray(src)
+    cnt = jnp.where(jnp.asarray(live), bev.counts[src_j], 0)
+    ws = _stacked_weights(w, bk, nkb, blk_n)
+    y = event_conv_pallas(bev.values, bev.block_idx, jnp.asarray(tap),
+                          jnp.asarray(shift), src_j, cnt.astype(jnp.int32),
+                          ws, nkb=nkb, blk_n=blk_n, interpret=interpret)
+    oy = conv_out_size(h, k, 1, padding)
+    ox = conv_out_size(wd, k, 1, padding)
+    return y.reshape(-1, y.shape[-1])[:b * oy * ox, :co]
+
+
+def fused_conv_plan(logical_shape: tuple, k: int, padding: int,
+                    nkb: int, capacity: int | None = None) -> dict:
+    """Static launch accounting for one strip conv layer vs the per-tap path.
+
+    event_grid counts (row groups x event slots) of the stream each path
+    consumes — the gather grid the per-tap path inflates k*k-fold and the
+    strip encoding shrinks STRIP_W-fold.
+    """
+    b, h, wd, _ = logical_shape
+    e = nkb if capacity is None else min(capacity, nkb)
+    g_pix = b * h * wd
+    g_strip = g_pix // ev.STRIP_W
+    return dict(
+        launches_fused=1, launches_per_tap=k * k,
+        grid_fused=(g_strip, 2 * k * k, e),
+        event_grid_strip=g_strip * e, event_grid_pixel=g_pix * e,
+        grid_reduction=float(g_pix) / float(g_strip),
+        gathered_groups_per_tap=k * k * g_pix, gathered_groups_fused=0)

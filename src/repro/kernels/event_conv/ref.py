@@ -1,0 +1,44 @@
+"""Pure-jnp twin of the fused-tap strip conv kernel.
+
+Walks the same static subtap plan (``core.events.strip_tap_map``) in the
+same order, realizing each subtap as a ``gather_row_strips`` (exact row
+moves) + the block-event contraction ``block_event_linear_from_events`` —
+the engine registry's "block" backend of ``conv2d_events_strip``.
+
+Bit-exactness contract (tested in tests/test_conv_strips.py): because the
+plan visits taps in the per-tap oracle's (dy, dx) order, straddle halves
+contribute exact zeros to rows they don't source, and strip-live-but-
+pixel-dead event slots contribute exact zeros to the contraction, this twin
+is bit-identical to the pixel-granular per-tap path — strips only shrink
+the event grid, they never reorder the arithmetic (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.mnf_conv import conv_out_size
+from repro.core.mnf_linear import block_event_linear_from_events
+
+__all__ = ["fused_event_conv2d_ref"]
+
+
+def fused_event_conv2d_ref(stream, w: jax.Array, *,
+                           padding: int = 0) -> jax.Array:
+    """Strip-tiled fused-tap conv, pure jnp.  Returns (B*OY*OX, CO)."""
+    b, h, wd, ci = stream.logical_shape
+    k, _, ci2, co = w.shape
+    assert ci == ci2, (stream.logical_shape, w.shape)
+    assert stream.blk_m == ev.STRIP_W, stream.blk_m
+    src, live, shift, tap = ev.strip_tap_map((b, h, wd, ci), k, padding)
+    oy = conv_out_size(h, k, 1, padding)
+    ox = conv_out_size(wd, k, 1, padding)
+    wtap = w.reshape(k * k, ci, co)
+    acc = jnp.zeros((b * oy * ox, co),
+                    jnp.promote_types(stream.events.values.dtype, w.dtype))
+    for t in range(src.shape[1]):
+        gat = ev.gather_row_strips(stream.events, jnp.asarray(src[:, t]),
+                                   jnp.asarray(live[:, t]), int(shift[t]))
+        acc = acc + block_event_linear_from_events(gat, wtap[int(tap[t])])
+    return acc

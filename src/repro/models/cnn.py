@@ -4,9 +4,12 @@ Two execution paths over identical params, both dispatched through
 ``repro.engine`` (DESIGN.md §3):
   * dense  — the engine's dense backend + ReLU (the oracle),
   * mnf    — event-resident: one ``EventStream`` threads the whole network.
-             Each conv's fire phase emits a pixel-granular conv stream
-             (``engine.fire_conv``) that the next conv's taps consume as
-             row-group gathers — the dense feature map is never
+             Each conv's fire phase emits a conv stream
+             (``engine.fire_conv``) that the next conv consumes directly:
+             strip-aligned (8-pixel row strips) whenever the consumer can
+             ride the fused-tap kernel — one launch per layer, 8x smaller
+             event grid — and pixel-granular per-tap row-group gathers
+             otherwise (DESIGN.md §5/§6).  The dense feature map is never
              materialized between conv layers.  Pools read the fire phase's
              cached dense twin (computed for free) and the pooled map is
              re-encoded — the only densify point on the chain (DESIGN.md
@@ -18,7 +21,10 @@ dispatch or retracing (DESIGN.md §5.1).  ``run_with_stats`` rides the same
 single-jit body and instruments every layer with the event counts the cost
 model needs: input events fired (non-zero activations), MACs a dense
 accelerator would do, and MACs the MNF multiply phase actually does
-(Σ_events touched_outputs × C_out — Algorithm 1's walk length).
+(Σ_events touched_outputs × C_out — Algorithm 1's walk length).  All
+counters derive from ``EventStream``'s compacted event values, so the
+instrumented pipeline runs twin-free — same event-resident graph as
+serving, just with counter outputs.
 """
 from __future__ import annotations
 
@@ -185,6 +191,38 @@ def _dense_nhwc(x) -> jax.Array:
     return x.dense_nhwc() if isinstance(x, engine.EventStream) else x
 
 
+def _next_conv_blk_m(nxt, out_w: int) -> int:
+    """Granularity of the stream a fired conv layer emits, chosen from its
+    *consumer*: strip-aligned (STRIP_W-pixel row strips — the fused-tap
+    kernel's unit, one launch per layer and an 8x smaller event grid) when
+    the next layer is a strip-eligible conv, pixel-granular otherwise."""
+    if isinstance(nxt, ConvSpec) and engine.strip_eligible(
+            out_w, nxt.k, nxt.stride, nxt.padding, co=nxt.out_ch):
+        return engine.STRIP_W
+    return 1
+
+
+def _pixel_events(x):
+    """(B, H, W) fired-activation counts per pixel + the NHWC shape.
+
+    Stream inputs derive the map from the compacted event values
+    (twin-free — DESIGN.md §6); dense inputs count non-zeros directly.
+    """
+    if isinstance(x, engine.EventStream):
+        b, h, w, c = x.logical_shape
+        return x.per_row_scalar_events().reshape(b, h, w), (b, h, w, c)
+    nz = jnp.sum(jnp.abs(x) > 0, axis=-1, dtype=jnp.float32)
+    return nz, x.shape
+
+
+def _density(x) -> jax.Array:
+    """Fired fraction of an activation (stream: twin-free event count)."""
+    if isinstance(x, engine.EventStream):
+        m, k = x.shape
+        return x.num_scalar_events / (m * k)
+    return jnp.mean(jnp.abs(x) > 0)
+
+
 def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
              cfg: engine.EngineConfig, chain: bool, stats: list | None = None):
     """The one traced forward body behind ``cnn_forward`` /
@@ -196,12 +234,18 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
     ``chain=False`` is the per-layer round-trip twin (dense at every
     boundary, identical compute geometry) that the chained path is measured
     against.  ``stats`` (a list to append to) requests per-layer event
-    accounting; instrumentation reads cached dense twins, never decodes.
+    accounting, derived from the compacted event values themselves on the
+    chained path (twin-free — no dense twin, no decode).
     """
     layers = spec.layers
-    # Conv tiles are pixel-granular (blk_m == 1) in both modes so the
-    # chained and round-trip paths multiply identical tiles in identical
-    # order — bit-for-bit equality, not just allclose (DESIGN.md §5).
+    # The conv *dispatch* config stays pixel-granular (blk_m == 1) so the
+    # round-trip twin multiplies identical tiles in identical order as the
+    # chained path — bit-for-bit equality, not just allclose (DESIGN.md §5).
+    # The chained path's granularity rides the *stream*: fired streams are
+    # strip-aligned (blk_m == STRIP_W) whenever the consuming layer can ride
+    # the fused-tap kernel, which only interleaves exact zeros into the same
+    # reduction tree, so bitwise equality with the per-tap twin survives
+    # (DESIGN.md §6).
     conv_base = cfg.replace(blk_m=1, blk_k=min(8, cfg.blk_k))
     for i, (layer, wgt) in enumerate(zip(layers, params)):
         nxt = layers[i + 1] if i + 1 < len(layers) else None
@@ -210,35 +254,36 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
                 else x.shape[-1]
             ccfg = conv_base.replace(threshold=0.0).for_conv(ci)
             if stats is not None:
-                xd = _dense_nhwc(x)
-                b, h, w, c = xd.shape
-                nz = (jnp.abs(xd) > 0).astype(jnp.float32)
+                nzmap, (b, h, w, c) = _pixel_events(x)   # twin-free on chain
                 touched = _touched_outputs(h, w, layer.k, layer.stride,
                                            layer.padding)
                 stats.append(dict(
-                    event_macs=jnp.sum(
-                        nz * touched[None, :, :, None].astype(jnp.float32))
-                    * layer.out_ch,
-                    in_events=jnp.sum(nz)))
+                    event_macs=jnp.sum(nzmap * touched[None].astype(
+                        jnp.float32)) * layer.out_ch,
+                    in_events=jnp.sum(nzmap)))
             acc = engine.conv2d(x, wgt, cfg=ccfg, stride=layer.stride,
                                 padding=layer.padding)
             if chain:
-                # Drop the dense twin at conv→conv boundaries (events-only);
-                # keep it when a pool/FC consumes it, or for instrumentation.
-                keep = stats is not None or not isinstance(nxt, ConvSpec)
-                x = engine.fire_conv(acc, conv_base, keep_dense=keep)
+                # Drop the dense twin at conv→conv boundaries (events-only —
+                # instrumentation reads event values, never the twin); keep
+                # it when a pool/FC consumes it.
+                keep = not isinstance(nxt, ConvSpec)
+                x = engine.fire_conv(acc, conv_base, keep_dense=keep,
+                                     blk_m=_next_conv_blk_m(nxt,
+                                                            acc.shape[2]))
             else:
                 x = fire(acc, fire_cfg)              # fire phase == ReLU @ 0
             if stats is not None:
-                stats[-1]["out_density"] = jnp.mean(
-                    jnp.abs(_dense_nhwc(x)) > 0)
+                stats[-1]["out_density"] = _density(x)
         elif isinstance(layer, PoolSpec):
             pooled = max_pool_nhwc(_dense_nhwc(x), layer.k, layer.stride)
             if chain and isinstance(nxt, ConvSpec):
-                # Re-encode after the pool — the chain's only densify point.
+                # Re-encode after the pool — the chain's only densify point —
+                # at the granularity the next conv consumes.
                 x = engine.EventStream.encode_nhwc(
                     pooled, blk_k=conv_base.blk_k,
-                    keep_dense=stats is not None)
+                    blk_m=_next_conv_blk_m(nxt, pooled.shape[2]),
+                    keep_dense=False)
             else:
                 x = pooled
         elif isinstance(layer, FCSpec):
@@ -250,23 +295,21 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
             flat = x if isinstance(x, engine.EventStream) \
                 else x.reshape(x.shape[0], -1)
             if stats is not None:
-                fd = _dense(flat) if isinstance(flat, engine.EventStream) \
-                    else flat
-                stats.append(dict(
-                    event_macs=jnp.sum((jnp.abs(fd) > 0).astype(jnp.float32))
-                    * layer.out,                                 # Algorithm 2
-                    in_events=jnp.sum(jnp.abs(fd) > 0,
-                                      dtype=jnp.float32)))
+                in_ev = flat.num_scalar_events \
+                    if isinstance(flat, engine.EventStream) \
+                    else jnp.sum(jnp.abs(flat) > 0, dtype=jnp.float32)
+                stats.append(dict(event_macs=in_ev * layer.out,  # Algorithm 2
+                                  in_events=in_ev))
             acc = engine.linear(flat, wgt, cfg=cfg.replace(threshold=0.0))
             last = layer is spec.layers[-1]
             if last:
                 x = acc
             elif chain:
-                x = engine.fire(acc, cfg, keep_dense=stats is not None)
+                x = engine.fire(acc, cfg, keep_dense=False)
             else:
                 x = fire(acc, fire_cfg)
             if stats is not None:
-                stats[-1]["out_density"] = jnp.mean(jnp.abs(_dense(x)) > 0)
+                stats[-1]["out_density"] = _density(x)
     if isinstance(x, engine.EventStream) and x.logical_shape is not None:
         return x.dense_nhwc()        # conv-final spec: keep the NHWC view
     return _dense(x)

@@ -34,6 +34,55 @@ def test_stats_invariants(rng):
         assert 0.0 <= st["out_density"] <= 1.0
 
 
+def test_stats_twin_free_parity_with_dense_counts():
+    """The instrumented pipeline derives in_events/event_macs from the
+    compacted event values (twin-free); they must equal the counts computed
+    the old way, from the dense activation maps of the bit-identical
+    per-layer round-trip twin."""
+    import jax.numpy as jnp
+
+    from repro import engine
+    from repro.models.cnn import (CNNSpec, ConvSpec, FCSpec, PoolSpec,
+                                  _touched_outputs)
+    from repro.models.layers import max_pool_nhwc
+
+    spec = CNNSpec("mini", 12, 3,
+                   (ConvSpec(6, 3, 2, 1), ConvSpec(8, 3, 1, 1), PoolSpec(),
+                    FCSpec(10)), num_classes=10)
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 12, 12, 3)))
+    _, stats = run_with_stats(params, x, spec)
+
+    # Dense-twin reference: replicate the round-trip twin's intermediates
+    # (bit-identical to the chained path) and count non-zeros directly.
+    cfg = engine.EngineConfig(backend="block", blk_m=1, blk_k=8)
+    xd, want = x, []
+    for layer, wgt in zip(spec.layers, params):
+        if isinstance(layer, ConvSpec):
+            nz = np.sum(np.abs(np.asarray(xd)) > 0, axis=-1)
+            touched = np.asarray(_touched_outputs(
+                xd.shape[1], xd.shape[2], layer.k, layer.stride,
+                layer.padding))
+            want.append(dict(in_events=float(nz.sum()),
+                             event_macs=float((nz * touched[None]).sum()
+                                              * layer.out_ch)))
+            acc = engine.conv2d(xd, wgt, cfg=cfg.for_conv(xd.shape[-1]),
+                                stride=layer.stride, padding=layer.padding)
+            xd = jnp.where(acc > 0, acc, 0)          # fire @ threshold 0
+        elif isinstance(layer, PoolSpec):
+            xd = max_pool_nhwc(xd, layer.k, layer.stride)
+        else:
+            flat = np.asarray(xd).reshape(xd.shape[0], -1)
+            nz = float(np.sum(np.abs(flat) > 0))
+            want.append(dict(in_events=nz, event_macs=nz * layer.out))
+            xd = engine.linear(jnp.asarray(flat),
+                               wgt, cfg=cfg)
+    assert len(stats) == len(want)
+    for got, ref in zip(stats, want):
+        assert got["in_events"] == ref["in_events"], (got, ref)
+        assert got["event_macs"] == ref["event_macs"], (got, ref)
+
+
 def test_analytic_matches_measured_dense_macs():
     """Analytic dense-MAC accounting equals the measured path's counts."""
     s = VGG16.scaled(32)

@@ -140,7 +140,7 @@ def test_fire_conv_stream_geometry():
 
 
 def test_conv_event_ops_registered():
-    for op in ("conv2d_events",):
+    for op in ("conv2d_events", "conv2d_events_strip"):
         assert set(engine.list_backends(op)) == {"block", "pallas"}, op
     assert set(engine.BACKENDS) <= set(engine.list_backends("fire_conv"))
 

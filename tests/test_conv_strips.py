@@ -1,0 +1,243 @@
+"""Strip-tiled fused-tap event conv (DESIGN.md §6).
+
+The fused kernel consumes a strip-aligned (blk_m == STRIP_W) conv stream in
+one launch per layer; it must be *bit-identical* to the pixel-granular
+per-tap path (the oracle) — strips only interleave exact zeros into the
+same reduction tree.  Ineligible geometry (stride != 1, W % 8 != 0, odd
+widths, misaligned output width) must degrade visibly, never silently.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import events as ev
+from repro.core.mnf_conv import dense_conv2d
+from repro.kernels.event_conv import fused_conv_plan
+from repro.models.cnn import (CNNSpec, ConvSpec, FCSpec, cnn_forward,
+                              init_cnn_params)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _fired(seed, shape, sparsity=0.5):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=shape) * (r.random(shape) > sparsity)
+    return jax.nn.relu(jnp.asarray(x.astype(np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: fused strip path == per-tap pixel path, per backend
+# ---------------------------------------------------------------------------
+
+ELIGIBLE = [  # (B, H, W, CI, CO, k, padding) — all strip-eligible at stride 1
+    (2, 6, 8, 5, 8, 3, 1),
+    (1, 8, 16, 3, 16, 3, 1),
+    (2, 5, 8, 4, 16, 5, 2),   # odd height
+    (1, 9, 16, 2, 8, 1, 0),   # 1x1 conv
+    (1, 4, 16, 3, 8, 9, 4),   # widest eligible filter (max tap shift)
+]
+
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@pytest.mark.parametrize("shape", ELIGIBLE)
+def test_strip_bitwise_equals_pertap_and_oracle(backend, shape):
+    b, h, w0, ci, co, k, p = shape
+    x = _fired(sum(shape), (b, h, w0, ci))
+    r = np.random.default_rng(1)
+    wgt = jnp.asarray(r.normal(size=(k, k, ci, co)).astype(np.float32))
+    cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=4, blk_n=4)
+    strip = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=False)
+    pixel = engine.fire_conv(x, cfg, blk_m=1, keep_dense=False)
+    assert strip.events.block_idx.shape[0] * engine.STRIP_W \
+        == pixel.events.block_idx.shape[0]          # 8x smaller event grid
+    with engine.trace_dispatch() as recs:
+        y_strip = engine.conv2d(strip, wgt, cfg=cfg, padding=p)
+    assert any(rec.get("strip") and rec.get("chained")
+               and rec.get("launches") == 1 for rec in recs), recs
+    assert not any(rec.get("decode") or rec.get("fallback_decode")
+                   for rec in recs)
+    y_pix = engine.conv2d(pixel, wgt, cfg=cfg, padding=p)
+    assert bool(jnp.all(y_strip == y_pix)), "fused strip != per-tap bitwise"
+    ref = dense_conv2d(x, wgt, stride=1, padding=p)
+    np.testing.assert_allclose(np.asarray(y_strip), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# eligibility rules + EngineConfig.for_conv strip selection/validation
+# ---------------------------------------------------------------------------
+
+def test_strip_eligibility_rules():
+    assert engine.strip_eligible(8, 3, 1, 1)
+    assert engine.strip_eligible(16, 9, 1, 4)          # OX == W
+    assert not engine.strip_eligible(8, 3, 2, 1)       # stride 2
+    assert not engine.strip_eligible(12, 3, 1, 1)      # W % 8 != 0
+    assert not engine.strip_eligible(7, 3, 1, 1)       # odd width
+    assert not engine.strip_eligible(16, 3, 1, 0)      # OX = 14, misaligned
+    # ragged/tiny CO voids the bitwise contract (M-dependent dot lowering)
+    assert engine.strip_eligible(8, 3, 1, 1, co=engine.STRIP_CO_MIN)
+    assert engine.strip_eligible(8, 3, 1, 1, co=64)
+    assert not engine.strip_eligible(8, 3, 1, 1, co=2)
+    assert not engine.strip_eligible(8, 3, 1, 1, co=9)
+    assert not engine.strip_eligible(8, 3, 1, 1, co=12)
+    assert "stride" in engine.strip_ineligible_reason(8, 3, 2, 1)
+    assert "width 12" in engine.strip_ineligible_reason(12, 3, 1, 1)
+    assert "output width" in engine.strip_ineligible_reason(16, 3, 1, 0)
+    assert "output channels" in engine.strip_ineligible_reason(8, 3, 1, 1,
+                                                               co=2)
+
+
+def test_tiny_co_strip_stream_falls_back_visibly():
+    """A strip stream fed to a conv with CO < STRIP_CO_MIN must take the
+    visible decode fallback (the bitwise contract does not hold there)."""
+    x = _fired(8, (1, 6, 8, 4))
+    r = np.random.default_rng(8)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 2)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, padding=1)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    ref = dense_conv2d(x, wgt, stride=1, padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_for_conv_strip_selection():
+    cfg = engine.EngineConfig(blk_k=128)
+    assert cfg.for_conv(3).blk_k == 3                  # legacy clamp intact
+    assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1).blk_m \
+        == engine.STRIP_W
+    # auto mode silently (and correctly) degrades to pixel granularity
+    assert cfg.for_conv(16, width=12, k=3, stride=1, padding=1).blk_m == 1
+    assert cfg.for_conv(16, width=16, k=3, stride=2, padding=1).blk_m == 1
+    # strips=False forces pixels even on eligible geometry
+    assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1,
+                        strips=False).blk_m == 1
+
+
+def test_for_conv_rejects_degrading_strip_request():
+    """strips=True on geometry that would silently fall back to pixel
+    granularity must raise with the failing rule, not degrade."""
+    cfg = engine.EngineConfig()
+    with pytest.raises(ValueError, match="stride"):
+        cfg.for_conv(16, width=16, k=3, stride=2, padding=1, strips=True)
+    with pytest.raises(ValueError, match="not a multiple"):
+        cfg.for_conv(16, width=12, k=3, stride=1, padding=1, strips=True)
+    with pytest.raises(ValueError, match="output width"):
+        cfg.for_conv(16, width=16, k=3, stride=1, padding=0, strips=True)
+    with pytest.raises(ValueError, match="width= and k="):
+        cfg.for_conv(16, strips=True)
+    # eligible geometry passes and picks strips
+    assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1,
+                        strips=True).blk_m == engine.STRIP_W
+
+
+# ---------------------------------------------------------------------------
+# fallback boundaries: W % 8 != 0, stride 2 — visible, never silent
+# ---------------------------------------------------------------------------
+
+def test_strip_stream_stride2_falls_back_visibly():
+    x = _fired(3, (1, 6, 8, 4))
+    r = np.random.default_rng(3)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 5)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)   # twin kept: free decode
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, stride=2, padding=1)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    ref = dense_conv2d(x, wgt, stride=2, padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_fire_conv_strip_requires_aligned_width():
+    x = _fired(4, (1, 4, 12, 3))
+    with pytest.raises(AssertionError):
+        engine.fire_conv(x, engine.EngineConfig(), blk_m=engine.STRIP_W)
+    with pytest.raises(AssertionError):
+        engine.EventStream.encode_nhwc(x, blk_k=3, blk_m=engine.STRIP_W)
+
+
+def test_mixed_strip_pixel_network_bitwise():
+    """Widths crossing the 8-boundary: strip and pixel conv layers mix on
+    the chain, and the chained forward stays bit-identical to the per-tap
+    round-trip twin across the fallback boundary."""
+    spec = CNNSpec("edge", 12, 3,
+                   (ConvSpec(8, 3, 1, 1),     # W 12 -> 12: ineligible (W%8)
+                    ConvSpec(8, 5, 1, 0),     # W 12 -> 8: ineligible input
+                    ConvSpec(8, 3, 1, 1),     # W 8 -> 8: strip-eligible
+                    ConvSpec(8, 3, 1, 1),     # W 8 -> 8: strip-eligible
+                    FCSpec(10)), num_classes=10)
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 12, 12, 3)))
+    with engine.trace_dispatch() as recs:
+        ym = cnn_forward(params, x, spec, mnf=True, chain=True)
+    strips = [rec for rec in recs if rec.get("strip") and rec.get("chained")]
+    pertap = [rec for rec in recs if rec.get("chained")
+              and rec["op"] == "conv2d" and not rec.get("strip")]
+    assert len(strips) == 2 and len(pertap) == 1, recs
+    assert not any(rec.get("fallback_decode") for rec in recs)
+    yr = cnn_forward(params, x, spec, mnf=True, chain=False)
+    assert bool(jnp.all(ym == yr)), "chained != round-trip across boundary"
+    yd = cnn_forward(params, x, spec, mnf=False)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
+                               rtol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# strip encoding / gather primitives
+# ---------------------------------------------------------------------------
+
+def test_strip_encode_nhwc_roundtrip_and_grid():
+    x = _fired(5, (2, 3, 16, 5))
+    s = engine.EventStream.encode_nhwc(x, blk_k=4, blk_m=engine.STRIP_W,
+                                       keep_dense=False)
+    assert s.blk_m == engine.STRIP_W
+    np.testing.assert_array_equal(np.asarray(s.dense_nhwc()), np.asarray(x))
+    p = engine.EventStream.encode_nhwc(x, blk_k=4, blk_m=1, keep_dense=False)
+    assert s.events.block_idx.shape[0] * engine.STRIP_W \
+        == p.events.block_idx.shape[0]
+
+
+def test_gather_row_strips_moves_rows_exactly():
+    x = _fired(6, (1, 2, 16, 4), sparsity=0.3)
+    s = engine.EventStream.encode_nhwc(x, blk_k=4, blk_m=engine.STRIP_W,
+                                       keep_dense=False)
+    g = s.events.block_idx.shape[0]
+    idx = jnp.arange(g, dtype=jnp.int32)
+    live = jnp.ones((g,), bool)
+    for d in (-3, 0, 2, 5):
+        gat = ev.gather_row_strips(s.events, idx, live, d)
+        dec = ev.decode_block_events(gat, blk_m=engine.STRIP_W, blk_k=4,
+                                     m=g * engine.STRIP_W, k=4)
+        flat = np.asarray(x).reshape(-1, 4)
+        want = np.zeros_like(flat)
+        for strip in range(g):
+            for i in range(engine.STRIP_W):
+                jsrc = i + d
+                if 0 <= jsrc < engine.STRIP_W:
+                    want[strip * 8 + i] = flat[strip * 8 + jsrc]
+        np.testing.assert_array_equal(np.asarray(dec), want)
+
+
+def test_scalar_event_rows_twin_free_counts():
+    x = _fired(7, (2, 3, 8, 5))
+    s = engine.fire_conv(x, engine.EngineConfig(backend="block", blk_k=4),
+                         blk_m=engine.STRIP_W, keep_dense=False)
+    want = np.sum(np.abs(np.asarray(x)) > 0, axis=-1).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(s.per_row_scalar_events()),
+                                  want.astype(np.float32))
+    assert float(s.num_scalar_events) == float(want.sum())
+
+
+def test_fused_conv_plan_grid_reduction():
+    plan = fused_conv_plan((2, 8, 16, 8), 3, 1, nkb=2)
+    assert plan["launches_fused"] == 1 and plan["launches_per_tap"] == 9
+    assert plan["event_grid_pixel"] == 8 * plan["event_grid_strip"]
+    assert plan["grid_reduction"] == 8.0
+    assert plan["gathered_groups_fused"] == 0
