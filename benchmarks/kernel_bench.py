@@ -19,10 +19,12 @@ conv streams chained end-to-end) against the per-layer round-trip twin and
 records where each path densifies plus per-conv-layer launch counts (taps
 fused vs per-tap).  ``--conv-fused`` times the fused strip-tiled conv
 kernel (one launch per layer, 8x smaller event grid) against the per-tap
-chained path at matched shapes.  All write/merge BENCH_engine.json.
+chained path at matched shapes.  ``--pool`` times the event-native
+max-pool (segment max over stream events, one launch) against the dense
+pool + re-encode round-trip.  All write/merge BENCH_engine.json.
 ``--smoke`` runs a fast subset of everything (CI anti-rot) and **fails**
-if an eligible strip layer falls back to a decode (fallback_decode) — the
-silent-degrade bug class.
+if an eligible strip layer or pool boundary falls back to a decode
+(fallback_decode) — the silent-degrade bug class.
 """
 from __future__ import annotations
 
@@ -173,11 +175,70 @@ def engine_rows(out_path: str = "BENCH_engine.json", reps=3):
 
 
 def _smoke_spec():
-    """Tiny 2-conv + pool + FC net: exercises every chain seam in seconds."""
+    """Tiny conv→conv→pool→conv→FC net: exercises every chain seam —
+    conv→conv, the event-native conv→pool→conv boundary, pool→FC — in
+    seconds."""
     from repro.models.cnn import CNNSpec, ConvSpec, FCSpec, PoolSpec
     return CNNSpec("mini", 8, 3,
                    (ConvSpec(8, 3, 1, 1), ConvSpec(8, 3, 1, 1), PoolSpec(),
-                    FCSpec(10)))
+                    ConvSpec(8, 3, 1, 1), FCSpec(10)))
+
+
+def pool_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=3):
+    """Event-native max-pool (one launch, events in → events out) vs the
+    dense pool + re-encode round-trip at matched shapes (pool entries).
+
+    Same stream in, same pooled stream out (bit-exact vs the dense
+    ``reduce_window`` oracle): the difference is purely the inter-layer
+    format — the event path never materializes the input feature map.
+    CI-fatal if an eligible stream falls back to a decode instead of
+    riding the segment-max kernel (fallback_decode — the silent-degrade
+    bug class, now covering pool boundaries too).
+    """
+    from repro.kernels.event_pool import pool_plan
+
+    rng = np.random.default_rng(0)
+    shapes = [(2, 8, 16, 8, 2, 2, 1)]
+    if not smoke:
+        shapes += [(2, 16, 16, 16, 2, 2, 8), (1, 15, 15, 8, 3, 2, 1)]
+    entries = []
+    for (b, h, w0, c, k, s, bm_in) in shapes:
+        x = rng.normal(size=(b, h, w0, c)).astype(np.float32)
+        x *= rng.random(x.shape) > 0.5
+        xd = jnp.maximum(jnp.asarray(x), 0.0)
+        for backend in ("pallas",):
+            cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=8)
+            stream = engine.fire_conv(xd, cfg, blk_m=bm_in, keep_dense=False)
+            with engine.trace_dispatch() as recs:
+                jax.eval_shape(lambda st: engine.maxpool2d(st, k, s, cfg=cfg),
+                               stream)
+            if not any(r.get("pool_events") for r in recs) or \
+                    any(r.get("fallback_decode") for r in recs):
+                raise RuntimeError(
+                    f"pool[{backend}]: eligible stream fell back instead of "
+                    f"riding the event-native pool: {recs}")
+
+            ev_fn = jax.jit(lambda st: engine.maxpool2d(st, k, s, cfg=cfg))
+            dense_fn = jax.jit(lambda xx: engine.EventStream.encode_nhwc(
+                engine.maxpool2d(xx, k, s, cfg=cfg), blk_k=cfg.blk_k,
+                keep_dense=False))
+            us_e, cus_e, ye = _time_thunk(lambda: ev_fn(stream), reps=reps)
+            us_d, cus_d, yd = _time_thunk(lambda: dense_fn(xd), reps=reps)
+            plan = pool_plan((b, h, w0, c), k, s,
+                             nkb=stream.events.num_k_blocks)
+            entries.append(dict(
+                kind="pool", backend=backend, b=b, h=h, w=w0, c=c, k=k,
+                stride=s, blk_m_in=bm_in,
+                event_us=round(us_e, 1), dense_us=round(us_d, 1),
+                event_compile_us=round(cus_e, 1),
+                dense_compile_us=round(cus_d, 1),
+                speedup=round(us_d / max(us_e, 1e-9), 3),
+                bit_exact=bool(jnp.all(ye.dense_nhwc() == yd.dense_nhwc())),
+                launches=plan["launches"], window_taps=plan["window_taps"],
+                event_grid=plan["event_grid"],
+                dense_reads=plan["dense_reads"]))
+    _merge_bench(out_path, entries, {"pool"})
+    return entries
 
 
 def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
@@ -265,8 +326,9 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
     ``boundaries`` records where each compiled graph densifies.
     """
     from repro.models.cnn import (ALEXNET, VGG16, ConvSpec, FCSpec, PoolSpec,
-                                  _trace_shapes, cnn_forward,
-                                  init_cnn_params, make_cnn_pipeline)
+                                  _trace_shapes, chain_boundary_summary,
+                                  cnn_forward, init_cnn_params,
+                                  make_cnn_pipeline)
 
     # AlexNet@64 has no strip-eligible layer (stride-4 conv1, W=7/3 tails);
     # VGG16@32 runs six of its twelve chained convs on the fused strip path.
@@ -296,6 +358,7 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                 decodes=sum(1 for r in recs if r.get("decode")),
                 fallback_decodes=sum(
                     1 for r in recs if r.get("fallback_decode")),
+                pool_events=sum(1 for r in recs if r.get("pool_events")),
                 chained_conv_launches=sum(
                     r.get("launches", 0) for r in recs
                     if r.get("chained") and r.get("op") == "conv2d"))
@@ -304,6 +367,13 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                 f"cnn_chain[{spec.name}]: chained pipeline hit "
                 f"fallback_decode — an eligible strip layer (or a chained "
                 f"boundary) silently densified")
+        summary = chain_boundary_summary(spec, batch=batch)
+        if counts["chained"]["pool_events"] != summary["pool_events"]:
+            raise RuntimeError(
+                f"cnn_chain[{spec.name}]: {summary['pool_events']} pool "
+                f"boundaries are event-eligible but only "
+                f"{counts['chained']['pool_events']} rode the event-native "
+                f"pool — a conv→pool→conv boundary silently densified")
 
         # Per-layer launch accounting (taps fused vs per-tap): the strip
         # layers of the chained graph run 1 launch each, everything else
@@ -315,7 +385,8 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                 continue
             h_in, w_in, _ = shapes[i]
             strip = bool(compute_idx > 0 and engine.strip_eligible(
-                w_in, layer.k, layer.stride, layer.padding))
+                w_in, layer.k, layer.stride, layer.padding,
+                co=layer.out_ch))
             per_layer.append(dict(
                 layer=i, k=layer.k, w_in=w_in, strip=strip,
                 launches_chained=1 if strip else layer.k ** 2,
@@ -368,9 +439,12 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
             launches=launches,
             boundaries=dict(
                 conv=n_conv, fc=n_fc, pool=n_pool,
-                # chained: only pool boundaries densify (cached twin + the
-                # permitted re-encode); roundtrip: every boundary is dense.
-                chained=dict(densify=n_pool, **counts["chained"]),
+                # chained: pools ride the event-native segment max, so the
+                # only densify points left are dense-pool fallbacks
+                # (ineligible geometry — 0 on both paper workloads);
+                # roundtrip: every boundary is dense.
+                chained=dict(densify=summary["densify"],
+                             **counts["chained"]),
                 roundtrip=dict(densify=n_conv + n_fc + n_pool - 1,
                                **counts["roundtrip"]))))
     _merge_bench(out_path, entries, {"cnn_chain"})
@@ -389,11 +463,16 @@ def main():
                     help="time the fused strip-tiled conv kernel (one "
                          "launch/layer) vs the per-tap chained path "
                          "(conv_fused entries)")
+    ap.add_argument("--pool", action="store_true",
+                    help="time the event-native max-pool (events in -> "
+                         "events out) vs the dense pool + re-encode "
+                         "round-trip (pool entries)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: 1-rep kernel microbench + engine "
-                         "sweep + mini-net cnn chain + one conv_fused "
-                         "shape — keeps every benchmark path from rotting "
-                         "and fails on strip-layer fallback_decode")
+                         "sweep + mini-net cnn chain + one conv_fused and "
+                         "one pool shape — keeps every benchmark path from "
+                         "rotting and fails on strip-layer or pool-boundary "
+                         "fallback_decode")
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args()
     if args.smoke:
@@ -405,6 +484,8 @@ def main():
             print(json.dumps(e))
         for e in conv_fused_rows(args.out, smoke=True, reps=1):
             print(json.dumps(e))
+        for e in pool_rows(args.out, smoke=True, reps=1):
+            print(json.dumps(e))
         return
     if args.engine:
         for e in engine_rows(args.out):
@@ -415,7 +496,10 @@ def main():
     if args.conv_fused:
         for e in conv_fused_rows(args.out):
             print(json.dumps(e))
-    if args.engine or args.cnn_chain or args.conv_fused:
+    if args.pool:
+        for e in pool_rows(args.out):
+            print(json.dumps(e))
+    if args.engine or args.cnn_chain or args.conv_fused or args.pool:
         return
     for name, us, compile_us, derived in rows():
         print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")

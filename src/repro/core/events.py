@@ -39,6 +39,7 @@ __all__ = [
     "gather_row_groups",
     "gather_row_strips",
     "pad_to_block_multiple",
+    "pool_window_map",
     "scalar_event_rows",
     "strip_eligible",
     "strip_ineligible_reason",
@@ -271,10 +272,11 @@ def strip_ineligible_reason(width: int, k: int, stride: int, padding: int,
     Strip tiling (blk_m == STRIP_W) needs every tap's shifted slice to be a
     row-shift of at most two adjacent strips: stride 1 (so output pixel x
     maps affinely to input pixel x with unit step), input and output widths
-    tiling into whole strips, and tap x-offsets within one strip of the
-    origin.  When the output-channel count ``co`` is known it must be a
-    multiple of STRIP_CO_MIN (see its note) so strip == per-tap stays
-    bitwise.
+    tiling into whole strips, padding at most k // 2 (so output strips
+    never outnumber the input strips the straddle plan pairs them with),
+    and tap x-offsets within one strip of the origin.  When the
+    output-channel count ``co`` is known it must be a multiple of
+    STRIP_CO_MIN (see its note) so strip == per-tap stays bitwise.
     """
     out_w = width + 2 * padding - k + 1
     if stride != 1:
@@ -284,6 +286,11 @@ def strip_ineligible_reason(width: int, k: int, stride: int, padding: int,
     if out_w <= 0 or out_w % STRIP_W:
         return (f"output width {out_w} (W + 2p - k + 1) not a multiple of "
                 f"STRIP_W={STRIP_W}")
+    if padding > k // 2:
+        return (f"padding {padding} > k//2 = {k // 2}: the output map "
+                f"outgrows the input and a tap shift can index outside the "
+                f"planned straddle halves (strip plans pair each output "
+                f"strip with its aligned input strip)")
     if padding > STRIP_W or k - 1 - padding > STRIP_W:
         return (f"tap x-offsets [-{padding}, {k - 1 - padding}] leave the "
                 f"adjacent-strip window (|dx - p| <= {STRIP_W})")
@@ -324,6 +331,9 @@ def strip_tap_map(logical_shape: tuple, k: int, padding: int):
 
     b, h, w, _ = logical_shape
     assert w % STRIP_W == 0, (logical_shape, "strip encoding needs W % 8 == 0")
+    assert padding <= k // 2, (k, padding, "strip plans pair each output "
+                               "strip with its aligned input strip; "
+                               "strip_ineligible_reason gates this")
     oh = h + 2 * padding - k + 1
     ow = w + 2 * padding - k + 1
     assert ow > 0 and ow % STRIP_W == 0, (logical_shape, k, padding)
@@ -357,6 +367,62 @@ def strip_tap_map(logical_shape: tuple, k: int, padding: int):
                 tap[t] = dy * k + dx
                 t += 1
     return src, live, shift, tap
+
+
+def pool_window_map(logical_shape: tuple, k: int, stride: int, blk_m: int):
+    """Static window gather plan for the event-native max-pool (DESIGN.md §7).
+
+    Maps each output pixel of a VALID k×k / ``stride`` max-pool over a
+    (B, H, W, C) feature map onto the event row groups of the input stream:
+    for output pixel p = (b, oy, ox) and window tap t = (dy, dx), the source
+    input pixel is q = (b, oy·stride + dy, ox·stride + dx), and the plan
+    names where q lives in the encoding:
+
+      src  (P_out, T) int32  row group holding q (q // blk_m — pixel groups
+                             at blk_m == 1, 8-pixel raster strips at
+                             blk_m == STRIP_W; both tile raster order, which
+                             is what makes the decomposition uniform)
+      row  (P_out, T) int32  q's row within the group's (blk_m, blk_k) tile
+      live (P_out, T) bool   False = no source pixel.  Always True for
+                             VALID pooling (the window never leaves the
+                             map); carried so a SAME-padded variant reuses
+                             the plan shape.
+
+    T = k·k window taps, ordered (dy, dx) ascending — the raster order the
+    dense ``reduce_window`` walks.  Max is order-invariant, so consumers
+    need no ordering contract; the order only keeps plans deterministic.
+    Everything here is shape-derived — plain numpy, evaluated at trace time.
+    """
+    import numpy as np
+
+    b, h, w, _ = logical_shape
+    assert k >= 1 and stride >= 1, (k, stride)
+    assert h >= k and w >= k, (logical_shape, k, "VALID window exceeds map")
+    if blk_m == STRIP_W:
+        assert w % STRIP_W == 0, (logical_shape,
+                                  "strip encoding needs W % 8 == 0")
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    p_out = b * oh * ow
+    pidx = np.arange(p_out, dtype=np.int64)
+    ox = pidx % ow
+    oy = (pidx // ow) % oh
+    bb = pidx // (ow * oh)
+    t_n = k * k
+    src = np.zeros((p_out, t_n), np.int32)
+    row = np.zeros((p_out, t_n), np.int32)
+    live = np.zeros((p_out, t_n), bool)
+    t = 0
+    for dy in range(k):
+        for dx in range(k):
+            iy = oy * stride + dy
+            ix = ox * stride + dx
+            q = (bb * h + iy) * w + ix          # raster flat pixel index
+            src[:, t] = (q // blk_m).astype(np.int32)
+            row[:, t] = (q % blk_m).astype(np.int32)
+            live[:, t] = (iy < h) & (ix < w)    # always true for VALID
+            t += 1
+    return src, row, live
 
 
 def decode_block_events(ev: BlockEvents, *, blk_m: int, blk_k: int,

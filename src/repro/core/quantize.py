@@ -6,7 +6,7 @@ weights/activations are int8 (simulated in fp32 carriers on CPU), partial
 sums are fp32/int32, and the fire phase re-quantizes.
 
 At LM scale (the assigned-architecture cells) we compute in bf16 — see
-DESIGN.md §7 item 2 — so this module is used by the CNN reproduction path
+DESIGN.md §8 item 2 — so this module is used by the CNN reproduction path
 and by tests.
 """
 from __future__ import annotations

@@ -24,7 +24,8 @@ Typical use::
 from repro.core.events import (STRIP_CO_MIN, STRIP_W, strip_eligible,
                                strip_ineligible_reason)
 from repro.engine.api import (conv2d, describe, fire, fire_conv, linear,
-                              matmul, sparsify)
+                              matmul, maxpool2d, pool_ineligible_reason,
+                              sparsify)
 from repro.engine.config import BACKENDS, EngineConfig
 from repro.engine.registry import (dispatch, get_backend, list_backends,
                                    register_backend, registered_ops)
@@ -38,6 +39,7 @@ __all__ = [
     "STRIP_CO_MIN", "STRIP_W", "strip_eligible", "strip_ineligible_reason",
     "register_backend", "get_backend", "dispatch", "list_backends",
     "registered_ops",
-    "matmul", "linear", "conv2d", "fire", "fire_conv", "sparsify", "describe",
+    "matmul", "linear", "conv2d", "maxpool2d", "pool_ineligible_reason",
+    "fire", "fire_conv", "sparsify", "describe",
     "trace_dispatch",
 ]

@@ -17,7 +17,8 @@ from repro.engine.config import EngineConfig
 from repro.engine.registry import dispatch, get_backend, list_backends
 from repro.engine.stream import EventStream
 
-__all__ = ["matmul", "linear", "conv2d", "fire", "fire_conv", "sparsify",
+__all__ = ["matmul", "linear", "conv2d", "maxpool2d",
+           "pool_ineligible_reason", "fire", "fire_conv", "sparsify",
            "describe"]
 
 _DEFAULT = EngineConfig()
@@ -39,6 +40,14 @@ def linear(x, w: jax.Array, b: jax.Array | None = None,
     measure against.
     """
     if isinstance(x, EventStream):
+        if x.shape[0] == 0:
+            # Zero-row stream (empty batch / dead layer): exact empty
+            # result, no backend dispatch — Pallas must not see a 0-extent
+            # launch.  Same accumulator dtype as the dispatch path, so the
+            # output dtype does not flip with the batch size.
+            y = jnp.zeros((0, w.shape[-1]),
+                          jnp.promote_types(x.events.values.dtype, w.dtype))
+            return y if b is None else y + b
         name = cfg.resolve_backend()
         if name in list_backends("linear_events"):
             trace.record(op="linear", backend=name, chained=True)
@@ -71,6 +80,17 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
         name = cfg.resolve_backend()
         is_conv_stream = (x.logical_shape is not None
                           and len(x.logical_shape) == 4)
+        if is_conv_stream and x.shape[0] == 0:
+            # Empty batch: exact empty output, no backend dispatch (Pallas
+            # must not see a 0-extent launch).  Accumulator dtype matches
+            # the dispatch path (batch size must not change the dtype).
+            bsz, h, wd, _ = x.logical_shape
+            from repro.core.mnf_conv import conv_out_size
+            oy = conv_out_size(h, w.shape[0], stride, padding)
+            ox = conv_out_size(wd, w.shape[1], stride, padding)
+            y = jnp.zeros((bsz, oy, ox, w.shape[-1]),
+                          jnp.promote_types(x.events.values.dtype, w.dtype))
+            return y if b is None else y + b
         k = w.shape[0]
         if is_conv_stream and x.blk_m == ev.STRIP_W:
             if (ev.strip_eligible(x.logical_shape[2], k, stride, padding,
@@ -97,6 +117,85 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
     return dispatch("conv2d", cfg)(x, w, b, cfg, stride, padding)
 
 
+def pool_ineligible_reason(x, k: int, stride: int | None = None,
+                           cfg: EngineConfig = _DEFAULT) -> str | None:
+    """Why ``maxpool2d`` cannot pool ``x`` in the event domain (None = can).
+
+    ``x`` is an :class:`EventStream` or an NHWC ``logical_shape`` tuple
+    (models decide boundary formats statically, before the stream exists).
+    The segment max runs with identity 0, so it needs a ReLU-family stream:
+    every event value non-negative (``magnitude`` fire can emit negative
+    events and is ineligible), event-absent positions exactly 0.  The
+    geometry must give the VALID window at least one output pixel, and the
+    resolved backend must register the ``maxpool2d_events`` op.
+    """
+    stride = k if stride is None else stride
+    shape = x.logical_shape if isinstance(x, EventStream) else x
+    if shape is None or len(shape) != 4:
+        return "not a conv stream (no NHWC logical_shape)"
+    b, h, w, c = shape
+    if k < 1 or stride < 1:
+        return f"degenerate window k={k}, stride={stride}"
+    if h < k or w < k:
+        return (f"VALID {k}x{k} window exceeds the {h}x{w} map "
+                f"(no output pixels)")
+    if cfg.magnitude:
+        return ("magnitude fire can emit negative events; the segment max "
+                "runs with identity 0 and needs a ReLU-family stream")
+    name = cfg.resolve_backend()
+    if name not in list_backends("maxpool2d_events"):
+        return f"backend {name!r} has no maxpool2d_events op"
+    return None
+
+
+def maxpool2d(x, k: int, stride: int | None = None,
+              cfg: EngineConfig = _DEFAULT, *, keep_dense: bool = True):
+    """VALID max-pool.  x: (B, H, W, C) dense or a conv ``EventStream``.
+
+    Conv streams are pooled *in the event domain* by eligible backends
+    (``maxpool2d_events``): a segment max over the stream's pixel/strip
+    events — fire emits non-negative values and event-absent positions are
+    exactly 0, so the result is bit-identical to the dense
+    ``reduce_window`` pool — re-emitted through the fire phase as a pooled
+    ``EventStream`` at ``cfg.blk_m`` granularity (pick it from the
+    consuming conv via :meth:`EngineConfig.for_pool`).  Conv→pool→conv
+    boundaries therefore stay events-only end to end (DESIGN.md §7).
+    Ineligible streams (see :func:`pool_ineligible_reason`) decode once —
+    visibly, never silently — and dense inputs return the dense pooled map.
+    """
+    stride = k if stride is None else stride
+    if isinstance(x, EventStream):
+        name = cfg.resolve_backend()
+        reason = pool_ineligible_reason(x, k, stride, cfg)
+        if reason is None:
+            b, h, w, c = x.logical_shape
+            oh = (h - k) // stride + 1
+            ow = (w - k) // stride + 1
+            # Emitted granularity: cfg.blk_m (the for_pool config path); a
+            # pooled width that cannot tile strips stays pixel-granular —
+            # consumers trust blk_m == STRIP_W implies W % STRIP_W == 0.
+            bm = cfg.blk_m if cfg.blk_m == 1 or (
+                cfg.blk_m == ev.STRIP_W and ow % ev.STRIP_W == 0) else 1
+            if x.shape[0] == 0:        # degenerate stream: exact empty out
+                return EventStream.empty(
+                    (b * oh * ow, c), blk_m=bm, blk_k=cfg.blk_k,
+                    dtype=x.events.values.dtype,
+                    logical_shape=(b, oh, ow, c))
+            trace.record(op="maxpool2d", backend=name, chained=True,
+                         pool_events=True, launches=1)
+            rows = get_backend("maxpool2d_events", name)(x, k, stride, cfg)
+            # Pooled values are already fired (non-negative, sub-threshold
+            # zeroed upstream): fire at threshold 0 is the identity
+            # re-emission at the consumer's granularity.
+            return fire_conv(rows.reshape(b, oh, ow, c),
+                             cfg.replace(threshold=0.0),
+                             keep_dense=keep_dense, blk_m=bm)
+        trace.record(op="maxpool2d", backend=name, fallback_decode=True,
+                     reason=reason)
+        x = x.dense_nhwc() if x.logical_shape is not None else x.dense()
+    return dispatch("maxpool2d", cfg)(x, k, stride, cfg)
+
+
 def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
          keep_dense: bool = True) -> EventStream:
     """Fire phase: threshold ``acc`` (M, K) and emit next-layer events.
@@ -109,6 +208,12 @@ def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
     # records — a custom fire backend must see the tile sizes the consuming
     # linear will assume.
     c = cfg.for_width(*acc.shape)
+    if 0 in acc.shape:
+        # Degenerate accumulator: explicit empty stream, no backend dispatch
+        # (a Pallas fire backend must not see a 0-extent launch).
+        return EventStream.empty(acc.shape, blk_m=c.blk_m, blk_k=c.blk_k,
+                                 capacity=c.capacity, dtype=acc.dtype,
+                                 fired=acc if keep_dense else None)
     fired, bev = dispatch("fire", cfg)(acc, c)
     stream = EventStream(events=bev, fired=fired if keep_dense else None,
                          shape=acc.shape, blk_m=c.blk_m, blk_k=c.blk_k)
@@ -135,6 +240,11 @@ def fire_conv(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
                            "W % STRIP_W == 0")
     acc2 = acc.reshape(b * h * w, c)
     c2 = cfg.replace(blk_m=blk_m).for_width(*acc2.shape)
+    if 0 in acc2.shape:
+        return EventStream.empty(acc2.shape, blk_m=c2.blk_m, blk_k=c2.blk_k,
+                                 capacity=c2.capacity, dtype=acc.dtype,
+                                 fired=acc2 if keep_dense else None,
+                                 logical_shape=(b, h, w, c))
     fired, bev = dispatch("fire_conv", cfg)(acc2, c2)
     return EventStream(events=bev, fired=fired if keep_dense else None,
                        shape=acc2.shape, blk_m=c2.blk_m, blk_k=c2.blk_k,

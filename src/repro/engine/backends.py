@@ -3,11 +3,13 @@
 Registers the repo's four existing execution paths of each MNF op under the
 backend registry, with one uniform signature per op:
 
-  matmul        fn(a, w, cfg)                     a: (M, K), w: (K, N)
-  linear        fn(x, w, b, cfg)                  x: (M, K)
-  linear_events fn(stream, w, b, cfg)             stream: EventStream
-  conv2d        fn(x, w, b, cfg, stride, padding) x: (B, H, W, CI), NHWC/HWIO
-  fire          fn(acc, cfg) -> (fired, BlockEvents)   acc: (M, K)
+  matmul           fn(a, w, cfg)                     a: (M, K), w: (K, N)
+  linear           fn(x, w, b, cfg)                  x: (M, K)
+  linear_events    fn(stream, w, b, cfg)             stream: EventStream
+  conv2d           fn(x, w, b, cfg, stride, padding) x: (B, H, W, CI)
+  maxpool2d        fn(x, k, stride, cfg)             x: (B, H, W, C) dense
+  maxpool2d_events fn(stream, k, stride, cfg) -> (B*OH*OW, C) pooled rows
+  fire             fn(acc, cfg) -> (fired, BlockEvents)   acc: (M, K)
 
 "dense" and "scalar" are oracles (no / scalar event machinery); "block" is
 the pure-jnp block-event dataflow; "pallas" runs the TPU kernels
@@ -243,6 +245,36 @@ def _conv2d_events_strip_pallas(stream, w, b, cfg: EngineConfig, stride,
     y = fused_event_conv2d(stream, w, padding=padding, blk_n=blk_n,
                            interpret=cfg.resolve_interpret())
     return _bias(y.reshape(bsz, oy, ox, co), b)
+
+
+# ---------------------------------------------------------------------------
+# maxpool2d — dense VALID max-pool (every backend) plus the event-native
+# segment-max over a conv EventStream (block/pallas): conv→pool→conv
+# boundaries stay events-only, no dense feature map in between (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+def _maxpool_dense(x, k, stride, cfg: EngineConfig):
+    assert x.ndim == 4, (x.shape, "maxpool2d wants an NHWC feature map")
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
+        "VALID")
+
+
+for _name in ("dense", "scalar", "block", "pallas"):
+    register_backend("maxpool2d", _name, _maxpool_dense)
+
+
+@register_backend("maxpool2d_events", "block")
+def _maxpool2d_events_block(stream, k, stride, cfg: EngineConfig):
+    from repro.kernels.event_pool.ref import event_max_pool2d_ref
+    return event_max_pool2d_ref(stream, k, stride)
+
+
+@register_backend("maxpool2d_events", "pallas")
+def _maxpool2d_events_pallas(stream, k, stride, cfg: EngineConfig):
+    from repro.kernels.event_pool.ops import event_max_pool2d
+    return event_max_pool2d(stream, k, stride,
+                            interpret=cfg.resolve_interpret())
 
 
 # ---------------------------------------------------------------------------

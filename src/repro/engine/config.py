@@ -127,3 +127,26 @@ class EngineConfig:
                 f"would silently degrade to pixel granularity: {reason}")
         return dataclasses.replace(cfg,
                                    blk_m=1 if reason is not None else STRIP_W)
+
+    def for_pool(self, c: int, *, width: int | None = None,
+                 k: int | None = None, stride: int = 1, padding: int = 0,
+                 co: int | None = None) -> "EngineConfig":
+        """Resolve the config an event-native max-pool emits under.
+
+        ``c`` is the pooled channel depth (pooling preserves channels, so
+        the K clamp mirrors :meth:`for_conv`).  ``blk_m`` becomes the
+        granularity of the **emitted** pooled stream, chosen from its
+        consumer: pass the consuming conv's geometry (``width`` = pooled
+        map width, plus ``k``/``stride``/``padding``/``co``) to upgrade to
+        strip tiling when that conv can ride the fused-tap kernel; with no
+        consumer geometry the pooled stream stays pixel-granular
+        (DESIGN.md §7).
+        """
+        from repro.core.events import STRIP_W, strip_ineligible_reason
+
+        cfg = dataclasses.replace(self, blk_k=min(self.blk_k, max(c, 1)))
+        if width is None or k is None:
+            return dataclasses.replace(cfg, blk_m=1)
+        reason = strip_ineligible_reason(width, k, stride, padding, co)
+        return dataclasses.replace(cfg,
+                                   blk_m=1 if reason is not None else STRIP_W)

@@ -57,11 +57,41 @@ class EventStream:
     # -- construction -------------------------------------------------------
 
     @classmethod
+    def empty(cls, shape: tuple[int, int], *, blk_m: int, blk_k: int,
+              capacity: int | None = None, fired: jax.Array | None = None,
+              dtype=jnp.float32,
+              logical_shape: tuple | None = None) -> "EventStream":
+        """An explicitly event-free stream for a degenerate (M, K) shape.
+
+        A zero-row activation (empty batch, fully-dead layer) has a
+        zero-size event grid; building it here — instead of running the
+        encode machinery or a fire backend over it — keeps 0-extent
+        launches away from Pallas (which rejects zero-size grid slices).
+        The array shapes match what :meth:`encode` would produce.
+        """
+        m, k = shape
+        g = -(-m // blk_m) if m > 0 else 0
+        nkb = -(-k // blk_k) if k > 0 else 0
+        cap = nkb if capacity is None else min(capacity, nkb)
+        cap = max(cap, 1) if nkb > 0 else 1
+        bev = ev.BlockEvents(
+            values=jnp.zeros((g, cap, blk_m, blk_k), dtype),
+            block_idx=jnp.zeros((g, cap), jnp.int32),
+            counts=jnp.zeros((g,), jnp.int32),
+            num_k_blocks=nkb)
+        return cls(events=bev, fired=fired, shape=(m, k), blk_m=blk_m,
+                   blk_k=blk_k, logical_shape=logical_shape)
+
+    @classmethod
     def encode(cls, x: jax.Array, *, blk_m: int, blk_k: int,
                capacity: int | None = None, threshold: float = 0.0,
                keep_dense: bool = True) -> "EventStream":
         """Encode a dense (M, K) activation matrix into a stream."""
         m, k = x.shape
+        if m == 0 or k == 0:
+            return cls.empty((m, k), blk_m=blk_m, blk_k=blk_k,
+                             capacity=capacity, dtype=x.dtype,
+                             fired=x if keep_dense else None)
         xp = ev.pad_to_block_multiple(x, blk_m, 0)
         xp = ev.pad_to_block_multiple(xp, blk_k, 1)
         bev = ev.encode_block_events(xp, blk_m=blk_m, blk_k=blk_k,

@@ -1,0 +1,7 @@
+from repro.kernels.event_pool.kernel import (event_pool_kernel,
+                                             event_pool_pallas)
+from repro.kernels.event_pool.ops import event_max_pool2d, pool_plan
+from repro.kernels.event_pool.ref import event_max_pool2d_ref
+
+__all__ = ["event_pool_kernel", "event_pool_pallas", "event_max_pool2d",
+           "event_max_pool2d_ref", "pool_plan"]

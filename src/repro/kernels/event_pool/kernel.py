@@ -1,0 +1,111 @@
+"""Event-native max-pool Pallas TPU kernel (DESIGN.md §7).
+
+One launch pools an entire layer straight from its fired ``EventStream`` —
+the dense feature map is never read.  The grid is (P_out, T, E): output
+pixel × window tap (T = k·k) × event slot, mirroring the fused conv
+kernel's plan-driven indirection:
+
+  a_vals (G_in, E, bm, bk)   the stream's event tiles, consumed in place —
+                             the tile DMA'd for step (p, t, e) is
+                             ``a_vals[src[p, t], e]`` (scalar-prefetched
+                             window plan from ``core.events.pool_window_map``).
+  out    (P_out, nkb, bk)    pooled rows, written once per pixel from a
+                             VMEM segment-max scratch.
+
+Per live event the kernel picks the window pixel's row out of the (bm, bk)
+tile with a 0/1 selection matmul (exact value move, same idiom as the
+fused conv kernel's row shifts) and max-accumulates it into the scratch
+row named by the event's direct K-block address — a segment max keyed by
+weight-tile address, identity 0.  Because fire emits non-negative values
+and event-absent positions are exactly 0, the result is bit-identical to
+the dense ``reduce_window`` max of the fired map.
+
+``@pl.when(e < cnt[p, t])`` idles the unit on padded event slots — the
+paper's low-power idle, now covering the pool windows too: a fully dead
+window does zero work and emits the exact-0 pooled row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["event_pool_kernel", "event_pool_pallas"]
+
+
+def event_pool_kernel(row_ref, src_ref, cnt_ref, a_idx_ref,
+                      # ^ scalar-prefetch refs (window plan + event addresses)
+                      a_vals_ref,              # VMEM input (1, 1, bm, bk)
+                      out_ref,                 # VMEM output (1, nkb, bk)
+                      acc_ref):                # VMEM scratch (nkb, bk) f32
+    p = pl.program_id(0)
+    t = pl.program_id(1)
+    e = pl.program_id(2)
+    num_t = pl.num_programs(1)
+    num_e = pl.num_programs(2)
+
+    @pl.when((t == 0) & (e == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(e < cnt_ref[p, t])
+    def _segmax():
+        a = a_vals_ref[0, 0]                  # (bm, bk) source event tile
+        bm = a.shape[0]
+        r = row_ref[p, t]
+        # Exact row pick: 0/1 selection matmul (no rounding, rides the MXU —
+        # the same move idiom as the fused conv kernel's straddle shifts).
+        sel = (jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1) == r
+               ).astype(a.dtype)
+        picked = jnp.dot(sel, a, preferred_element_type=jnp.float32)
+        kb = a_idx_ref[src_ref[p, t], e]      # direct K-block address
+        cur = pl.load(acc_ref, (pl.dslice(kb, 1), slice(None)))
+        pl.store(acc_ref, (pl.dslice(kb, 1), slice(None)),
+                 jnp.maximum(cur, picked))
+
+    @pl.when((t == num_t - 1) & (e == num_e - 1))
+    def _writeback():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nkb", "interpret", "out_dtype"))
+def event_pool_pallas(a_vals: jax.Array, a_idx: jax.Array, row: jax.Array,
+                      src: jax.Array, cnt: jax.Array, *, nkb: int,
+                      interpret: bool = False,
+                      out_dtype=jnp.float32) -> jax.Array:
+    """One fused launch: y[p] = max_t max_e rowpick(a[src[p,t], e]), id 0.
+
+    a_vals/a_idx: event tiles (G_in, E, bm, bk) / addresses (G_in, E).
+    row/src/cnt: (P_out, T) window plan — source group, row within its tile,
+    live event count per (output pixel, window tap).  Returns
+    (P_out, nkb, bk) pooled rows in K-block layout.
+    """
+    g_in, e, bm, bk = a_vals.shape
+    p_out, t_n = src.shape
+    assert row.shape == src.shape == cnt.shape, (row.shape, src.shape,
+                                                 cnt.shape)
+
+    grid = (p_out, t_n, e)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda pi, ti, ei, rw, sr, ct, ai:
+                         (sr[pi, ti], ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nkb, bk),
+                               lambda pi, ti, ei, rw, sr, ct, ai:
+                               (pi, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((nkb, bk), jnp.float32)],
+    )
+    return pl.pallas_call(
+        event_pool_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((p_out, nkb, bk), out_dtype),
+        interpret=interpret,
+        name="mnf_event_pool",
+    )(row, src, cnt, a_idx, a_vals)

@@ -1,0 +1,66 @@
+"""Public wrappers around the event-native max-pool kernel (DESIGN.md §7).
+
+``event_max_pool2d`` consumes a conv ``EventStream`` (pixel-granular or
+strip-aligned) and computes the pooled feature-map rows in **one** Pallas
+launch — the engine registry's "pallas" backend of ``maxpool2d_events``.
+``pool_plan`` exposes the static launch accounting (window taps, event grid
+consumed vs the dense window read) that benchmarks record in
+BENCH_engine.json.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.kernels.event_pool.kernel import event_pool_pallas
+
+__all__ = ["event_max_pool2d", "pool_plan"]
+
+
+def event_max_pool2d(stream, k: int, stride: int, *,
+                     interpret: bool = False) -> jax.Array:
+    """Event-native max-pool, one Pallas launch.  Returns (B·OH·OW, C).
+
+    ``stream`` must carry an NHWC ``logical_shape``; the engine API gates
+    eligibility (ReLU-family fire — non-negative events — and window within
+    the map) before dispatching here.
+    """
+    b, h, w, c = stream.logical_shape
+    bev = stream.events
+    src, row, live = ev.pool_window_map(stream.logical_shape, k, stride,
+                                        stream.blk_m)
+    p_n = src.shape[0]
+    nkb, bk = bev.num_k_blocks, stream.blk_k
+    if p_n == 0:                       # degenerate batch/map: no launch
+        return jnp.zeros((0, c), bev.values.dtype)
+    src_j = jnp.asarray(src)
+    cnt = jnp.where(jnp.asarray(live), bev.counts[src_j], 0)
+    y = event_pool_pallas(bev.values, bev.block_idx, jnp.asarray(row),
+                          src_j, cnt.astype(jnp.int32), nkb=nkb,
+                          interpret=interpret)
+    return y.reshape(p_n, nkb * bk)[:, :c]
+
+
+def pool_plan(logical_shape: tuple, k: int, stride: int, *,
+              nkb: int, capacity: int | None = None) -> dict:
+    """Static launch accounting for one event-pool layer vs the dense pool.
+
+    ``event_grid`` counts the (window tap × event slot) steps the kernel's
+    grid walks per output pixel; ``dense_reads`` is what the dense
+    ``reduce_window`` pool touches (k·k·C per output pixel).  The ratio is
+    the work the event encoding skips when the map is sparse.  The grid is
+    granularity-independent (pixel and strip inputs walk the same
+    (P_out, k·k, E) steps — only the source tile a step DMAs differs).
+    """
+    b, h, w, c = logical_shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    e = nkb if capacity is None else min(capacity, nkb)
+    p_out = b * oh * ow
+    return dict(
+        launches=1, window_taps=k * k,
+        grid=(p_out, k * k, e),
+        event_grid=p_out * k * k * e,
+        dense_reads=p_out * k * k * c,
+        out_rows=p_out)

@@ -1,0 +1,57 @@
+"""Pure-jnp twin of the event-native max-pool kernel (DESIGN.md §7).
+
+Walks the same static window plan (``core.events.pool_window_map``) as the
+Pallas kernel: each of the k·k window taps is a row gather of the input
+stream's event tiles, scattered into a per-output-pixel segment-max
+accumulator keyed by the event's direct K-block address.  The engine
+registry's "block" backend of ``maxpool2d_events``.
+
+Bit-exactness contract (tested in tests/test_event_pool.py): the fire phase
+emits non-negative activations (ReLU at the threshold), event-absent
+positions are exactly 0, and max is order-invariant over a multiset — so
+the segment max over events, with identity 0, equals the dense
+``reduce_window`` max of the fired map bit for bit.  The identity-0
+argument is exactly why the engine gates this path on non-``magnitude``
+fire configs (negative events would be clipped).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import events as ev
+
+__all__ = ["event_max_pool2d_ref"]
+
+
+def event_max_pool2d_ref(stream, k: int, stride: int) -> jnp.ndarray:
+    """Segment-max pool over a conv EventStream.  Returns (B·OH·OW, C).
+
+    ``stream`` is pixel-granular (blk_m == 1) or strip-aligned
+    (blk_m == STRIP_W); the plan addresses either through the same
+    (group, row-in-tile) decomposition of raster pixel indices.
+    """
+    b, h, w, c = stream.logical_shape
+    bev = stream.events
+    nkb, bk = bev.num_k_blocks, stream.blk_k
+    src, row, live = ev.pool_window_map(stream.logical_shape, k, stride,
+                                        stream.blk_m)
+    p_n, t_n = src.shape
+    acc = jnp.zeros((p_n, nkb, bk), bev.values.dtype)
+    if p_n == 0:
+        return acc.reshape(p_n, nkb * bk)[:, :c]
+    e = bev.capacity
+    slot = jnp.arange(e, dtype=jnp.int32)[None, :]
+    parr = jnp.arange(p_n, dtype=jnp.int32)[:, None]
+    for t in range(t_n):
+        g = jnp.asarray(src[:, t])
+        lv = jnp.asarray(live[:, t])
+        r = jnp.asarray(row[:, t])
+        # Dead taps (outside the map — cannot happen for VALID pooling, kept
+        # for plan symmetry) and padded event slots must not contribute the
+        # clipped source's values: mask to the identity 0.
+        cnt = jnp.where(lv, bev.counts[g], 0)
+        vals = jnp.take_along_axis(
+            bev.values[g], r[:, None, None, None], axis=2)[:, :, 0]  # (P,E,bk)
+        vals = jnp.where((slot < cnt[:, None])[:, :, None], vals, 0)
+        acc = acc.at[parr, bev.block_idx[g]].max(vals)
+    return acc.reshape(p_n, nkb * bk)[:, :c]

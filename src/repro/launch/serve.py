@@ -71,6 +71,9 @@ def serve_cnn(args) -> None:
         compile_s=round(t_compile, 3),
         frames_per_s=round(args.batches * args.batch / max(t_serve, 1e-9), 2),
         engine=dataclasses.asdict(plan.engine),
+        # DESIGN.md §7 invariant per cell: pool boundaries riding the
+        # event-native segment max vs densify points left on the chain.
+        boundaries=plan.boundaries,
         sample_preds=[int(t) for t in preds[-1][:4]])))
 
 

@@ -219,6 +219,11 @@ class CNNCellPlan:
     arg_specs: tuple            # (param ShapeDtypeStructs, image SDS)
     donate: tuple = (1,)
     engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    #: Static chain accounting (models/cnn.chain_boundary_summary): how many
+    #: pool boundaries ride the event-native segment max and how many
+    #: densify points remain — serving logs report the DESIGN.md §7
+    #: zero-densify invariant per cell.
+    boundaries: dict = dataclasses.field(default_factory=dict)
 
 
 def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
@@ -242,9 +247,12 @@ def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     x_spec = jax.ShapeDtypeStruct(
         (batch, spec.input_size, spec.input_size, spec.in_ch), jnp.float32)
+    boundaries = cnn_mod.chain_boundary_summary(
+        spec, batch=batch, fire_cfg=fire_cfg, engine_cfg=ecfg) if mnf else {}
     return CNNCellPlan(spec=spec, batch=batch, fn=fn,
                        arg_specs=(pshapes, x_spec),
-                       donate=(1,) if donate else (), engine=ecfg)
+                       donate=(1,) if donate else (), engine=ecfg,
+                       boundaries=boundaries)
 
 
 def plan_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

@@ -10,10 +10,14 @@ Two execution paths over identical params, both dispatched through
              ride the fused-tap kernel — one launch per layer, 8x smaller
              event grid — and pixel-granular per-tap row-group gathers
              otherwise (DESIGN.md §5/§6).  The dense feature map is never
-             materialized between conv layers.  Pools read the fire phase's
-             cached dense twin (computed for free) and the pooled map is
-             re-encoded — the only densify point on the chain (DESIGN.md
-             §5).  FC layers chain ``EventStream``s as before.
+             materialized between conv layers.  Pools run **in the event
+             domain** too (``engine.maxpool2d`` — a segment max over the
+             stream's events, bit-identical to the dense pool, DESIGN.md
+             §7), so conv→pool→conv boundaries carry no dense twin and no
+             re-encode: the chain has zero densify points between the
+             first conv and the FC head.  FC layers chain ``EventStream``s
+             as before (the FC head flattens the pooled twin, kept only
+             there).
 
 ``make_cnn_pipeline`` wraps the whole forward in a **single jitted
 function** with a donated input buffer — one jit per network, no per-layer
@@ -41,7 +45,7 @@ from repro.models.layers import max_pool_nhwc
 
 __all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
            "init_cnn_params", "cnn_forward", "make_cnn_pipeline",
-           "run_with_stats", "layer_dense_macs"]
+           "run_with_stats", "layer_dense_macs", "chain_boundary_summary"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +178,46 @@ def layer_dense_macs(spec: CNNSpec):
     return out
 
 
+def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
+                           fire_cfg: FireConfig = FireConfig(),
+                           engine_cfg: engine.EngineConfig | None = None
+                           ) -> dict:
+    """Static per-boundary accounting of the chained pipeline.
+
+    Shape-derived (no tracing): how many compute layers of each kind, how
+    many pool boundaries ride the event-native segment max
+    (``pool_events``), and how many densify points remain on the chain
+    (``densify`` — dense-pool fallbacks; 0 when every pool is eligible,
+    the DESIGN.md §7 invariant serving and benchmarks report).
+    """
+    cfg = _layer_cfg(engine_cfg, mnf=True, fire_cfg=fire_cfg)
+    conv_base = cfg.replace(blk_m=1, blk_k=min(8, cfg.blk_k))
+    shapes = _trace_shapes(spec)
+    out = dict(conv=0, fc=0, pool=0, pool_events=0, densify=0)
+    # Mirrors _forward's chained dataflow: a pool sees a *conv stream* only
+    # when fed by a conv or by a pool that itself chained (the first layer's
+    # dense image, and FC streams, take the dense-pool fallback).
+    conv_stream_in = False
+    for i, layer in enumerate(spec.layers):
+        h, w, c = shapes[i]
+        if isinstance(layer, ConvSpec):
+            out["conv"] += 1
+            conv_stream_in = True
+        elif isinstance(layer, FCSpec):
+            out["fc"] += 1
+            conv_stream_in = False
+        elif isinstance(layer, PoolSpec):
+            out["pool"] += 1
+            if conv_stream_in and engine.pool_ineligible_reason(
+                    (batch, h, w, c), layer.k, layer.stride,
+                    conv_base) is None:
+                out["pool_events"] += 1
+            else:
+                out["densify"] += 1
+                conv_stream_in = False
+    return out
+
+
 def _layer_cfg(base: engine.EngineConfig | None, *, mnf: bool,
                fire_cfg: FireConfig) -> engine.EngineConfig:
     cfg = base or engine.EngineConfig(backend="block")
@@ -216,10 +260,18 @@ def _pixel_events(x):
 
 
 def _density(x) -> jax.Array:
-    """Fired fraction of an activation (stream: twin-free event count)."""
+    """Fired fraction of an activation (stream: twin-free event count).
+
+    Zero-row streams / empty tensors (dead layer, empty batch) have no
+    elements; their density is defined as 0, not 0/0.
+    """
     if isinstance(x, engine.EventStream):
         m, k = x.shape
+        if m * k == 0:
+            return jnp.zeros((), jnp.float32)
         return x.num_scalar_events / (m * k)
+    if x.size == 0:
+        return jnp.zeros((), jnp.float32)
     return jnp.mean(jnp.abs(x) > 0)
 
 
@@ -229,13 +281,18 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
     ``make_cnn_pipeline`` / ``run_with_stats``.
 
     ``chain=True`` threads one EventStream through conv→fire→conv→…→FC:
-    conv→conv boundaries stay event-only (the fired twin is dropped), pools
-    read the cached twin and re-encode — the chain's only densify point.
-    ``chain=False`` is the per-layer round-trip twin (dense at every
-    boundary, identical compute geometry) that the chained path is measured
-    against.  ``stats`` (a list to append to) requests per-layer event
-    accounting, derived from the compacted event values themselves on the
-    chained path (twin-free — no dense twin, no decode).
+    conv→conv boundaries stay event-only (the fired twin is dropped) and
+    pools run in the event domain (``engine.maxpool2d`` segment max,
+    DESIGN.md §7) — conv→pool→conv carries no twin and no re-encode, so
+    the chain densifies nowhere between the first conv and the FC head.
+    Only an *ineligible* pool (magnitude fire, degenerate window) falls
+    back to the dense pool + re-encode, visibly.  ``chain=False`` is the
+    per-layer round-trip twin (dense at every boundary, identical compute
+    geometry) that the chained path is measured against — its dense pool
+    is the event pool's bitwise oracle.  ``stats`` (a list to append to)
+    requests per-layer event accounting, derived from the compacted event
+    values themselves on the chained path (twin-free — no dense twin, no
+    decode).
     """
     layers = spec.layers
     # The conv *dispatch* config stays pixel-granular (blk_m == 1) so the
@@ -264,10 +321,16 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
             acc = engine.conv2d(x, wgt, cfg=ccfg, stride=layer.stride,
                                 padding=layer.padding)
             if chain:
-                # Drop the dense twin at conv→conv boundaries (events-only —
-                # instrumentation reads event values, never the twin); keep
-                # it when a pool/FC consumes it.
-                keep = not isinstance(nxt, ConvSpec)
+                # Drop the dense twin at conv→conv boundaries AND at
+                # conv→pool boundaries the event-native pool will consume
+                # (events-only — instrumentation reads event values, never
+                # the twin); keep it only where the FC head (or an
+                # ineligible pool) genuinely reads it densely.
+                pool_chains = (isinstance(nxt, PoolSpec)
+                               and engine.pool_ineligible_reason(
+                                   tuple(acc.shape), nxt.k, nxt.stride,
+                                   conv_base) is None)
+                keep = not (isinstance(nxt, ConvSpec) or pool_chains)
                 x = engine.fire_conv(acc, conv_base, keep_dense=keep,
                                      blk_m=_next_conv_blk_m(nxt,
                                                             acc.shape[2]))
@@ -276,16 +339,38 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
             if stats is not None:
                 stats[-1]["out_density"] = _density(x)
         elif isinstance(layer, PoolSpec):
-            pooled = max_pool_nhwc(_dense_nhwc(x), layer.k, layer.stride)
-            if chain and isinstance(nxt, ConvSpec):
-                # Re-encode after the pool — the chain's only densify point —
-                # at the granularity the next conv consumes.
-                x = engine.EventStream.encode_nhwc(
-                    pooled, blk_k=conv_base.blk_k,
-                    blk_m=_next_conv_blk_m(nxt, pooled.shape[2]),
-                    keep_dense=False)
+            if chain and isinstance(x, engine.EventStream) \
+                    and engine.pool_ineligible_reason(
+                        x, layer.k, layer.stride, conv_base) is None:
+                # Event-native pool (DESIGN.md §7): segment max over the
+                # stream's events, re-emitted at the granularity the
+                # consumer wants — conv→pool→conv stays events-only (no
+                # twin, no re-encode).  The pooled twin is kept only when
+                # the FC head (or the network output) reads it densely.
+                c = x.logical_shape[-1]
+                pw = (x.logical_shape[2] - layer.k) // layer.stride + 1
+                if isinstance(nxt, ConvSpec):
+                    pcfg = conv_base.for_pool(c, width=pw, k=nxt.k,
+                                              stride=nxt.stride,
+                                              padding=nxt.padding,
+                                              co=nxt.out_ch)
+                else:
+                    pcfg = conv_base.for_pool(c)
+                x = engine.maxpool2d(x, layer.k, layer.stride, cfg=pcfg,
+                                     keep_dense=not isinstance(nxt,
+                                                               ConvSpec))
             else:
-                x = pooled
+                pooled = max_pool_nhwc(_dense_nhwc(x), layer.k, layer.stride)
+                if chain and isinstance(nxt, ConvSpec):
+                    # Dense-pool fallback (round-trip twin, or a stream the
+                    # event pool cannot consume): re-encode at the
+                    # granularity the next conv consumes.
+                    x = engine.EventStream.encode_nhwc(
+                        pooled, blk_k=conv_base.blk_k,
+                        blk_m=_next_conv_blk_m(nxt, pooled.shape[2]),
+                        keep_dense=False)
+                else:
+                    x = pooled
         elif isinstance(layer, FCSpec):
             if isinstance(x, engine.EventStream) \
                     and x.logical_shape is not None:
@@ -295,9 +380,16 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
             flat = x if isinstance(x, engine.EventStream) \
                 else x.reshape(x.shape[0], -1)
             if stats is not None:
+                # Dense inputs count events at the *configured* fire
+                # threshold, matching the chained stream's semantics (its
+                # events are the supra-threshold survivors); counting
+                # |flat| > 0 here would also count dequantization
+                # artifacts below the threshold and diverge from the
+                # chained path for threshold > 0.
                 in_ev = flat.num_scalar_events \
                     if isinstance(flat, engine.EventStream) \
-                    else jnp.sum(jnp.abs(flat) > 0, dtype=jnp.float32)
+                    else jnp.sum(jnp.abs(flat) > fire_cfg.threshold,
+                                 dtype=jnp.float32)
                 stats.append(dict(event_macs=in_ev * layer.out,  # Algorithm 2
                                   in_events=in_ev))
             acc = engine.linear(flat, wgt, cfg=cfg.replace(threshold=0.0))

@@ -22,9 +22,10 @@ __all__ = ["rms_norm", "layer_norm", "apply_rope", "activation_fn",
 def max_pool_nhwc(x: jax.Array, k: int, stride: int) -> jax.Array:
     """VALID max-pool over the spatial axes of a (B, H, W, C) feature map.
 
-    The CNN stack's only densify point on the chained MNF path: the pool
-    consumes the fire phase's cached dense twin, and the pooled map is
-    re-encoded for the next conv (DESIGN.md §5).
+    The dense oracle of the event-native pool: the chained MNF path pools
+    in the event domain (``engine.maxpool2d`` — segment max over stream
+    events, bit-identical to this, DESIGN.md §7); this dense form serves
+    the round-trip twin and ineligible-stream fallbacks.
     """
     return jax.lax.reduce_window(
         x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),

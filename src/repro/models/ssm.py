@@ -4,7 +4,7 @@ RWKV6 here is the pure-XLA model path: a chunked matmul formulation
 (lax.scan over chunks, intra-chunk work on the MXU) that matches the exact
 recurrence (and the Pallas kernel in repro.kernels.wkv6) whenever the
 per-step log-decay respects the stability clamp ``WKV_LOG_DECAY_MIN``; the
-clamp is a documented deviation (DESIGN.md §7) needed because the chunked
+clamp is a documented deviation (DESIGN.md §8) needed because the chunked
 factorization exponentiates inverse decays.  The Pallas kernel has no clamp.
 
 Mamba1 (hymba's parallel-SSM heads) uses an associative scan over time for

@@ -11,6 +11,7 @@ from repro.models.cnn import (ALEXNET, VGG16, cnn_forward, init_cnn_params,
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("spec,size", [(ALEXNET, 64), (VGG16, 32)])
 def test_mnf_equals_dense(rng, spec, size):
     s = spec.scaled(size)
@@ -81,6 +82,62 @@ def test_stats_twin_free_parity_with_dense_counts():
     for got, ref in zip(stats, want):
         assert got["in_events"] == ref["in_events"], (got, ref)
         assert got["event_macs"] == ref["event_macs"], (got, ref)
+
+
+def test_fc_in_events_respect_fire_threshold():
+    """FC-layer ``in_events`` on the dense (round-trip / quantized) path
+    must count events at the *configured* fire threshold, like the chained
+    stream does — not ``|flat| > 0``, which also counts dequantization
+    artifacts below the threshold (regression: chained vs round-trip stats
+    diverged for threshold > 0)."""
+    from repro.core.fire import FireConfig, fire
+    from repro.models.cnn import CNNSpec, ConvSpec, FCSpec, PoolSpec
+    from repro.models.layers import max_pool_nhwc
+    from repro import engine
+
+    spec = CNNSpec("mini", 12, 3,
+                   (ConvSpec(6, 3, 2, 1), ConvSpec(8, 3, 1, 1), PoolSpec(),
+                    FCSpec(10), FCSpec(5)), num_classes=5)
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 12, 12, 3)))
+    thr = 0.3
+
+    # Chained (threshold > 0, no quantization): FC in_events must equal the
+    # supra-threshold fire-decision counts of the round-trip intermediates.
+    fc = FireConfig(threshold=thr)
+    _, stats = run_with_stats(params, x, spec, fire_cfg=fc)
+    cfg = engine.EngineConfig(backend="block", blk_m=1, blk_k=8)
+    xd, want = x, []
+    for layer, wgt in zip(spec.layers, params):
+        if isinstance(layer, ConvSpec):
+            acc = engine.conv2d(xd, wgt, cfg=cfg.for_conv(xd.shape[-1]),
+                                stride=layer.stride, padding=layer.padding)
+            xd = fire(acc, fc)
+        elif isinstance(layer, PoolSpec):
+            xd = max_pool_nhwc(xd, layer.k, layer.stride)
+        else:
+            flat = np.asarray(xd).reshape(xd.shape[0], -1)
+            want.append(float(np.sum(np.abs(flat) > thr)))
+            acc = engine.linear(jnp.asarray(flat), wgt, cfg=cfg)
+            xd = fire(acc, fc) if layer is not spec.layers[-1] else acc
+    got = [s["in_events"] for s in stats if s["kind"] == "fc"]
+    assert got == want, (got, want)
+
+    # Deterministic regression: an FC fed a dense input with non-zero
+    # values at or below the threshold (they are not events — the fire
+    # decision at the configured threshold would not emit them).  The old
+    # |flat| > 0 count included them and diverged from the chained path.
+    fcspec = CNNSpec("fcnet", 1, 8, (FCSpec(4), FCSpec(3)), num_classes=3)
+    fparams = init_cnn_params(KEY, fcspec)
+    xf = jnp.asarray([[0.1, 0.29, 0.31, 2.0, 0.0, 0.0, 1.0, 0.2],
+                      [0.0, 0.30, 0.50, 0.0, 0.1, 0.0, 0.0, 0.0]],
+                     jnp.float32).reshape(2, 1, 1, 8)
+    _, fstats = run_with_stats(fparams, xf, fcspec,
+                               fire_cfg=FireConfig(threshold=thr))
+    supra = float(np.sum(np.abs(np.asarray(xf)) > thr))     # 4 events
+    nonzero = float(np.sum(np.abs(np.asarray(xf)) > 0))     # 9 non-zeros
+    assert supra != nonzero                 # the regression is observable
+    assert fstats[0]["in_events"] == supra, (fstats[0], supra, nonzero)
 
 
 def test_analytic_matches_measured_dense_macs():

@@ -64,12 +64,15 @@ def test_conv2d_events_bitwise_equals_reencoded_roundtrip():
 # whole networks: event-resident == per-layer round-trip (bitwise) == oracle
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("spec,size", [(ALEXNET, 64), (VGG16, 32)])
 def test_event_resident_forward_bitwise_and_boundaries(spec, size):
     """At threshold 0, batch ≥ 2: the chained forward is bit-identical to
     the per-layer round-trip (the dense-boundary twin of the same event
-    dataflow), allclose to the dense-backend oracle, and every conv→conv
-    boundary runs events-only — no decode anywhere, densify only at pools.
+    dataflow), allclose to the dense-backend oracle, and every boundary
+    between the first conv and the FC head runs events-only — pools
+    included (the event-native segment max, DESIGN.md §7): zero densify
+    points on the chain.
     """
     s = spec.scaled(size)
     params = init_cnn_params(KEY, s, weight_sparsity=0.5)
@@ -79,10 +82,13 @@ def test_event_resident_forward_bitwise_and_boundaries(spec, size):
         ym = cnn_forward(params, x, s, mnf=True, chain=True)
     n_conv = sum(isinstance(l, ConvSpec) for l in s.layers)
     n_fc = sum(isinstance(l, FCSpec) for l in s.layers)
-    # No decode ops at all: pools read the cached fired twin, and the only
-    # densify is the documented post-pool re-encode.
+    n_pool = sum(isinstance(l, PoolSpec) for l in s.layers)
+    # Zero densify points between the first conv and the FC head: no
+    # decode, no fallback, and every pool rides the event-native path.
     assert sum(1 for r in recs if r.get("decode")) == 0
     assert sum(1 for r in recs if r.get("fallback_decode")) == 0
+    assert sum(1 for r in recs if r.get("pool_events")
+               and r["op"] == "maxpool2d") == n_pool
     # Every conv except the first (dense input image) consumes events.
     assert sum(1 for r in recs if r.get("chained")
                and r["op"] == "conv2d") == n_conv - 1
@@ -148,6 +154,31 @@ def test_conv_event_ops_registered():
 def test_occupancy_zero_grid_is_zero():
     s = engine.EventStream.encode(jnp.zeros((0, 8)), blk_m=1, blk_k=8)
     assert float(s.occupancy()) == 0.0
+
+
+def test_zero_row_streams_never_reach_pallas():
+    """Empty batches / fully-dead layers: encode returns an explicit empty
+    stream, and fire/linear/conv2d short-circuit instead of handing Pallas
+    a 0-extent launch (regression: slice_sizes > operand shape)."""
+    cfg = engine.EngineConfig(backend="pallas", blk_m=8, blk_k=8, blk_n=4)
+    s = engine.fire(jnp.zeros((0, 8)), cfg)            # used to raise
+    assert s.shape == (0, 8) and float(s.num_scalar_events) == 0.0
+    assert float(s.occupancy()) == 0.0
+    y = engine.linear(s, jnp.ones((8, 4)), cfg=cfg)
+    assert y.shape == (0, 4)
+    y = engine.linear(s, jnp.ones((8, 4)), b=jnp.ones((4,)), cfg=cfg)
+    assert y.shape == (0, 4)
+    # dtype must not flip with batch size: empty shortcut promotes like the
+    # dispatch path (f32 events @ bf16 weights -> f32)
+    yb = engine.linear(s, jnp.ones((8, 4), jnp.bfloat16), cfg=cfg)
+    assert yb.dtype == jnp.float32
+    sc = engine.fire_conv(jnp.zeros((0, 6, 6, 4)), cfg)
+    assert sc.logical_shape == (0, 6, 6, 4)
+    yc = engine.conv2d(sc, jnp.ones((3, 3, 4, 8)), cfg=cfg, padding=1)
+    assert yc.shape == (0, 6, 6, 8)
+    # the block-event grid of the empty stream is explicitly empty
+    assert s.events.counts.shape == (0,)
+    assert s.events.values.shape[0] == 0
 
 
 def test_for_conv_clamps_blk_k():

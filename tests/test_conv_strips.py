@@ -87,6 +87,38 @@ def test_strip_eligibility_rules():
     assert "output width" in engine.strip_ineligible_reason(16, 3, 1, 0)
     assert "output channels" in engine.strip_ineligible_reason(8, 3, 1, 1,
                                                                co=2)
+    assert "padding" in engine.strip_ineligible_reason(8, 3, 1, 5)
+
+
+def test_strip_rejects_padding_beyond_half_window():
+    """padding > k//2 grows the output map beyond the input, so a tap shift
+    can index outside the planned straddle halves: such geometry must be
+    ineligible (named rule), for_conv(strips=True) must raise, and a strip
+    stream hitting it must take the visible decode fallback — never the
+    fused plan."""
+    # (k, p) pairs that pass every *other* rule (out_w % 8 == 0 at W = 8)
+    for k, p in ((1, 4), (1, 8), (3, 5), (9, 8)):
+        reason = engine.strip_ineligible_reason(8, k, 1, p, co=8)
+        assert reason is not None and "padding" in reason, (k, p, reason)
+        assert not engine.strip_eligible(8, k, 1, p, co=8)
+        with pytest.raises(ValueError, match="padding"):
+            engine.EngineConfig().for_conv(8, width=8, k=k, stride=1,
+                                           padding=p, strips=True)
+    # boundary: padding == k//2 stays eligible (the real-net "same" conv)
+    assert engine.strip_eligible(8, 9, 1, 4, co=8)
+    # behavior: the stream degrades visibly and stays correct
+    x = _fired(11, (1, 6, 8, 4))
+    r = np.random.default_rng(11)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)  # twin: free decode
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, padding=5)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    ref = dense_conv2d(x, wgt, stride=1, padding=5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4,
+                               rtol=2e-4)
 
 
 def test_tiny_co_strip_stream_falls_back_visibly():
@@ -163,6 +195,7 @@ def test_fire_conv_strip_requires_aligned_width():
         engine.EventStream.encode_nhwc(x, blk_k=3, blk_m=engine.STRIP_W)
 
 
+@pytest.mark.slow
 def test_mixed_strip_pixel_network_bitwise():
     """Widths crossing the 8-boundary: strip and pixel conv layers mix on
     the chain, and the chained forward stays bit-identical to the per-tap

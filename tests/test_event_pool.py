@@ -1,0 +1,232 @@
+"""Event-native max-pool (DESIGN.md §7): segment max over a fired stream's
+events == dense reduce_window pool, bit for bit; conv→pool→conv boundaries
+stay events-only; ineligible streams fall back visibly, never silently."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import events as ev
+from repro.kernels.event_pool import pool_plan
+from repro.models.cnn import (CNNSpec, ConvSpec, FCSpec, PoolSpec,
+                              chain_boundary_summary, cnn_forward,
+                              init_cnn_params)
+from repro.models.layers import max_pool_nhwc
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _fired(seed, shape, sparsity=0.5):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=shape) * (r.random(shape) > sparsity)
+    return jax.nn.relu(jnp.asarray(x.astype(np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: event pool == dense pool, per backend, pixel + strip inputs
+# ---------------------------------------------------------------------------
+
+SHAPES = [  # (B, H, W, C, k, stride, blk_m_in)
+    (2, 6, 6, 5, 2, 2, 1),
+    (1, 7, 7, 3, 3, 2, 1),     # overlapping windows (AlexNet-style)
+    (1, 9, 9, 4, 3, 3, 1),
+    (2, 8, 16, 6, 2, 2, 8),    # strip-aligned input stream
+    (1, 6, 8, 5, 3, 1, 8),     # stride-1 overlapping windows on strips
+]
+
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_event_pool_bitwise_equals_dense_pool(backend, shape):
+    b, h, w0, c, k, s, bm = shape
+    x = _fired(sum(shape), (b, h, w0, c))
+    cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=4)
+    stream = engine.fire_conv(x, cfg, blk_m=bm, keep_dense=False)
+    with engine.trace_dispatch() as recs:
+        out = engine.maxpool2d(stream, k, s, cfg=cfg)
+    assert any(rec.get("pool_events") and rec.get("chained")
+               and rec["op"] == "maxpool2d" for rec in recs), recs
+    assert not any(rec.get("decode") or rec.get("fallback_decode")
+                   for rec in recs), recs
+    assert isinstance(out, engine.EventStream)
+    ref = max_pool_nhwc(x, k, s)
+    assert out.logical_shape == ref.shape
+    assert bool(jnp.all(out.dense_nhwc() == ref)), "event pool != dense pool"
+
+
+def test_event_pool_emits_consumer_granularity():
+    """The pooled stream re-tiles to what the consuming conv wants: strips
+    when it is strip-eligible, pixels otherwise — the for_pool config path."""
+    x = _fired(0, (2, 8, 16, 6))
+    base = engine.EngineConfig(backend="block", blk_k=4)
+    # Consumer 3x3/1/p1 conv over the pooled 8-wide map: strip-eligible.
+    pcfg = base.for_pool(6, width=8, k=3, stride=1, padding=1, co=8)
+    assert pcfg.blk_m == engine.STRIP_W
+    stream = engine.fire_conv(x, base, blk_m=1, keep_dense=False)
+    out = engine.maxpool2d(stream, 2, 2, cfg=pcfg)
+    assert out.blk_m == engine.STRIP_W and out.logical_shape == (2, 4, 8, 6)
+    # No consumer geometry: pixel-granular.
+    assert base.for_pool(6).blk_m == 1
+    # Strip-ineligible consumer (stride 2): pixel-granular.
+    assert base.for_pool(6, width=8, k=3, stride=2, padding=1).blk_m == 1
+
+
+def test_event_pool_chains_into_conv_bitwise():
+    """conv -> event pool -> conv, events end to end, bit-identical to the
+    dense pool + re-encode round-trip."""
+    x = _fired(1, (2, 8, 16, 4))
+    wgt = jnp.asarray(np.random.default_rng(1).normal(
+        size=(3, 3, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_m=1, blk_k=4)
+    stream = engine.fire_conv(x, cfg, blk_m=1, keep_dense=False)
+    pcfg = cfg.for_pool(4, width=8, k=3, stride=1, padding=1, co=8)
+    with engine.trace_dispatch() as recs:
+        pooled = engine.maxpool2d(stream, 2, 2, cfg=pcfg, keep_dense=False)
+        y = engine.conv2d(pooled, wgt, cfg=cfg, padding=1)
+    assert not any(r.get("decode") or r.get("fallback_decode") for r in recs)
+    dense_pooled = max_pool_nhwc(x, 2, 2)
+    redone = engine.EventStream.encode_nhwc(dense_pooled, blk_k=4,
+                                            blk_m=pcfg.blk_m,
+                                            keep_dense=False)
+    y_round = engine.conv2d(redone, wgt, cfg=cfg, padding=1)
+    assert bool(jnp.all(y == y_round)), "event-pooled conv != round-trip"
+
+
+# ---------------------------------------------------------------------------
+# eligibility + fallback visibility
+# ---------------------------------------------------------------------------
+
+def test_pool_ineligible_reasons():
+    cfg = engine.EngineConfig(backend="block")
+    assert engine.pool_ineligible_reason((1, 8, 8, 4), 2, 2, cfg) is None
+    assert "window" in engine.pool_ineligible_reason((1, 2, 2, 4), 3, 2, cfg)
+    assert "magnitude" in engine.pool_ineligible_reason(
+        (1, 8, 8, 4), 2, 2, cfg.replace(magnitude=True))
+    assert "maxpool2d_events" in engine.pool_ineligible_reason(
+        (1, 8, 8, 4), 2, 2, cfg.replace(backend="dense"))
+    # stream and logical-shape forms agree
+    s = engine.fire_conv(_fired(2, (1, 8, 8, 4)),
+                         engine.EngineConfig(backend="block", blk_k=4))
+    assert engine.pool_ineligible_reason(s, 2, 2, cfg) is None
+    fc = engine.fire(jnp.ones((4, 8)), engine.EngineConfig(backend="block"))
+    assert "conv stream" in engine.pool_ineligible_reason(fc, 2, 2, cfg)
+
+
+def test_magnitude_stream_falls_back_visibly():
+    """A magnitude-fired stream can carry negative events — the identity-0
+    segment max would clip them, so the engine must decode visibly and
+    still match the dense pool."""
+    r = np.random.default_rng(3)
+    x = jnp.asarray((r.normal(size=(1, 6, 6, 4))
+                     * (r.random((1, 6, 6, 4)) > 0.5)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4, magnitude=True)
+    s = engine.fire_conv(x, cfg, blk_m=1)         # twin kept: free decode
+    with engine.trace_dispatch() as recs:
+        y = engine.maxpool2d(s, 2, 2, cfg=cfg)
+    marks = [rec for rec in recs if rec.get("fallback_decode")]
+    assert marks and "magnitude" in marks[0]["reason"], recs
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(max_pool_nhwc(x, 2, 2)))
+
+
+def test_dense_backend_pools_densely():
+    x = _fired(4, (1, 6, 6, 3))
+    y = engine.maxpool2d(x, 2, 2, cfg=engine.EngineConfig(backend="dense"))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(max_pool_nhwc(x, 2, 2)))
+
+
+def test_pool_event_ops_registered():
+    assert set(engine.list_backends("maxpool2d_events")) == {"block",
+                                                             "pallas"}
+    assert set(engine.BACKENDS) <= set(engine.list_backends("maxpool2d"))
+
+
+# ---------------------------------------------------------------------------
+# whole networks: zero densify points between first conv and the FC head
+# ---------------------------------------------------------------------------
+
+MINI = CNNSpec("mini-pool", 8, 3,
+               (ConvSpec(8, 3, 1, 1), PoolSpec(),
+                ConvSpec(8, 3, 1, 1), PoolSpec(), FCSpec(10)),
+               num_classes=10)
+
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+def test_chained_network_pools_in_event_domain(backend):
+    cfg = engine.EngineConfig(backend=backend, blk_m=4, blk_k=8, blk_n=8)
+    params = init_cnn_params(KEY, MINI, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 8, 8, 3)))
+    with engine.trace_dispatch() as recs:
+        ym = cnn_forward(params, x, MINI, mnf=True, chain=True,
+                         engine_cfg=cfg)
+    n_pool = sum(isinstance(l, PoolSpec) for l in MINI.layers)
+    assert sum(1 for r in recs if r.get("pool_events")) == n_pool, recs
+    assert not any(r.get("decode") or r.get("fallback_decode")
+                   for r in recs), recs
+    yr = cnn_forward(params, x, MINI, mnf=True, chain=False, engine_cfg=cfg)
+    assert bool(jnp.all(ym == yr)), "chained != round-trip bitwise"
+    yd = cnn_forward(params, x, MINI, mnf=False)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
+                               rtol=5e-3)
+
+
+def test_chain_boundary_summary_counts_pools():
+    from repro.core.fire import FireConfig
+
+    s = chain_boundary_summary(MINI, batch=2)
+    assert s == dict(conv=2, fc=1, pool=2, pool_events=2, densify=0)
+    # magnitude fire (the LM generalization) disables the identity-0
+    # segment max: every pool becomes a densify point again
+    s = chain_boundary_summary(MINI, batch=2,
+                               fire_cfg=FireConfig(magnitude=True))
+    assert s["pool_events"] == 0 and s["densify"] == 2
+
+
+def test_chain_boundary_summary_matches_traced_pool_events():
+    """The static summary must mirror the traced dataflow: a pool fed the
+    dense input image (no conv stream yet) takes the dense fallback, and
+    the summary must not count it as pool_events (regression: geometry-only
+    accounting overcounted dense-fed pools and tripped the bench's
+    silent-densify guard)."""
+    spec = CNNSpec("pool-first", 8, 3,
+                   (PoolSpec(), ConvSpec(8, 3, 1, 1), PoolSpec(),
+                    FCSpec(10)), num_classes=10)
+    s = chain_boundary_summary(spec, batch=2)
+    assert s["pool"] == 2 and s["pool_events"] == 1 and s["densify"] == 1
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 8, 8, 3)))
+    with engine.trace_dispatch() as recs:
+        cnn_forward(params, x, spec, mnf=True, chain=True)
+    assert sum(1 for r in recs if r.get("pool_events")) == s["pool_events"]
+
+
+# ---------------------------------------------------------------------------
+# plan accounting + degenerate streams
+# ---------------------------------------------------------------------------
+
+def test_pool_window_map_plan():
+    src, row, live = ev.pool_window_map((2, 6, 8, 4), 2, 2, 1)
+    assert src.shape == (2 * 3 * 4, 4) and live.all()
+    # pixel granularity: src is the flat raster index itself, row is 0
+    assert (row == 0).all()
+    ssrc, srow, slive = ev.pool_window_map((2, 6, 8, 4), 2, 2, 8)
+    assert (ssrc == src // 8).all() and (srow == src % 8).all()
+
+
+def test_pool_plan_accounting():
+    plan = pool_plan((2, 8, 8, 16), 2, 2, nkb=2)
+    assert plan["launches"] == 1 and plan["window_taps"] == 4
+    assert plan["out_rows"] == 2 * 4 * 4
+    assert plan["event_grid"] == plan["out_rows"] * 4 * 2
+    assert plan["dense_reads"] == plan["out_rows"] * 4 * 16
+
+
+def test_empty_stream_pools_to_empty():
+    cfg = engine.EngineConfig(backend="pallas", blk_k=4)
+    s = engine.fire_conv(jnp.zeros((0, 6, 6, 4)), cfg, blk_m=1)
+    out = engine.maxpool2d(s, 2, 2, cfg=cfg)
+    assert isinstance(out, engine.EventStream)
+    assert out.logical_shape == (0, 3, 3, 4) and out.shape == (0, 4)
+    assert float(out.occupancy()) == 0.0

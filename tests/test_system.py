@@ -25,6 +25,7 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 def test_event_driven_cnn_pipeline_end_to_end():
     spec = ALEXNET.scaled(64)
     params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
