@@ -19,12 +19,15 @@ conv streams chained end-to-end) against the per-layer round-trip twin and
 records where each path densifies plus per-conv-layer launch counts (taps
 fused vs per-tap).  ``--conv-fused`` times the fused strip-tiled conv
 kernel (one launch per layer, 8x smaller event grid) against the per-tap
-chained path at matched shapes.  ``--pool`` times the event-native
-max-pool (segment max over stream events, one launch) against the dense
-pool + re-encode round-trip.  All write/merge BENCH_engine.json.
-``--smoke`` runs a fast subset of everything (CI anti-rot) and **fails**
-if an eligible strip layer or pool boundary falls back to a decode
-(fallback_decode) — the silent-degrade bug class.
+chained path at matched shapes — both stride-1 and stride-2 downsampling
+geometries (the interleaved half-strip plan).  ``--pool`` times the
+event-native max-pool (segment max over stream events, one launch) against
+the dense pool + re-encode round-trip.  All write/merge BENCH_engine.json.
+``--smoke`` runs a fast subset of everything (CI anti-rot) — including a
+downsampling mini-net whose stride-2 layer must ride the fused strip
+path — and **fails** if an eligible strip layer (either stride) or pool
+boundary falls back to a decode (fallback_decode) — the silent-degrade
+bug class.
 """
 from __future__ import annotations
 
@@ -184,6 +187,17 @@ def _smoke_spec():
                     ConvSpec(8, 3, 1, 1), FCSpec(10)))
 
 
+def _smoke_ds_spec():
+    """Tiny downsampling net: a stride-2 strip-eligible conv between two
+    stride-1 convs.  Its middle layer must ride the fused stride-2 strip
+    path — if it reports fallback_decode the smoke run fails CI (the
+    silent-degrade bug class, extended to downsampling convs)."""
+    from repro.models.cnn import CNNSpec, ConvSpec, FCSpec
+    return CNNSpec("mini_ds", 16, 3,
+                   (ConvSpec(8, 3, 1, 1), ConvSpec(8, 3, 2, 1),
+                    ConvSpec(8, 3, 1, 1), FCSpec(10)))
+
+
 def pool_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=3):
     """Event-native max-pool (one launch, events in → events out) vs the
     dense pool + re-encode round-trip at matched shapes (pool entries).
@@ -244,7 +258,8 @@ def pool_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=3):
 def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                     reps=3):
     """Fused strip-tiled conv (one launch per layer) vs the per-tap chained
-    path, matched shapes, per backend (conv_fused entries).
+    path, matched shapes, per backend (conv_fused entries) — stride-1 and
+    stride-2 rows (the interleaved half-strip downsampling plan).
 
     Same events in, same outputs (bit-exact): the difference is purely one
     fused launch over an 8x-smaller strip event grid vs k*k re-dispatches
@@ -253,17 +268,20 @@ def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
     CPU harness.  Only the pallas backend (the kernel under test) is
     timed — the block strip path is a correctness twin, pinned bitwise in
     tests/test_conv_strips.py, not a deployment path.  CI-fatal if an
-    eligible strip layer falls back (fallback_decode) instead of riding
-    the fused path.
+    eligible strip layer (either stride) falls back (fallback_decode)
+    instead of riding the fused path.
     """
     from repro.kernels.event_conv import fused_conv_plan
 
     rng = np.random.default_rng(0)
-    shapes = [(1, 8, 8, 8, 8, 3, 1)]
+    # (B, H, W, CI, CO, k, padding, stride) — stride-2 rows are the
+    # downsampling-conv class the interleaved half-strip plan covers.
+    shapes = [(1, 8, 8, 8, 8, 3, 1, 1), (1, 8, 16, 8, 8, 3, 1, 2)]
     if not smoke:
-        shapes.append((2, 16, 16, 8, 16, 3, 1))
+        shapes += [(2, 16, 16, 8, 16, 3, 1, 1), (2, 9, 16, 8, 16, 5, 2, 2),
+                   (1, 9, 16, 8, 8, 1, 0, 2)]
     entries = []
-    for (b, h, w0, ci, co, k, p) in shapes:
+    for (b, h, w0, ci, co, k, p, st) in shapes:
         x = rng.normal(size=(b, h, w0, ci)).astype(np.float32)
         x *= rng.random(x.shape) > 0.5
         x = jnp.maximum(jnp.asarray(x), 0.0)
@@ -276,13 +294,13 @@ def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
             pixel = engine.fire_conv(x, cfg, blk_m=1, keep_dense=False)
 
             fused_fn = jax.jit(lambda s: engine.conv2d(s, wgt, cfg=cfg,
-                                                       padding=p))
+                                                       stride=st, padding=p))
             pertap_fn = jax.jit(lambda s: engine.conv2d(s, wgt, cfg=cfg,
-                                                        padding=p))
+                                                        stride=st, padding=p))
             for stream, want_strip in ((strip, True), (pixel, False)):
                 with engine.trace_dispatch() as recs:
                     jax.eval_shape(lambda s: engine.conv2d(
-                        s, wgt, cfg=cfg, padding=p), stream)
+                        s, wgt, cfg=cfg, stride=st, padding=p), stream)
                 ok = (not any(r.get("fallback_decode") for r in recs)
                       and any(r.get("chained")
                               and bool(r.get("strip")) == want_strip
@@ -290,15 +308,16 @@ def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                 if not ok:
                     raise RuntimeError(
                         f"conv_fused[{backend}]: "
-                        f"{'strip' if want_strip else 'per-tap'} path fell "
-                        f"back instead of consuming events: {recs}")
+                        f"{'strip' if want_strip else 'per-tap'} path "
+                        f"(stride {st}) fell back instead of consuming "
+                        f"events: {recs}")
             us_f, cus_f, yf = _time_thunk(lambda: fused_fn(strip), reps=reps)
             us_p, cus_p, yp = _time_thunk(lambda: pertap_fn(pixel), reps=reps)
             plan = fused_conv_plan((b, h, w0, ci), k, p,
-                                   nkb=strip.events.num_k_blocks)
+                                   nkb=strip.events.num_k_blocks, stride=st)
             entries.append(dict(
                 kind="conv_fused", backend=backend, b=b, h=h, w=w0, ci=ci,
-                co=co, k=k, padding=p,
+                co=co, k=k, padding=p, stride=st,
                 fused_us=round(us_f, 1), per_tap_us=round(us_p, 1),
                 fused_compile_us=round(cus_f, 1),
                 per_tap_compile_us=round(cus_p, 1),
@@ -325,14 +344,20 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
     boundaries vs a dense materialize + re-encode at every boundary.
     ``boundaries`` records where each compiled graph densifies.
     """
-    from repro.models.cnn import (ALEXNET, VGG16, ConvSpec, FCSpec, PoolSpec,
+    from repro.models.cnn import (ALEXNET, ALEXNET_DS, VGG16, VGG16_DS,
+                                  ConvSpec, FCSpec, PoolSpec,
                                   _trace_shapes, chain_boundary_summary,
                                   cnn_forward, init_cnn_params,
                                   make_cnn_pipeline)
 
     # AlexNet@64 has no strip-eligible layer (stride-4 conv1, W=7/3 tails);
     # VGG16@32 runs six of its twelve chained convs on the fused strip path.
-    nets = [(_smoke_spec(), 8)] if smoke else [(ALEXNET, 64), (VGG16, 32)]
+    # The _ds variants replace pools with stride-2 conv blocks: their
+    # downsampling convs ride the fused stride-2 strip path too (VGG16_DS@32
+    # fuses 8/17 chained convs, ALEXNET_DS@68 both of its eligible layers).
+    nets = ([(_smoke_spec(), 8), (_smoke_ds_spec(), 16)] if smoke
+            else [(ALEXNET, 64), (VGG16, 32), (ALEXNET_DS, 68),
+                  (VGG16_DS, 32)])
     entries = []
     for spec, size in nets:
         spec = spec.scaled(size)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "STRIP_CO_MIN",
+    "STRIP_STRIDES",
     "STRIP_W",
     "ScalarEvents",
     "BlockEvents",
@@ -211,34 +212,44 @@ def gather_row_groups(bev: BlockEvents, idx: jax.Array,
 
 
 def gather_row_strips(bev: BlockEvents, idx: jax.Array, live: jax.Array,
-                      shift: int) -> BlockEvents:
+                      shift: int, row_stride: int = 1) -> BlockEvents:
     """Tap-shifted strip gather — the strip analogue of :func:`gather_row_groups`.
 
     Gathers row-strip groups (``idx``/``live`` exactly as in
-    ``gather_row_groups``) and then moves rows *within* each (blk_m, blk_k)
-    tile by the static ``shift``: output row i takes source row i + shift,
-    rows whose source falls outside [0, blk_m) are zero.  A conv tap at
-    stride 1 whose x-offset is not a multiple of STRIP_W straddles two
-    adjacent strips; one ``gather_row_strips`` per (tap, straddle-half)
-    realizes the shifted slice in the event domain (DESIGN.md §6).
+    ``gather_row_groups``) and then remaps rows *within* each (blk_m, blk_k)
+    tile by the static affine map: output row i takes source row
+    ``row_stride * i + shift``, rows whose source falls outside [0, blk_m)
+    are zero.  A conv tap at stride 1 whose x-offset is not a multiple of
+    STRIP_W straddles two adjacent strips; at stride 2 an output strip reads
+    every other input pixel, so the 8 sources of one tap spread over up to
+    three strips as *interleaved half-strips* (4 same-parity pixels each).
+    One ``gather_row_strips`` per (tap, straddle part) realizes the strided
+    slice in the event domain (DESIGN.md §6).
 
-    The row move is a slice + zero-pad — no FP arithmetic — so gathered
-    values are bit-identical to the source rows.
+    The row remap is a pure gather + zero mask — no FP arithmetic — so
+    gathered values are bit-identical to the source rows.
     """
     g = gather_row_groups(bev, idx, live)
     bm = g.values.shape[2]
     d = int(shift)
-    if d == 0:
+    rs = int(row_stride)
+    if rs == 1 and d == 0:
         return g
-    if d >= bm or d <= -bm:
+    rows = [rs * i + d for i in range(bm)]
+    if not any(0 <= r < bm for r in rows):
         return dataclasses.replace(g, values=jnp.zeros_like(g.values),
                                    counts=jnp.zeros_like(g.counts))
-    if d > 0:        # out rows [0, bm-d) <- src rows [d, bm)
-        vals = jnp.pad(g.values[:, :, d:, :],
-                       ((0, 0), (0, 0), (0, d), (0, 0)))
-    else:            # out rows [-d, bm) <- src rows [0, bm+d)
-        vals = jnp.pad(g.values[:, :, :bm + d, :],
-                       ((0, 0), (0, 0), (-d, 0), (0, 0)))
+    if rs == 1:      # contiguous shift: slice + zero-pad
+        if d > 0:    # out rows [0, bm-d) <- src rows [d, bm)
+            vals = jnp.pad(g.values[:, :, d:, :],
+                           ((0, 0), (0, 0), (0, d), (0, 0)))
+        else:        # out rows [-d, bm) <- src rows [0, bm+d)
+            vals = jnp.pad(g.values[:, :, :bm + d, :],
+                           ((0, 0), (0, 0), (-d, 0), (0, 0)))
+        return dataclasses.replace(g, values=vals)
+    take = jnp.asarray([min(max(r, 0), bm - 1) for r in rows], jnp.int32)
+    ok = jnp.asarray([0 <= r < bm for r in rows], bool)
+    vals = jnp.where(ok[None, None, :, None], g.values[:, :, take, :], 0)
     return dataclasses.replace(g, values=vals)
 
 
@@ -265,32 +276,43 @@ def scalar_event_rows(bev: BlockEvents) -> jax.Array:
 STRIP_CO_MIN = 8
 
 
+#: Strides the strip plan covers: output pixel x maps affinely to input
+#: pixel stride*x, so each tap gathers at most stride + 1 straddle parts
+#: (two adjacent-strip halves at stride 1; up to three interleaved
+#: half-strips — 4 same-parity pixels each — at stride 2).
+STRIP_STRIDES = (1, 2)
+
+
 def strip_ineligible_reason(width: int, k: int, stride: int, padding: int,
                             co: int | None = None) -> str | None:
     """Why a conv layer cannot consume a strip-aligned stream (None = it can).
 
-    Strip tiling (blk_m == STRIP_W) needs every tap's shifted slice to be a
-    row-shift of at most two adjacent strips: stride 1 (so output pixel x
-    maps affinely to input pixel x with unit step), input and output widths
-    tiling into whole strips, padding at most k // 2 (so output strips
-    never outnumber the input strips the straddle plan pairs them with),
-    and tap x-offsets within one strip of the origin.  When the
-    output-channel count ``co`` is known it must be a multiple of
-    STRIP_CO_MIN (see its note) so strip == per-tap stays bitwise.
+    Strip tiling (blk_m == STRIP_W) needs every tap's strided slice to be
+    an affine row remap of at most stride + 1 straddle parts: stride in
+    STRIP_STRIDES (output pixel x maps to input pixel stride*x + dx - p,
+    so the 8 sources of one output strip interleave with step ``stride``),
+    input and output widths tiling into whole strips, padding at most
+    k // 2 (so output strips never outnumber the input strips the straddle
+    plan pairs them with), and tap x-offsets within one strip of the
+    origin.  When the output-channel count ``co`` is known it must be a
+    multiple of STRIP_CO_MIN (see its note) so strip == per-tap stays
+    bitwise.
     """
-    out_w = width + 2 * padding - k + 1
-    if stride != 1:
-        return f"stride {stride} != 1 (tap slices are not row shifts)"
+    if stride not in STRIP_STRIDES:
+        return (f"stride {stride} not in {set(STRIP_STRIDES)} (strip plans "
+                f"gather at most stride + 1 interleaved straddle parts per "
+                f"tap)")
+    out_w = (width + 2 * padding - k) // stride + 1
     if width <= 0 or width % STRIP_W:
         return f"input width {width} not a multiple of STRIP_W={STRIP_W}"
     if out_w <= 0 or out_w % STRIP_W:
-        return (f"output width {out_w} (W + 2p - k + 1) not a multiple of "
-                f"STRIP_W={STRIP_W}")
+        return (f"output width {out_w} ((W + 2p - k)//stride + 1) not a "
+                f"multiple of STRIP_W={STRIP_W}")
     if padding > k // 2:
         return (f"padding {padding} > k//2 = {k // 2}: the output map "
                 f"outgrows the input and a tap shift can index outside the "
-                f"planned straddle halves (strip plans pair each output "
-                f"strip with its aligned input strip)")
+                f"planned straddle parts (strip plans pair each output "
+                f"strip with its aligned input strips)")
     if padding > STRIP_W or k - 1 - padding > STRIP_W:
         return (f"tap x-offsets [-{padding}, {k - 1 - padding}] leave the "
                 f"adjacent-strip window (|dx - p| <= {STRIP_W})")
@@ -309,34 +331,46 @@ def strip_eligible(width: int, k: int, stride: int, padding: int,
     return strip_ineligible_reason(width, k, stride, padding, co) is None
 
 
-def strip_tap_map(logical_shape: tuple, k: int, padding: int):
+def strip_tap_map(logical_shape: tuple, k: int, padding: int,
+                  stride: int = 1):
     """Static subtap gather plan for the fused strip conv (DESIGN.md §6).
 
-    For each output strip and each of the 2*k*k subtaps (tap (dy, dx) split
-    into its two straddle halves A/B), the plan names the source strip group
-    and the in-tile row shift that realize the tap's shifted slice:
+    For each output strip and each of the (stride+1)*k*k subtaps (tap
+    (dy, dx) split into its stride + 1 straddle parts), the plan names the
+    source strip group and the in-tile affine row map that realize the
+    tap's strided slice:
 
       src   (G_out, T) int32  source strip group (clamped when dead)
-      live  (G_out, T) bool   False = no source (zero-padding border / dead half)
-      shift (T,)       int32  signed row shift d: out row i <- src row i + d
+      live  (G_out, T) bool   False = no source (zero-padding border / dead part)
+      shift (T,)       int32  signed row offset d: out row i <- src row
+                              stride*i + d
       tap   (T,)       int32  flat filter index dy*k + dx of the subtap
 
+    At stride 1 a tap splits into the familiar two adjacent-strip halves
+    (d = (dx-p) mod 8 and d - 8).  At stride 2 output row i reads input
+    pixel 16*sx + 2i + (dx-p): the 8 same-parity sources span 15 input
+    pixels, i.e. up to three strips, each contributing an *interleaved
+    half-strip* (at most 4 of its rows, step 2) — parts d = r, r - 8,
+    r - 16 with r = (dx-p) mod 8.  Parts whose affine map sources no row
+    in [0, 8) are marked dead (the consumer idles on them).
+
     Subtaps are ordered tap-major (dy, dx ascending — the per-tap oracle's
-    loop order), A half (shift d = (dx-p) mod 8) before B half (d - 8), so a
-    consumer accumulating in plan order reproduces the per-tap reduction
-    tree bit-for-bit.  Everything here is shape-derived — plain numpy,
-    evaluated at trace time.
+    loop order), straddle parts left-to-right, so a consumer accumulating
+    in plan order reproduces the per-tap reduction tree bit-for-bit.
+    Everything here is shape-derived — plain numpy, evaluated at trace
+    time.
     """
     import numpy as np
 
     b, h, w, _ = logical_shape
+    assert stride in STRIP_STRIDES, (stride, "strip_ineligible_reason gates")
     assert w % STRIP_W == 0, (logical_shape, "strip encoding needs W % 8 == 0")
     assert padding <= k // 2, (k, padding, "strip plans pair each output "
-                               "strip with its aligned input strip; "
+                               "strip with its aligned input strips; "
                                "strip_ineligible_reason gates this")
-    oh = h + 2 * padding - k + 1
-    ow = w + 2 * padding - k + 1
-    assert ow > 0 and ow % STRIP_W == 0, (logical_shape, k, padding)
+    oh = (h + 2 * padding - k) // stride + 1
+    ow = (w + 2 * padding - k) // stride + 1
+    assert ow > 0 and ow % STRIP_W == 0, (logical_shape, k, padding, stride)
     nsx_in = w // STRIP_W
     nsx_out = ow // STRIP_W
     g_out = b * oh * nsx_out
@@ -344,7 +378,8 @@ def strip_tap_map(logical_shape: tuple, k: int, padding: int):
     sx = gidx % nsx_out
     oy = (gidx // nsx_out) % oh
     bb = gidx // (nsx_out * oh)
-    t_n = 2 * k * k
+    parts = stride + 1
+    t_n = parts * k * k
     src = np.zeros((g_out, t_n), np.int32)
     live = np.zeros((g_out, t_n), bool)
     shift = np.zeros((t_n,), np.int32)
@@ -352,14 +387,17 @@ def strip_tap_map(logical_shape: tuple, k: int, padding: int):
     t = 0
     for dy in range(k):
         for dx in range(k):
-            iy = oy + dy - padding
+            iy = oy * stride + dy - padding
             s = dx - padding                       # tap x-offset
-            base = sx + (s // STRIP_W)             # first straddled strip
+            base = stride * sx + (s // STRIP_W)    # first straddled strip
             r = s % STRIP_W                        # in-strip row offset
-            for tx, d in ((base, r), (base + 1, r - STRIP_W)):
+            for j in range(parts):
+                tx = base + j
+                d = r - j * STRIP_W
                 ok = (iy >= 0) & (iy < h) & (tx >= 0) & (tx < nsx_in)
-                if d <= -STRIP_W or d >= STRIP_W:
-                    ok = np.zeros_like(ok)         # r == 0: B half is dead
+                if not any(0 <= stride * i + d < STRIP_W
+                           for i in range(STRIP_W)):
+                    ok = np.zeros_like(ok)         # dead part: sources no row
                 src[:, t] = ((bb * h + np.clip(iy, 0, h - 1)) * nsx_in
                              + np.clip(tx, 0, nsx_in - 1)).astype(np.int32)
                 live[:, t] = ok

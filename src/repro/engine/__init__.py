@@ -21,8 +21,8 @@ Typical use::
     s = engine.fire(engine.linear(x, w1, cfg=cfg), cfg)   # layer 1
     y = engine.linear(s, w2, cfg=cfg)                     # layer 2, chained
 """
-from repro.core.events import (STRIP_CO_MIN, STRIP_W, strip_eligible,
-                               strip_ineligible_reason)
+from repro.core.events import (STRIP_CO_MIN, STRIP_STRIDES, STRIP_W,
+                               strip_eligible, strip_ineligible_reason)
 from repro.engine.api import (conv2d, describe, fire, fire_conv, linear,
                               matmul, maxpool2d, pool_ineligible_reason,
                               sparsify)
@@ -36,7 +36,8 @@ import repro.engine.backends  # noqa: F401  (registers built-in backends)
 
 __all__ = [
     "BACKENDS", "EngineConfig", "EventStream",
-    "STRIP_CO_MIN", "STRIP_W", "strip_eligible", "strip_ineligible_reason",
+    "STRIP_CO_MIN", "STRIP_STRIDES", "STRIP_W", "strip_eligible",
+    "strip_ineligible_reason",
     "register_backend", "get_backend", "dispatch", "list_backends",
     "registered_ops",
     "matmul", "linear", "conv2d", "maxpool2d", "pool_ineligible_reason",

@@ -70,11 +70,13 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
     materialized (DESIGN.md §5).  A strip-aligned stream (blk_m == STRIP_W)
     on a strip-eligible layer rides ``conv2d_events_strip`` — the fused-tap
     path: one kernel launch for the whole layer, event grid STRIP_W-fold
-    smaller (DESIGN.md §6).  A pixel-granular stream takes the per-tap
-    ``conv2d_events`` path (k·k row-group gathers — the oracle the fused
-    kernel is bit-exact against).  Backends without the matching event op,
-    and strip streams whose geometry cannot ride the fused kernel, decode
-    once; every such fallback is visible to ``trace_dispatch``.
+    smaller (DESIGN.md §6); stride-2 downsampling convs ride it too, each
+    tap gathering interleaved half-strips (``core.events.STRIP_STRIDES``).
+    A pixel-granular stream takes the per-tap ``conv2d_events`` path (k·k
+    row-group gathers — the oracle the fused kernel is bit-exact against).
+    Backends without the matching event op, and strip streams whose
+    geometry cannot ride the fused kernel, decode once; every such fallback
+    is visible to ``trace_dispatch``.
     """
     if isinstance(x, EventStream):
         name = cfg.resolve_backend()
@@ -97,7 +99,7 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
                                   co=w.shape[-1])
                     and name in list_backends("conv2d_events_strip")):
                 trace.record(op="conv2d", backend=name, chained=True,
-                             strip=True, launches=1)
+                             strip=True, launches=1, stride=stride)
                 return get_backend("conv2d_events_strip", name)(
                     x, w, b, cfg, stride, padding)
             # A strip stream the fused path cannot consume (ineligible

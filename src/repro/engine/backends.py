@@ -219,7 +219,8 @@ def _conv2d_events_pallas(stream, w, b, cfg: EngineConfig, stride, padding):
 # ---------------------------------------------------------------------------
 
 def _strip_out_shape(stream, w, stride, padding):
-    assert stride == 1, "strip path is stride-1 only (engine.conv2d gates)"
+    assert stride in ev.STRIP_STRIDES, \
+        "strip path covers stride in STRIP_STRIDES (engine.conv2d gates)"
     bsz, h, wd, ci = stream.logical_shape
     k, _, ci2, co = w.shape
     assert ci == ci2, (stream.logical_shape, w.shape)
@@ -232,7 +233,7 @@ def _conv2d_events_strip_block(stream, w, b, cfg: EngineConfig, stride,
                                padding):
     from repro.kernels.event_conv.ref import fused_event_conv2d_ref
     bsz, oy, ox, co = _strip_out_shape(stream, w, stride, padding)
-    y = fused_event_conv2d_ref(stream, w, padding=padding)
+    y = fused_event_conv2d_ref(stream, w, stride=stride, padding=padding)
     return _bias(y.reshape(bsz, oy, ox, co), b)
 
 
@@ -242,8 +243,8 @@ def _conv2d_events_strip_pallas(stream, w, b, cfg: EngineConfig, stride,
     from repro.kernels.event_conv.ops import fused_event_conv2d
     bsz, oy, ox, co = _strip_out_shape(stream, w, stride, padding)
     blk_n = min(cfg.blk_n, max(co, 1))
-    y = fused_event_conv2d(stream, w, padding=padding, blk_n=blk_n,
-                           interpret=cfg.resolve_interpret())
+    y = fused_event_conv2d(stream, w, stride=stride, padding=padding,
+                           blk_n=blk_n, interpret=cfg.resolve_interpret())
     return _bias(y.reshape(bsz, oy, ox, co), b)
 
 

@@ -103,10 +103,12 @@ class EngineConfig:
 
         With ``width`` and ``k`` given, also resolves ``blk_m``: STRIP_W
         (8-pixel row strips — the fused-tap kernel's granularity) when the
-        layer is strip-eligible, 1 (pixel) otherwise.  ``strips=True``
-        *requires* strip tiling: a stride/width combo that would silently
-        degrade to pixel granularity raises ``ValueError`` naming the
-        failing rule instead.  ``strips=False`` forces pixel tiling.
+        layer is strip-eligible (stride in ``core.events.STRIP_STRIDES``,
+        i.e. unit-stride and stride-2 downsampling convs both qualify), 1
+        (pixel) otherwise.  ``strips=True`` *requires* strip tiling: a
+        stride/width combo that would silently degrade to pixel granularity
+        raises ``ValueError`` naming the failing rule instead.
+        ``strips=False`` forces pixel tiling.
         """
         from repro.core.events import STRIP_W, strip_ineligible_reason
 

@@ -16,18 +16,20 @@ the indirection through BlockSpec index maps:
                              event's direct weight address offset into its
                              tap's slab.
 
-Grid (G_out, N/bn, T, E), T = 2*k*k subtaps (each tap split into its two
-strip-straddle halves), E innermost.  Per subtap a scratch ``tap_acc``
-accumulates events exactly like the per-tap ``event_matmul`` kernel does,
-then flushes into the layer accumulator — reproducing the per-tap oracle's
-reduction tree bit-for-bit (the straddle half that does not source a given
-output row contributes exact zeros).  The in-tile row shift of a straddling
-tap is applied as a 0/1 selection matmul (``sel @ a``), which moves rows
-exactly (no rounding) and rides the MXU.
+Grid (G_out, N/bn, T, E), T = (stride+1)*k*k subtaps (each tap split into
+its stride + 1 strip-straddle parts: two adjacent-strip halves at stride 1,
+up to three interleaved half-strips at stride 2), E innermost.  Per subtap
+a scratch ``tap_acc`` accumulates events exactly like the per-tap
+``event_matmul`` kernel does, then flushes into the layer accumulator —
+reproducing the per-tap oracle's reduction tree bit-for-bit (the straddle
+part that does not source a given output row contributes exact zeros).
+The in-tile affine row remap of a straddling tap (out row i <- src row
+stride*i + d) is applied as a 0/1 selection matmul (``sel @ a``), which
+moves rows exactly (no rounding) and rides the MXU.
 
 ``@pl.when(e < cnt[g, t])`` idles the unit on padded event slots and on
-dead subtaps (zero-padding border, r == 0 second halves) — the paper's
-low-power idle, now covering the whole tap loop of a layer.
+dead subtaps (zero-padding border, parts whose affine map sources no row) —
+the paper's low-power idle, now covering the whole tap loop of a layer.
 """
 from __future__ import annotations
 
@@ -45,7 +47,8 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
                       # ^ scalar-prefetch refs (plan + event addresses)
                       a_vals_ref, w_ref,       # VMEM inputs
                       out_ref,                 # VMEM output
-                      acc_ref, tap_acc_ref):   # VMEM scratch (bm, bn) f32
+                      acc_ref, tap_acc_ref,    # VMEM scratch (bm, bn) f32
+                      *, row_stride: int = 1):
     g = pl.program_id(0)
     t = pl.program_id(2)
     e = pl.program_id(3)
@@ -65,10 +68,11 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
         a = a_vals_ref[0, 0]                     # (bm, bk) source strip tile
         bm = a.shape[0]
         d = shift_ref[t]
-        # Exact row shift: out row i <- src row i + d (0/1 selection matmul).
+        # Exact affine row remap: out row i <- src row row_stride*i + d
+        # (0/1 selection matmul; stride 2 picks the interleaved half-strip).
         i = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
         j = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
-        sel = (j == i + d).astype(a.dtype)
+        sel = (j == i * row_stride + d).astype(a.dtype)
         shifted = jnp.dot(sel, a, preferred_element_type=jnp.float32)
         tap_acc_ref[...] += jnp.dot(shifted, w_ref[...],
                                     preferred_element_type=jnp.float32)
@@ -84,24 +88,28 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
         out_ref[0] = acc_ref[...].astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("nkb", "blk_n", "interpret",
-                                             "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("nkb", "blk_n", "row_stride",
+                                             "interpret", "out_dtype"))
 def event_conv_pallas(a_vals: jax.Array, a_idx: jax.Array, tap: jax.Array,
                       shift: jax.Array, src: jax.Array, cnt: jax.Array,
                       ws: jax.Array, *, nkb: int, blk_n: int = 128,
-                      interpret: bool = False,
+                      row_stride: int = 1, interpret: bool = False,
                       out_dtype=jnp.float32) -> jax.Array:
-    """One fused launch: y[g] = sum_t sum_e shift_t(a[src[g,t], e]) @ W_tile.
+    """One fused launch: y[g] = sum_t sum_e remap_t(a[src[g,t], e]) @ W_tile.
 
     a_vals/a_idx: strip-encoded events (G_in, E, bm, bk) / (G_in, E).
-    tap/shift: (T,) subtap plan; src/cnt: (G_out, T) source strip + live
-    event count per (output strip, subtap).  ws: tap-stacked weights
-    (k*k*nkb*bk, N), N a multiple of blk_n.  Returns (G_out, bm, N).
+    tap/shift: (T,) subtap plan, T = (row_stride+1)*k*k; src/cnt: (G_out, T)
+    source strip + live event count per (output strip, subtap).  ws:
+    tap-stacked weights (k*k*nkb*bk, N), N a multiple of blk_n.
+    ``row_stride`` is the conv stride: out row i reads src row
+    row_stride*i + shift[t].  Returns (G_out, bm, N).
     """
     g_in, e, bm, bk = a_vals.shape
     g_out, t_n = src.shape
     rows, n = ws.shape
-    assert rows == (t_n // 2) * nkb * bk, (ws.shape, t_n, nkb, bk)
+    assert t_n % (row_stride + 1) == 0, (t_n, row_stride)
+    assert rows == (t_n // (row_stride + 1)) * nkb * bk, \
+        (ws.shape, t_n, nkb, bk, row_stride)
     assert n % blk_n == 0, (n, blk_n)
 
     grid = (g_out, n // blk_n, t_n, e)
@@ -123,7 +131,7 @@ def event_conv_pallas(a_vals: jax.Array, a_idx: jax.Array, tap: jax.Array,
                         pltpu.VMEM((bm, blk_n), jnp.float32)],
     )
     out = pl.pallas_call(
-        event_conv_kernel,
+        functools.partial(event_conv_kernel, row_stride=row_stride),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((g_out, bm, n), out_dtype),
         interpret=interpret,

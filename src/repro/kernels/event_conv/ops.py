@@ -36,14 +36,15 @@ def _stacked_weights(w: jax.Array, bk: int, nkb: int,
     return ev.pad_to_block_multiple(ws, blk_n, 1)
 
 
-def fused_event_conv2d(stream, w: jax.Array, *, padding: int = 0,
-                       blk_n: int = 128,
+def fused_event_conv2d(stream, w: jax.Array, *, stride: int = 1,
+                       padding: int = 0, blk_n: int = 128,
                        interpret: bool = False) -> jax.Array:
     """Strip-tiled fused-tap conv, one Pallas launch.  Returns (B*OY*OX, CO).
 
     ``stream`` must be strip-aligned (blk_m == STRIP_W) and the layer
-    strip-eligible (stride 1 — see ``core.events.strip_eligible``; the
-    engine API enforces this before dispatching here).
+    strip-eligible (stride in STRIP_STRIDES — see
+    ``core.events.strip_eligible``; the engine API enforces this before
+    dispatching here).
     """
     b, h, wd, ci = stream.logical_shape
     k, _, ci2, co = w.shape
@@ -52,20 +53,23 @@ def fused_event_conv2d(stream, w: jax.Array, *, padding: int = 0,
     bev = stream.events
     bk = stream.blk_k
     nkb = bev.num_k_blocks
-    src, live, shift, tap = ev.strip_tap_map((b, h, wd, ci), k, padding)
+    src, live, shift, tap = ev.strip_tap_map((b, h, wd, ci), k, padding,
+                                             stride)
     src_j = jnp.asarray(src)
     cnt = jnp.where(jnp.asarray(live), bev.counts[src_j], 0)
     ws = _stacked_weights(w, bk, nkb, blk_n)
     y = event_conv_pallas(bev.values, bev.block_idx, jnp.asarray(tap),
                           jnp.asarray(shift), src_j, cnt.astype(jnp.int32),
-                          ws, nkb=nkb, blk_n=blk_n, interpret=interpret)
-    oy = conv_out_size(h, k, 1, padding)
-    ox = conv_out_size(wd, k, 1, padding)
+                          ws, nkb=nkb, blk_n=blk_n, row_stride=stride,
+                          interpret=interpret)
+    oy = conv_out_size(h, k, stride, padding)
+    ox = conv_out_size(wd, k, stride, padding)
     return y.reshape(-1, y.shape[-1])[:b * oy * ox, :co]
 
 
 def fused_conv_plan(logical_shape: tuple, k: int, padding: int,
-                    nkb: int, capacity: int | None = None) -> dict:
+                    nkb: int, capacity: int | None = None,
+                    stride: int = 1) -> dict:
     """Static launch accounting for one strip conv layer vs the per-tap path.
 
     event_grid counts (row groups x event slots) of the stream each path
@@ -74,11 +78,15 @@ def fused_conv_plan(logical_shape: tuple, k: int, padding: int,
     """
     b, h, wd, _ = logical_shape
     e = nkb if capacity is None else min(capacity, nkb)
+    oh = conv_out_size(h, k, stride, padding)
+    ow = conv_out_size(wd, k, stride, padding)
     g_pix = b * h * wd
     g_strip = g_pix // ev.STRIP_W
+    g_out = b * oh * (ow // ev.STRIP_W)
     return dict(
         launches_fused=1, launches_per_tap=k * k,
-        grid_fused=(g_strip, 2 * k * k, e),
+        grid_fused=(g_out, (stride + 1) * k * k, e),
         event_grid_strip=g_strip * e, event_grid_pixel=g_pix * e,
         grid_reduction=float(g_pix) / float(g_strip),
-        gathered_groups_per_tap=k * k * g_pix, gathered_groups_fused=0)
+        gathered_groups_per_tap=k * k * b * oh * ow,
+        gathered_groups_fused=0)

@@ -24,21 +24,23 @@ from repro.core.mnf_linear import block_event_linear_from_events
 __all__ = ["fused_event_conv2d_ref"]
 
 
-def fused_event_conv2d_ref(stream, w: jax.Array, *,
+def fused_event_conv2d_ref(stream, w: jax.Array, *, stride: int = 1,
                            padding: int = 0) -> jax.Array:
     """Strip-tiled fused-tap conv, pure jnp.  Returns (B*OY*OX, CO)."""
     b, h, wd, ci = stream.logical_shape
     k, _, ci2, co = w.shape
     assert ci == ci2, (stream.logical_shape, w.shape)
     assert stream.blk_m == ev.STRIP_W, stream.blk_m
-    src, live, shift, tap = ev.strip_tap_map((b, h, wd, ci), k, padding)
-    oy = conv_out_size(h, k, 1, padding)
-    ox = conv_out_size(wd, k, 1, padding)
+    src, live, shift, tap = ev.strip_tap_map((b, h, wd, ci), k, padding,
+                                             stride)
+    oy = conv_out_size(h, k, stride, padding)
+    ox = conv_out_size(wd, k, stride, padding)
     wtap = w.reshape(k * k, ci, co)
     acc = jnp.zeros((b * oy * ox, co),
                     jnp.promote_types(stream.events.values.dtype, w.dtype))
     for t in range(src.shape[1]):
         gat = ev.gather_row_strips(stream.events, jnp.asarray(src[:, t]),
-                                   jnp.asarray(live[:, t]), int(shift[t]))
+                                   jnp.asarray(live[:, t]), int(shift[t]),
+                                   row_stride=stride)
         acc = acc + block_event_linear_from_events(gat, wtap[int(tap[t])])
     return acc

@@ -32,9 +32,11 @@ def serve_cnn(args) -> None:
     """Batched CNN inference through the compiled event-resident pipeline."""
     from repro import engine
     from repro.core.fire import FireConfig
-    from repro.models.cnn import ALEXNET, VGG16, init_cnn_params
+    from repro.models.cnn import (ALEXNET, ALEXNET_DS, VGG16, VGG16_DS,
+                                  init_cnn_params)
 
-    spec = (ALEXNET if args.cnn == "alexnet" else VGG16).scaled(args.cnn_size)
+    spec = {"alexnet": ALEXNET, "vgg16": VGG16, "alexnet_ds": ALEXNET_DS,
+            "vgg16_ds": VGG16_DS}[args.cnn].scaled(args.cnn_size)
     ecfg = engine.EngineConfig(
         backend="pallas" if args.mnf_pallas else "auto",
         threshold=args.mnf_threshold)
@@ -92,9 +94,12 @@ def main():
     ap.add_argument("--mnf-pallas", action="store_true",
                     help="route the MNF multiply phase through the Pallas "
                          "engine backend (default: pure-XLA block backend)")
-    ap.add_argument("--cnn", choices=("alexnet", "vgg16"),
+    ap.add_argument("--cnn", choices=("alexnet", "vgg16", "alexnet_ds",
+                                      "vgg16_ds"),
                     help="serve a CNN workload through the single-jit "
-                         "event-resident pipeline instead of an LM")
+                         "event-resident pipeline instead of an LM (the _ds "
+                         "variants downsample with stride-2 conv blocks — "
+                         "the fused stride-2 strip path)")
     ap.add_argument("--cnn-size", type=int, default=64,
                     help="CNN input resolution (224 = paper scale)")
     ap.add_argument("--batches", type=int, default=8,

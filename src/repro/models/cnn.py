@@ -44,6 +44,7 @@ from repro.core.mnf_conv import conv_out_size
 from repro.models.layers import max_pool_nhwc
 
 __all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
+           "ALEXNET_DS", "VGG16_DS", "conv_downsampled",
            "init_cnn_params", "cnn_forward", "make_cnn_pipeline",
            "run_with_stats", "layer_dense_macs", "chain_boundary_summary"]
 
@@ -99,6 +100,37 @@ VGG16 = CNNSpec(
      ConvSpec(512, 3, 1, 1), ConvSpec(512, 3, 1, 1), ConvSpec(512, 3, 1, 1),
      PoolSpec(),
      FCSpec(4096), FCSpec(4096), FCSpec(1000)))
+
+
+def conv_downsampled(spec: CNNSpec, *, k: int = 3) -> CNNSpec:
+    """All-conv downsampling variant: every max-pool becomes a stride-2
+    k×k conv (padding k//2, channel-preserving) — the "VGG-style stride-2
+    block" of all-convolutional nets (Springenberg et al.) and of SCNN-class
+    sparse accelerators, where the downsampling layer itself must ride the
+    compressed dataflow.  These are exactly the layers the stride-2 strip
+    plan keeps on the fused event path (DESIGN.md §6): each replacement
+    conv consumes its producer's strip stream with interleaved half-strip
+    gathers instead of falling back to the pixel-granular grid.
+    """
+    layers = []
+    c = spec.in_ch
+    for layer in spec.layers:
+        if isinstance(layer, PoolSpec):
+            layers.append(ConvSpec(c, k, 2, k // 2))
+        else:
+            layers.append(layer)
+            if isinstance(layer, ConvSpec):
+                c = layer.out_ch
+    return dataclasses.replace(spec, name=spec.name + "_ds",
+                               layers=tuple(layers))
+
+
+#: Downsampling variants of the paper workloads: pools replaced by stride-2
+#: conv blocks.  At the CPU harness sizes (ALEXNET_DS@68, VGG16_DS@32) their
+#: chained forwards put every eligible downsampling conv on the fused strip
+#: path — the layer class that used to be stride-1-only fallback.
+ALEXNET_DS = conv_downsampled(ALEXNET)
+VGG16_DS = conv_downsampled(VGG16)
 
 
 def _trace_shapes(spec: CNNSpec):

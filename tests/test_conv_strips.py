@@ -3,8 +3,10 @@
 The fused kernel consumes a strip-aligned (blk_m == STRIP_W) conv stream in
 one launch per layer; it must be *bit-identical* to the pixel-granular
 per-tap path (the oracle) — strips only interleave exact zeros into the
-same reduction tree.  Ineligible geometry (stride != 1, W % 8 != 0, odd
-widths, misaligned output width) must degrade visibly, never silently.
+same reduction tree.  Stride 1 and stride 2 both ride it (stride-2 taps
+gather interleaved half-strips).  Ineligible geometry (stride not in
+STRIP_STRIDES, W % 8 != 0, odd widths, misaligned output width) must
+degrade visibly, never silently.
 """
 import jax
 import jax.numpy as jnp
@@ -15,8 +17,9 @@ from repro import engine
 from repro.core import events as ev
 from repro.core.mnf_conv import dense_conv2d
 from repro.kernels.event_conv import fused_conv_plan
-from repro.models.cnn import (CNNSpec, ConvSpec, FCSpec, cnn_forward,
-                              init_cnn_params)
+from repro.models.cnn import (ALEXNET_DS, VGG16, VGG16_DS, CNNSpec, ConvSpec,
+                              FCSpec, PoolSpec, cnn_forward,
+                              conv_downsampled, init_cnn_params)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -31,19 +34,23 @@ def _fired(seed, shape, sparsity=0.5):
 # bit-exactness: fused strip path == per-tap pixel path, per backend
 # ---------------------------------------------------------------------------
 
-ELIGIBLE = [  # (B, H, W, CI, CO, k, padding) — all strip-eligible at stride 1
-    (2, 6, 8, 5, 8, 3, 1),
-    (1, 8, 16, 3, 16, 3, 1),
-    (2, 5, 8, 4, 16, 5, 2),   # odd height
-    (1, 9, 16, 2, 8, 1, 0),   # 1x1 conv
-    (1, 4, 16, 3, 8, 9, 4),   # widest eligible filter (max tap shift)
+ELIGIBLE = [  # (B, H, W, CI, CO, k, padding, stride) — all strip-eligible
+    (2, 6, 8, 5, 8, 3, 1, 1),
+    (1, 8, 16, 3, 16, 3, 1, 1),
+    (2, 5, 8, 4, 16, 5, 2, 1),   # odd height
+    (1, 9, 16, 2, 8, 1, 0, 1),   # 1x1 conv
+    (1, 4, 16, 3, 8, 9, 4, 1),   # widest eligible filter (max tap shift)
+    (1, 8, 16, 5, 8, 3, 1, 2),   # stride-2 "VGG-ds" 3x3 block
+    (2, 7, 16, 4, 8, 5, 2, 2),   # stride-2 5x5, odd height
+    (1, 9, 16, 3, 8, 1, 0, 2),   # stride-2 1x1 projection conv
+    (1, 6, 16, 2, 8, 9, 4, 2),   # stride-2 widest filter (3-part straddles)
 ]
 
 
 @pytest.mark.parametrize("backend", ["block", "pallas"])
 @pytest.mark.parametrize("shape", ELIGIBLE)
 def test_strip_bitwise_equals_pertap_and_oracle(backend, shape):
-    b, h, w0, ci, co, k, p = shape
+    b, h, w0, ci, co, k, p, s = shape
     x = _fired(sum(shape), (b, h, w0, ci))
     r = np.random.default_rng(1)
     wgt = jnp.asarray(r.normal(size=(k, k, ci, co)).astype(np.float32))
@@ -53,14 +60,15 @@ def test_strip_bitwise_equals_pertap_and_oracle(backend, shape):
     assert strip.events.block_idx.shape[0] * engine.STRIP_W \
         == pixel.events.block_idx.shape[0]          # 8x smaller event grid
     with engine.trace_dispatch() as recs:
-        y_strip = engine.conv2d(strip, wgt, cfg=cfg, padding=p)
+        y_strip = engine.conv2d(strip, wgt, cfg=cfg, stride=s, padding=p)
     assert any(rec.get("strip") and rec.get("chained")
-               and rec.get("launches") == 1 for rec in recs), recs
+               and rec.get("launches") == 1 and rec.get("stride") == s
+               for rec in recs), recs
     assert not any(rec.get("decode") or rec.get("fallback_decode")
                    for rec in recs)
-    y_pix = engine.conv2d(pixel, wgt, cfg=cfg, padding=p)
+    y_pix = engine.conv2d(pixel, wgt, cfg=cfg, stride=s, padding=p)
     assert bool(jnp.all(y_strip == y_pix)), "fused strip != per-tap bitwise"
-    ref = dense_conv2d(x, wgt, stride=1, padding=p)
+    ref = dense_conv2d(x, wgt, stride=s, padding=p)
     np.testing.assert_allclose(np.asarray(y_strip), np.asarray(ref),
                                atol=2e-4, rtol=2e-4)
 
@@ -72,7 +80,10 @@ def test_strip_bitwise_equals_pertap_and_oracle(backend, shape):
 def test_strip_eligibility_rules():
     assert engine.strip_eligible(8, 3, 1, 1)
     assert engine.strip_eligible(16, 9, 1, 4)          # OX == W
-    assert not engine.strip_eligible(8, 3, 2, 1)       # stride 2
+    assert engine.strip_eligible(16, 3, 2, 1)          # stride-2 ds block
+    assert engine.strip_eligible(16, 1, 2, 0)          # stride-2 projection
+    assert not engine.strip_eligible(8, 3, 2, 1)       # OX = 4, misaligned
+    assert not engine.strip_eligible(16, 3, 4, 1)      # stride 4
     assert not engine.strip_eligible(12, 3, 1, 1)      # W % 8 != 0
     assert not engine.strip_eligible(7, 3, 1, 1)       # odd width
     assert not engine.strip_eligible(16, 3, 1, 0)      # OX = 14, misaligned
@@ -82,12 +93,48 @@ def test_strip_eligibility_rules():
     assert not engine.strip_eligible(8, 3, 1, 1, co=2)
     assert not engine.strip_eligible(8, 3, 1, 1, co=9)
     assert not engine.strip_eligible(8, 3, 1, 1, co=12)
-    assert "stride" in engine.strip_ineligible_reason(8, 3, 2, 1)
+    assert "stride" in engine.strip_ineligible_reason(16, 3, 4, 1)
     assert "width 12" in engine.strip_ineligible_reason(12, 3, 1, 1)
     assert "output width" in engine.strip_ineligible_reason(16, 3, 1, 0)
+    assert "output width" in engine.strip_ineligible_reason(8, 3, 2, 1)
     assert "output channels" in engine.strip_ineligible_reason(8, 3, 1, 1,
                                                                co=2)
+    assert "output channels" in engine.strip_ineligible_reason(16, 3, 2, 1,
+                                                               co=12)
     assert "padding" in engine.strip_ineligible_reason(8, 3, 1, 5)
+
+
+def test_strip_ineligible_reason_message_table():
+    """Regression-pin the exact rule strings: `for_conv(strips=True)` embeds
+    them in its ValueError and callers grep them in CI logs — the stride
+    rule used to claim `stride != 1` even after stride 2 joined the plan,
+    so each message is pinned verbatim here."""
+    r = engine.strip_ineligible_reason
+    assert r(16, 3, 3, 1) == (
+        "stride 3 not in {1, 2} (strip plans gather at most stride + 1 "
+        "interleaved straddle parts per tap)")
+    assert r(12, 3, 1, 1) == "input width 12 not a multiple of STRIP_W=8"
+    assert r(16, 3, 1, 0) == (
+        "output width 14 ((W + 2p - k)//stride + 1) not a multiple of "
+        "STRIP_W=8")
+    assert r(8, 3, 2, 1) == (
+        "output width 4 ((W + 2p - k)//stride + 1) not a multiple of "
+        "STRIP_W=8")
+    assert r(8, 1, 2, 4) == (
+        "padding 4 > k//2 = 0: the output map outgrows the input and a tap "
+        "shift can index outside the planned straddle parts (strip plans "
+        "pair each output strip with its aligned input strips)")
+    assert r(24, 19, 1, 9) == (
+        "tap x-offsets [-9, 9] leave the adjacent-strip window "
+        "(|dx - p| <= 8)")
+    assert r(8, 3, 1, 1, co=12) == (
+        "output channels 12 not a multiple of STRIP_CO_MIN=8 (bitwise "
+        "contract needs an M-invariant dot lowering — ragged lane "
+        "remainders break it)")
+    # every rule string above is the exact text for_conv(strips=True) raises
+    with pytest.raises(ValueError, match="not in \\{1, 2\\}"):
+        engine.EngineConfig().for_conv(8, width=16, k=3, stride=3,
+                                       padding=1, strips=True)
 
 
 def test_strip_rejects_padding_beyond_half_window():
@@ -143,9 +190,13 @@ def test_for_conv_strip_selection():
     assert cfg.for_conv(3).blk_k == 3                  # legacy clamp intact
     assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1).blk_m \
         == engine.STRIP_W
+    # stride-2 downsampling convs resolve to strips too (DESIGN.md §6)
+    assert cfg.for_conv(16, width=16, k=3, stride=2, padding=1).blk_m \
+        == engine.STRIP_W
     # auto mode silently (and correctly) degrades to pixel granularity
     assert cfg.for_conv(16, width=12, k=3, stride=1, padding=1).blk_m == 1
-    assert cfg.for_conv(16, width=16, k=3, stride=2, padding=1).blk_m == 1
+    assert cfg.for_conv(16, width=8, k=3, stride=2, padding=1).blk_m == 1
+    assert cfg.for_conv(16, width=16, k=3, stride=4, padding=1).blk_m == 1
     # strips=False forces pixels even on eligible geometry
     assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1,
                         strips=False).blk_m == 1
@@ -156,23 +207,31 @@ def test_for_conv_rejects_degrading_strip_request():
     granularity must raise with the failing rule, not degrade."""
     cfg = engine.EngineConfig()
     with pytest.raises(ValueError, match="stride"):
-        cfg.for_conv(16, width=16, k=3, stride=2, padding=1, strips=True)
+        cfg.for_conv(16, width=16, k=3, stride=4, padding=1, strips=True)
     with pytest.raises(ValueError, match="not a multiple"):
         cfg.for_conv(16, width=12, k=3, stride=1, padding=1, strips=True)
     with pytest.raises(ValueError, match="output width"):
         cfg.for_conv(16, width=16, k=3, stride=1, padding=0, strips=True)
+    with pytest.raises(ValueError, match="output width"):
+        cfg.for_conv(16, width=8, k=3, stride=2, padding=1, strips=True)
     with pytest.raises(ValueError, match="width= and k="):
         cfg.for_conv(16, strips=True)
-    # eligible geometry passes and picks strips
+    # eligible geometry passes and picks strips — both strides
     assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1,
+                        strips=True).blk_m == engine.STRIP_W
+    assert cfg.for_conv(16, width=16, k=3, stride=2, padding=1,
                         strips=True).blk_m == engine.STRIP_W
 
 
 # ---------------------------------------------------------------------------
-# fallback boundaries: W % 8 != 0, stride 2 — visible, never silent
+# fallback boundaries: W % 8 != 0, misaligned downsampled width, stride 4 —
+# visible, never silent
 # ---------------------------------------------------------------------------
 
-def test_strip_stream_stride2_falls_back_visibly():
+def test_strip_stream_stride2_misaligned_out_falls_back_visibly():
+    """Stride 2 itself is strip-eligible now, but a downsampled output
+    width that doesn't tile strips (here 8 -> 4) must still take the
+    visible decode fallback."""
     x = _fired(3, (1, 6, 8, 4))
     r = np.random.default_rng(3)
     wgt = jnp.asarray(r.normal(size=(3, 3, 4, 5)).astype(np.float32))
@@ -187,12 +246,200 @@ def test_strip_stream_stride2_falls_back_visibly():
                                rtol=2e-4)
 
 
+def test_strip_stream_stride4_falls_back_visibly():
+    """Strides beyond STRIP_STRIDES stay a named-rule fallback."""
+    x = _fired(13, (1, 9, 16, 4))
+    r = np.random.default_rng(13)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, stride=4, padding=1)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    ref = dense_conv2d(x, wgt, stride=4, padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# degenerate stride-2 geometries: short-circuit or fall back visibly, never
+# crash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+def test_stride2_zero_event_stream(backend):
+    """An all-dead feature map rides the fused stride-2 path with zero live
+    events: every subtap idles and the result is exactly the bias plane."""
+    x = jnp.zeros((1, 8, 16, 4), jnp.float32)
+    r = np.random.default_rng(21)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    bias = jnp.asarray(r.normal(size=(8,)).astype(np.float32))
+    cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=4, blk_n=4)
+    strip = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=False)
+    assert int(strip.num_events) == 0
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(strip, wgt, bias, cfg=cfg, stride=2, padding=1)
+    assert any(rec.get("strip") and rec.get("chained") for rec in recs), recs
+    assert not any(rec.get("fallback_decode") for rec in recs)
+    want = jnp.broadcast_to(bias, (1, 4, 8, 8))
+    assert bool(jnp.all(y == want))
+
+
+def test_stride2_empty_batch_short_circuits():
+    """B == 0 never reaches a backend (Pallas must not see 0-extent
+    launches): exact empty output with the stride-aware out shape."""
+    stream = engine.EventStream.empty(
+        (0, 4), blk_m=engine.STRIP_W, blk_k=4,
+        logical_shape=(0, 8, 16, 4))
+    wgt = jnp.ones((3, 3, 4, 8), jnp.float32)
+    cfg = engine.EngineConfig(backend="pallas", blk_k=4)
+    y = engine.conv2d(stream, wgt, cfg=cfg, stride=2, padding=1)
+    assert y.shape == (0, 4, 8, 8)
+
+
+def test_stride2_odd_downsampled_width_falls_back_visibly():
+    """(16 - 3)//2 + 1 = 7: W odd after downsampling cannot tile strips —
+    named output-width rule, visible decode, correct result."""
+    reason = engine.strip_ineligible_reason(16, 3, 2, 0)
+    assert reason is not None and "output width 7" in reason
+    x = _fired(22, (1, 7, 16, 4))
+    r = np.random.default_rng(22)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, stride=2, padding=0)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(dense_conv2d(x, wgt, stride=2)),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_stride2_padding_beyond_half_window_falls_back_visibly():
+    """p > k//2 at stride 2 (geometry passing every other rule): named
+    padding rule, for_conv(strips=True) raises, stream decodes visibly."""
+    # W=8, k=1, p=4, s=2: out_w = (8 + 8 - 1)//2 + 1 = 8 — only the
+    # padding rule rejects it.
+    reason = engine.strip_ineligible_reason(8, 1, 2, 4, co=8)
+    assert reason is not None and "padding" in reason
+    with pytest.raises(ValueError, match="padding"):
+        engine.EngineConfig().for_conv(4, width=8, k=1, stride=2, padding=4,
+                                       strips=True)
+    x = _fired(23, (1, 6, 8, 4))
+    r = np.random.default_rng(23)
+    wgt = jnp.asarray(r.normal(size=(1, 1, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, stride=2, padding=4)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(dense_conv2d(x, wgt, stride=2, padding=4)),
+        atol=2e-4, rtol=2e-4)
+    # boundary: padding == k//2 stays eligible at stride 2
+    assert engine.strip_eligible(16, 3, 2, 1, co=8)
+
+
+def test_stride2_1x1_projection_misaligned_falls_back_visibly():
+    """1x1/stride-2 projection over W=8 downsamples to 4 — short-circuits
+    to the visible decode; the W=16 twin rides the fused path (ELIGIBLE)."""
+    x = _fired(24, (1, 6, 8, 4))
+    r = np.random.default_rng(24)
+    wgt = jnp.asarray(r.normal(size=(1, 1, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, stride=2, padding=0)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(dense_conv2d(x, wgt, stride=2)),
+        atol=2e-4, rtol=2e-4)
+
+
 def test_fire_conv_strip_requires_aligned_width():
     x = _fired(4, (1, 4, 12, 3))
     with pytest.raises(AssertionError):
         engine.fire_conv(x, engine.EngineConfig(), blk_m=engine.STRIP_W)
     with pytest.raises(AssertionError):
         engine.EventStream.encode_nhwc(x, blk_k=3, blk_m=engine.STRIP_W)
+
+
+def test_conv_downsampled_structure():
+    """Pools become stride-2, channel-preserving conv blocks; everything
+    else (and the FC head sizing, via _trace_shapes) is untouched."""
+    spec = conv_downsampled(VGG16)
+    assert spec.name == "vgg16_ds"
+    assert not any(isinstance(l, PoolSpec) for l in spec.layers)
+    ds = [l for l in spec.layers
+          if isinstance(l, ConvSpec) and l.stride == 2]
+    assert [d.out_ch for d in ds] == [64, 128, 256, 512, 512]
+    assert all(d.k == 3 and d.padding == 1 for d in ds)
+
+
+def test_downsampling_mini_net_fuses_stride2_layer():
+    """conv -> stride-2 conv -> conv: the middle layer consumes its
+    producer's strip stream on the fused stride-2 path (no fallback), and
+    the chained forward stays bit-identical to the round-trip twin."""
+    spec = CNNSpec("mini_ds", 16, 3,
+                   (ConvSpec(8, 3, 1, 1),     # W 16 -> 16, strip producer
+                    ConvSpec(8, 3, 2, 1),     # W 16 -> 8: fused stride-2
+                    ConvSpec(8, 3, 1, 1),     # W 8 -> 8: fused stride-1
+                    FCSpec(10)), num_classes=10)
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 16, 16, 3)))
+    with engine.trace_dispatch() as recs:
+        ym = cnn_forward(params, x, spec, mnf=True, chain=True)
+    s2 = [rec for rec in recs if rec.get("strip") and rec.get("chained")
+          and rec.get("stride") == 2]
+    s1 = [rec for rec in recs if rec.get("strip") and rec.get("chained")
+          and rec.get("stride") == 1]
+    assert len(s2) == 1 and len(s1) == 1, recs
+    assert not any(rec.get("fallback_decode") for rec in recs)
+    yr = cnn_forward(params, x, spec, mnf=True, chain=False)
+    assert bool(jnp.all(ym == yr)), "chained != round-trip with stride-2 strip"
+    yd = cnn_forward(params, x, spec, mnf=False)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
+                               rtol=5e-3)
+
+
+def test_ds_workloads_report_ten_fused_launches():
+    """The paper workloads' conv-downsampled variants (pools -> stride-2
+    conv blocks) keep >= 10 conv layers total on the fused strip path at
+    the CPU harness sizes, with zero densify points on the chain — traced
+    structurally (eval_shape: no numeric work)."""
+    total_fused = 0
+    for spec, size in ((VGG16_DS, 32), (ALEXNET_DS, 68)):
+        spec = spec.scaled(size)
+        assert not any(isinstance(l, PoolSpec) for l in spec.layers)
+        params = jax.eval_shape(lambda k, s=spec: init_cnn_params(k, s), KEY)
+        x = jax.ShapeDtypeStruct((1, size, size, spec.in_ch), jnp.float32)
+        with engine.trace_dispatch() as recs:
+            jax.eval_shape(lambda p, xx: cnn_forward(p, xx, spec, mnf=True,
+                                                     chain=True), params, x)
+        fused = [r for r in recs if r.get("strip") and r.get("chained")
+                 and r.get("launches") == 1]
+        assert not any(r.get("fallback_decode") or r.get("decode")
+                       for r in recs), (spec.name, recs)
+        if spec.name.startswith("vgg"):
+            assert sum(1 for r in fused if r.get("stride") == 2) == 2
+        total_fused += len(fused)
+    assert total_fused >= 10, total_fused
+
+
+@pytest.mark.slow
+def test_vgg16_ds_chained_bitwise():
+    """Whole-net VGG16_DS@32: every downsampling conv on the chain, chained
+    == round-trip bit-for-bit across the stride-2 strip launches."""
+    spec = VGG16_DS.scaled(32)
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 32, 32, 3)))
+    ym = cnn_forward(params, x, spec, mnf=True, chain=True)
+    yr = cnn_forward(params, x, spec, mnf=True, chain=False)
+    assert bool(jnp.all(ym == yr))
 
 
 @pytest.mark.slow

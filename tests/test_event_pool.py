@@ -68,8 +68,13 @@ def test_event_pool_emits_consumer_granularity():
     assert out.blk_m == engine.STRIP_W and out.logical_shape == (2, 4, 8, 6)
     # No consumer geometry: pixel-granular.
     assert base.for_pool(6).blk_m == 1
-    # Strip-ineligible consumer (stride 2): pixel-granular.
+    # Strip-ineligible consumer (stride-2 conv whose downsampled output
+    # width 4 cannot tile strips): pixel-granular.
     assert base.for_pool(6, width=8, k=3, stride=2, padding=1).blk_m == 1
+    # A stride-2 consumer over a wide-enough pooled map *is* strip-eligible
+    # now (the interleaved half-strip plan): pooled stream upgrades.
+    assert base.for_pool(6, width=16, k=3, stride=2,
+                         padding=1, co=8).blk_m == engine.STRIP_W
 
 
 def test_event_pool_chains_into_conv_bitwise():

@@ -1,0 +1,149 @@
+"""Randomized bitwise geometry suite for the whole event path (DESIGN.md §9).
+
+PR 3/4 pinned the event path's bit-exactness contracts on hand-picked
+geometries; this suite samples (B, H, W, k, stride, padding, C, CO,
+threshold, sparsity) with hypothesis (or the deterministic fallback shim —
+tests/_hypothesis_fallback.py) and asserts the same contracts hold across
+the sampled space, on both the block and pallas backends:
+
+  * conv: a strip-eligible geometry (stride 1 *or* 2 — the interleaved
+    half-strip plan) rides the fused strip path bit-identical to the
+    per-tap pixel oracle and allclose to the dense conv; ineligible
+    geometry degrades visibly (fallback_decode) and stays correct.
+  * pool: the event-native segment max equals the dense ``reduce_window``
+    pool bit for bit, from pixel- and strip-granular streams alike.
+  * chain: a conv→pool→conv(+stride-2)→FC network's chained forward is
+    bit-identical to the per-layer round-trip twin, whatever mix of
+    strip/pixel/pool boundaries the sampled geometry lands on.
+
+Zero-event streams (sparsity 1.0) are in-distribution on purpose: every
+contract must hold when nothing fires.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import engine
+from repro.core.fire import FireConfig, fire
+from repro.core.mnf_conv import dense_conv2d
+from repro.models.cnn import (CNNSpec, ConvSpec, FCSpec, PoolSpec,
+                              cnn_forward, init_cnn_params)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _input(seed: int, shape, sparsity: float) -> jax.Array:
+    """Signed, sparsified input — fire decides what becomes an event."""
+    r = np.random.default_rng(seed)
+    x = r.normal(size=shape) * (r.random(shape) > sparsity)
+    return jnp.asarray(x.astype(np.float32))
+
+
+def _seed(*parts) -> int:
+    return abs(hash(tuple(parts))) % (2 ** 31)
+
+
+# ---------------------------------------------------------------------------
+# conv: strip == per-tap (bitwise) == dense (allclose), or visible fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), h=st.integers(4, 9), wmul=st.integers(1, 2),
+       ci=st.integers(1, 5), comul=st.integers(1, 2),
+       k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+       same_pad=st.booleans(), threshold=st.sampled_from([0.0, 0.2]),
+       sparsity=st.sampled_from([0.25, 0.6, 1.0]))
+def test_conv_geometry_strip_pertap_dense(backend, b, h, wmul, ci, comul, k,
+                                          stride, same_pad, threshold,
+                                          sparsity):
+    w0 = 8 * wmul
+    p = k // 2 if same_pad else 0
+    co = 8 * comul
+    h = max(h, k)                          # at least one output row
+    x = _input(_seed(b, h, w0, ci, co, k, stride, p, sparsity),
+               (b, h, w0, ci), sparsity)
+    wgt = jnp.asarray(np.random.default_rng(_seed(k, ci, co)).normal(
+        size=(k, k, ci, co)).astype(np.float32))
+    cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=4, blk_n=8,
+                              threshold=threshold)
+    strip = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=False)
+    fired = fire(x, FireConfig(threshold=threshold))
+    eligible = engine.strip_eligible(w0, k, stride, p, co=co)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(strip, wgt, cfg=cfg, stride=stride, padding=p)
+    if eligible:
+        assert any(r.get("strip") and r.get("chained")
+                   and r.get("launches") == 1 for r in recs), recs
+        assert not any(r.get("fallback_decode") or r.get("decode")
+                       for r in recs), recs
+        pixel = engine.fire_conv(x, cfg, blk_m=1, keep_dense=False)
+        y_pix = engine.conv2d(pixel, wgt, cfg=cfg, stride=stride, padding=p)
+        assert bool(jnp.all(y == y_pix)), "strip != per-tap bitwise"
+    else:
+        assert any(r.get("fallback_decode") and r.get("strip")
+                   for r in recs), recs
+    ref = dense_conv2d(fired, wgt, stride=stride, padding=p)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# pool: event-native segment max == dense reduce_window, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 2), h=st.integers(4, 10), wmul=st.integers(1, 2),
+       c=st.integers(1, 6), k=st.sampled_from([2, 3]),
+       stride=st.integers(1, 3), strips_in=st.booleans(),
+       sparsity=st.sampled_from([0.3, 0.7, 1.0]))
+def test_pool_geometry_bitwise(backend, b, h, wmul, c, k, stride, strips_in,
+                               sparsity):
+    w0 = 8 * wmul
+    h = max(h, k)
+    x = _input(_seed(b, h, w0, c, k, stride, sparsity), (b, h, w0, c),
+               sparsity)
+    fired = fire(x, FireConfig())
+    cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=4)
+    stream = engine.fire_conv(x, cfg, blk_m=8 if strips_in else 1,
+                              keep_dense=False)
+    with engine.trace_dispatch() as recs:
+        pooled = engine.maxpool2d(stream, k, stride, cfg=cfg)
+    assert any(r.get("pool_events") for r in recs), recs
+    assert not any(r.get("fallback_decode") for r in recs), recs
+    ref = engine.maxpool2d(fired, k, stride, cfg=cfg)   # dense reduce_window
+    assert bool(jnp.all(pooled.dense_nhwc() == ref)), \
+        "event pool != dense pool bitwise"
+
+
+# ---------------------------------------------------------------------------
+# chain: conv -> pool -> conv(stride 1 or 2) -> FC, chained == round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@settings(max_examples=5, deadline=None)
+@given(size=st.sampled_from([8, 16]), ci=st.integers(1, 3),
+       k1=st.sampled_from([1, 3]), k2=st.sampled_from([1, 3]),
+       s2=st.sampled_from([1, 2]), sparsity=st.sampled_from([0.3, 0.8]))
+def test_chained_conv_pool_conv_bitwise(backend, size, ci, k1, k2, s2,
+                                        sparsity):
+    spec = CNNSpec("prop", size, ci,
+                   (ConvSpec(8, k1, 1, k1 // 2), PoolSpec(2, 2),
+                    ConvSpec(8, k2, s2, k2 // 2), FCSpec(8)), num_classes=8)
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(_input(_seed(size, ci, k1, k2, s2, sparsity),
+                           (1, size, size, ci), sparsity))
+    cfg = engine.EngineConfig(backend=backend)
+    with engine.trace_dispatch() as recs:
+        ym = cnn_forward(params, x, spec, mnf=True, chain=True,
+                         engine_cfg=cfg)
+    assert not any(r.get("fallback_decode") for r in recs), recs
+    yr = cnn_forward(params, x, spec, mnf=True, chain=False, engine_cfg=cfg)
+    assert bool(jnp.all(ym == yr)), "chained != round-trip"
+    yd = cnn_forward(params, x, spec, mnf=False)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
+                               rtol=5e-3)
