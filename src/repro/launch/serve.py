@@ -3,19 +3,26 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --batch 4 --prompt-len 32 --gen 16
 
-CNN mode serves batched image requests through the single-jit MNF pipeline
-(models/cnn.make_cnn_pipeline — activations stay event-resident between conv
-layers, DESIGN.md §5/§5.1).  MNF is the default; ``--dense`` serves the
-oracle path instead:
+CNN mode runs a full serving replica (``repro.serving`` — DESIGN.md §10):
+a FIFO request queue continuously batched into padded buckets, one
+AOT-warmed compiled pipeline per bucket, weights replicated and the batch
+axis sharded over the (data, model) mesh.  MNF is the default; ``--dense``
+serves the oracle path instead:
 
   PYTHONPATH=src python -m repro.launch.serve --cnn alexnet --cnn-size 64 \
-      --batch 4 --batches 8
+      --rate 6 --ticks 8 --cache-dir /tmp/mnf_cache
+
+``--smoke`` serves the mini network through every bucket and **fails**
+(exit 1) if any steady-state tick recompiles, or an eligible event
+boundary reports fallback_decode, or padded-bucket logits drift bitwise
+from the unpadded forward — the CI anti-rot gate for the serving tier.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import sys
 import time
 
 import jax
@@ -23,60 +30,134 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.launch.steps import (make_cnn_serve_step, make_prefill_step,
-                                make_serve_step)
+from repro.launch.mesh import checked_mesh, make_serve_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import init_params
 
 
-def serve_cnn(args) -> None:
-    """Batched CNN inference through the compiled event-resident pipeline."""
-    from repro import engine
-    from repro.core.fire import FireConfig
-    from repro.models.cnn import (ALEXNET, ALEXNET_DS, VGG16, VGG16_DS,
-                                  init_cnn_params)
+def _cnn_spec(name: str, size: int):
+    from repro.models.cnn import (ALEXNET, ALEXNET_DS, MINI, VGG16,
+                                  VGG16_DS)
+    return {"alexnet": ALEXNET, "vgg16": VGG16, "alexnet_ds": ALEXNET_DS,
+            "vgg16_ds": VGG16_DS, "mini": MINI}[name].scaled(size)
 
-    spec = {"alexnet": ALEXNET, "vgg16": VGG16, "alexnet_ds": ALEXNET_DS,
-            "vgg16_ds": VGG16_DS}[args.cnn].scaled(args.cnn_size)
+
+def serve_cnn(args) -> None:
+    """Continuously-batched CNN serving through the AOT-warmed replica."""
+    import numpy as np
+
+    from repro import engine, serving
+    from repro.core.fire import FireConfig
+    from repro.models.cnn import init_cnn_params
+
+    spec = _cnn_spec(args.cnn, args.cnn_size)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
     ecfg = engine.EngineConfig(
         backend="pallas" if args.mnf_pallas else "auto",
         threshold=args.mnf_threshold)
-    plan = make_cnn_serve_step(spec, args.batch, mnf=not args.dense,
-                               engine_cfg=ecfg,
-                               fire_cfg=FireConfig(
-                                   threshold=args.mnf_threshold))
-
     key = jax.random.PRNGKey(0)
     params = init_cnn_params(key, spec, weight_sparsity=args.weight_sparsity)
 
-    def batch_at(step: int) -> jax.Array:
-        # Fresh buffer per request — the pipeline donates its input.
-        return jax.nn.relu(jax.random.normal(
-            jax.random.fold_in(key, step),
-            (args.batch, spec.input_size, spec.input_size, spec.in_ch)))
+    eng = serving.ServeEngine(
+        spec, params,
+        serving.ServeEngineConfig(buckets=buckets, mnf=not args.dense,
+                                  threshold=args.mnf_threshold,
+                                  cache_dir=args.cache_dir),
+        mesh=make_serve_mesh(), engine_cfg=ecfg,
+        fire_cfg=FireConfig(threshold=args.mnf_threshold))
 
-    t0 = time.time()
-    logits = plan.fn(params, batch_at(0))
-    jax.block_until_ready(logits)
-    t_compile = time.time() - t0
+    # Synthetic traffic is generated AHEAD of the serving loop: requests/s
+    # must measure the pipeline, not host-side jax.random throughput.
+    rng = np.random.default_rng(0)
+    n_requests = args.rate * args.ticks
+    images = np.maximum(
+        rng.standard_normal((n_requests, spec.input_size, spec.input_size,
+                             spec.in_ch), dtype=np.float32), 0.0)
 
-    t0 = time.time()
-    preds = []
-    for step in range(1, args.batches + 1):
-        logits = plan.fn(params, batch_at(step))
-        preds.append(jnp.argmax(logits, axis=-1))
-    jax.block_until_ready(preds[-1])
-    t_serve = time.time() - t0
+    warm_recompiles = eng.recompiles
+    it = iter(images)
+    for _ in range(args.ticks):
+        for _ in range(args.rate):
+            eng.submit(next(it))
+        eng.run_tick()
+    stats = eng.stats()
+
+    failures = []
+    if eng.recompiles != warm_recompiles:
+        failures.append(
+            f"steady-state recompiles: {eng.recompiles - warm_recompiles} "
+            f"ticks compiled after warmup (the jit cache-miss counter must "
+            f"stay flat)")
+    report = eng.boundary_report()
+    if not args.dense and report["fallback_decodes"]:
+        failures.append(f"eligible boundary reported fallback_decode: "
+                        f"{report}")
 
     print(json.dumps(dict(
-        net=spec.name, input_size=spec.input_size, batch=args.batch,
-        batches=args.batches, mnf=not args.dense,
-        compile_s=round(t_compile, 3),
-        frames_per_s=round(args.batches * args.batch / max(t_serve, 1e-9), 2),
-        engine=dataclasses.asdict(plan.engine),
-        # DESIGN.md §7 invariant per cell: pool boundaries riding the
-        # event-native segment max vs densify points left on the chain.
-        boundaries=plan.boundaries,
-        sample_preds=[int(t) for t in preds[-1][:4]])))
+        net=spec.name, input_size=spec.input_size, buckets=list(buckets),
+        mnf=not args.dense, engine=dataclasses.asdict(eng.engine_cfg),
+        boundaries=report, **stats)))
+    if failures:
+        print("serve smoke FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+def serve_smoke(args) -> None:
+    """CI gate: tiny bucketed serve loop + the tier's three invariants."""
+    import numpy as np
+
+    from repro import serving
+    from repro.models.cnn import init_cnn_params, make_cnn_pipeline
+
+    spec = _cnn_spec("mini", 8)
+    buckets = (1, 2, 4)
+    params = init_cnn_params(jax.random.PRNGKey(0), spec,
+                             weight_sparsity=0.5)
+    eng = serving.ServeEngine(
+        spec, params, serving.ServeEngineConfig(buckets=buckets,
+                                                cache_dir=args.cache_dir))
+    warm = eng.recompiles
+    rng = np.random.default_rng(0)
+    images = np.maximum(rng.standard_normal((9, 8, 8, 3),
+                                            dtype=np.float32), 0.0)
+    arrivals = (1, 3, 0, 5)          # exercises buckets 1, 4, (idle), 4+1
+    it = iter(images)
+    for n in arrivals:
+        for _ in range(n):
+            eng.submit(next(it))
+        eng.run_tick()
+
+    failures = []
+    if len(eng.completed) != 9:
+        failures.append(f"served {len(eng.completed)}/9 requests")
+    if [r.rid for r in eng.completed] != sorted(
+            r.rid for r in eng.completed):
+        failures.append("completion order is not FIFO")
+    if eng.recompiles != warm:
+        failures.append(f"{eng.recompiles - warm} steady-state recompiles "
+                        f"(jit cache-miss counter must stay flat after "
+                        f"warmup)")
+    report = eng.boundary_report()
+    if report["fallback_decodes"]:
+        failures.append(f"eligible boundary reported fallback_decode: "
+                        f"{report}")
+    # Bitwise padding mask: real rows of every padded bucket == the
+    # unpadded chained forward.
+    ref_fn = make_cnn_pipeline(spec, donate=False)
+    for n in (1, 3, 9):
+        ref = np.asarray(ref_fn(params, jnp.asarray(images[:n])))
+        got = np.stack([r.result for r in eng.completed[:n]])
+        if not np.array_equal(ref, got):
+            failures.append(f"padded-bucket logits not bitwise-equal to "
+                            f"the unpadded forward at n={n}")
+    print(json.dumps(dict(smoke="serve", boundaries=report, **eng.stats())))
+    if failures:
+        print("serve smoke FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        raise SystemExit(1)
+    print("serve smoke OK: no steady-state recompiles, no fallback_decode, "
+          "padding bitwise-exact")
 
 
 def main():
@@ -95,15 +176,27 @@ def main():
                     help="route the MNF multiply phase through the Pallas "
                          "engine backend (default: pure-XLA block backend)")
     ap.add_argument("--cnn", choices=("alexnet", "vgg16", "alexnet_ds",
-                                      "vgg16_ds"),
-                    help="serve a CNN workload through the single-jit "
-                         "event-resident pipeline instead of an LM (the _ds "
+                                      "vgg16_ds", "mini"),
+                    help="serve a CNN workload through the bucketed "
+                         "serving replica instead of an LM (the _ds "
                          "variants downsample with stride-2 conv blocks — "
                          "the fused stride-2 strip path)")
     ap.add_argument("--cnn-size", type=int, default=64,
                     help="CNN input resolution (224 = paper scale)")
-    ap.add_argument("--batches", type=int, default=8,
-                    help="CNN mode: number of batched requests to serve")
+    ap.add_argument("--buckets", default="1,8,32,128",
+                    help="CNN mode: compiled batch bucket sizes, ascending")
+    ap.add_argument("--rate", type=int, default=8,
+                    help="CNN mode: synthetic request arrivals per tick")
+    ap.add_argument("--ticks", type=int, default=8,
+                    help="CNN mode: number of serving ticks to run")
+    ap.add_argument("--cache-dir", default=None,
+                    help="JAX persistent compilation cache directory — a "
+                         "restarted replica re-warms its bucket "
+                         "executables from disk in seconds")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: tiny bucketed serve loop; exit 1 on any "
+                         "steady-state recompile, fallback_decode, or "
+                         "padding bitwise drift")
     ap.add_argument("--dense", action="store_true",
                     help="CNN mode: serve the dense oracle path instead of "
                          "MNF events (the default)")
@@ -111,6 +204,9 @@ def main():
                     help="CNN mode: unstructured weight pruning density")
     args = ap.parse_args()
 
+    if args.smoke:
+        serve_smoke(args)
+        return
     if args.cnn:
         if args.dense and (args.mnf or args.mnf_pallas
                            or args.mnf_threshold != 0.0):
@@ -132,8 +228,7 @@ def main():
     max_len = args.prompt_len + args.gen
     shape = ShapeConfig("serve", max_len, args.batch, "decode")
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = checked_mesh((ndev, 1), ("data", "model"))
 
     pre = make_prefill_step(cfg, ShapeConfig("pf", max_len, args.batch,
                                              "prefill"), mesh)

@@ -18,8 +18,10 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.engine import EngineConfig
 from repro.models import transformer as tfm
 from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
-from repro.parallel.sharding import (ShardingRules, make_rules, make_sharder,
-                                     named_sharding_tree)
+from repro.parallel.sharding import (ShardingRules, data_axis_size,
+                                     make_rules, make_sharder,
+                                     named_sharding_tree, serve_batch_pspec,
+                                     shard_map_compat)
 
 __all__ = ["CellPlan", "CNNCellPlan", "plan_cell", "make_train_step",
            "make_prefill_step", "make_serve_step", "make_cnn_serve_step",
@@ -224,24 +226,52 @@ class CNNCellPlan:
     #: densify points remain — serving logs report the DESIGN.md §7
     #: zero-densify invariant per cell.
     boundaries: dict = dataclasses.field(default_factory=dict)
+    #: Serving-tier mesh placement (DESIGN.md §10): the (data, model) mesh
+    #: the pipeline is placed on, how many ways the batch axis shards over
+    #: it (1 = replicated single-device execution), and the NamedSharding
+    #: the image buffer must arrive under (None off-mesh).
+    mesh: Any = None
+    data_shards: int = 1
+    input_sharding: Any = None
 
 
 def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
                         engine_cfg: EngineConfig | None = None,
-                        fire_cfg=None, donate: bool = True) -> CNNCellPlan:
+                        fire_cfg=None, donate: bool = True,
+                        mesh: Mesh | None = None) -> CNNCellPlan:
     """Compile the event-resident CNN pipeline for batched serving.
 
     ``spec`` is a ``models.cnn.CNNSpec`` (already ``.scaled(...)`` to the
     serving resolution).  One jit covers conv→fire→…→FC; the MNF path keeps
     activations event-resident between conv layers (DESIGN.md §5).
+
+    With a ``mesh``, the pipeline goes **batch-parallel**: the forward is
+    wrapped in a ``shard_map`` over the mesh's data axes — weights
+    replicated (in_spec ``P()``), the batch axis sharded — so each device
+    runs the identical per-sample event pipeline over its batch shard
+    (near-linear device scaling, and bitwise-identical logits, since the
+    forward is per-sample independent).  A batch that does not divide the
+    data axes (bucket 1 on a multi-device replica) stays replicated
+    instead of tripping the divisibility check — same policy as
+    ``parallel.sharding.serve_batch_pspec``.
     """
     from repro.core.fire import FireConfig
     from repro.models import cnn as cnn_mod
 
     fire_cfg = fire_cfg or FireConfig()
     ecfg = (engine_cfg or EngineConfig(backend="auto")).resolved()
-    fn = cnn_mod.make_cnn_pipeline(spec, mnf=mnf, fire_cfg=fire_cfg,
-                                   engine_cfg=ecfg, donate=donate)
+    fwd = cnn_mod.make_cnn_forward(spec, mnf=mnf, fire_cfg=fire_cfg,
+                                   engine_cfg=ecfg)
+    data = data_axis_size(mesh) if mesh is not None else 1
+    shards = data if (data > 1 and batch % data == 0) else 1
+    in_shard = None
+    if shards > 1:
+        dp = _dp_spec(mesh)
+        fwd = shard_map_compat(fwd, mesh, in_specs=(P(), dp), out_specs=dp)
+        in_shard = NamedSharding(mesh, serve_batch_pspec(mesh, batch))
+    elif mesh is not None:
+        in_shard = NamedSharding(mesh, P())
+    fn = jax.jit(fwd, donate_argnums=(1,) if donate else ())
     pshapes = jax.eval_shape(
         lambda k: cnn_mod.init_cnn_params(k, spec),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -252,7 +282,8 @@ def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
     return CNNCellPlan(spec=spec, batch=batch, fn=fn,
                        arg_specs=(pshapes, x_spec),
                        donate=(1,) if donate else (), engine=ecfg,
-                       boundaries=boundaries)
+                       boundaries=boundaries, mesh=mesh, data_shards=shards,
+                       input_sharding=in_shard)
 
 
 def plan_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

@@ -45,9 +45,8 @@ def build(args):
         model = 1
         while model * 2 <= min(4, ndev) and ndev % (model * 2) == 0:
             model *= 2
-        mesh = jax.make_mesh(
-            (ndev // model, model), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import checked_mesh
+        mesh = checked_mesh((ndev // model, model), ("data", "model"))
     opt = AdamWConfig(schedule=warmup_cosine(args.lr, args.warmup,
                                              args.steps))
     plan = make_train_step(cfg, shape, mesh, opt=opt)

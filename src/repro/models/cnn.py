@@ -44,9 +44,10 @@ from repro.core.mnf_conv import conv_out_size
 from repro.models.layers import max_pool_nhwc
 
 __all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
-           "ALEXNET_DS", "VGG16_DS", "conv_downsampled",
-           "init_cnn_params", "cnn_forward", "make_cnn_pipeline",
-           "run_with_stats", "layer_dense_macs", "chain_boundary_summary"]
+           "ALEXNET_DS", "VGG16_DS", "MINI", "conv_downsampled",
+           "init_cnn_params", "cnn_forward", "make_cnn_forward",
+           "make_cnn_pipeline", "run_with_stats", "layer_dense_macs",
+           "chain_boundary_summary"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +132,13 @@ def conv_downsampled(spec: CNNSpec, *, k: int = 3) -> CNNSpec:
 #: path — the layer class that used to be stride-1-only fallback.
 ALEXNET_DS = conv_downsampled(ALEXNET)
 VGG16_DS = conv_downsampled(VGG16)
+
+#: Seconds-scale smoke network exercising every chain seam — conv→conv,
+#: the event-native conv→pool→conv boundary, pool→FC.  The serving-tier
+#: smoke loop and the benchmark smoke both bucket-serve this net.
+MINI = CNNSpec("mini", 8, 3,
+               (ConvSpec(8, 3, 1, 1), ConvSpec(8, 3, 1, 1), PoolSpec(),
+                ConvSpec(8, 3, 1, 1), FCSpec(10)), num_classes=10)
 
 
 def _trace_shapes(spec: CNNSpec):
@@ -458,6 +466,30 @@ def cnn_forward(params, x: jax.Array, spec: CNNSpec, *, mnf: bool = True,
                     chain=chain and mnf)
 
 
+def make_cnn_forward(spec: CNNSpec, *, mnf: bool = True,
+                     fire_cfg: FireConfig = FireConfig(),
+                     engine_cfg: engine.EngineConfig | None = None,
+                     chain: bool | None = None):
+    """The un-jitted whole-network closure: ``fwd(params, x) -> logits``.
+
+    The seam the serving tier wraps: a bucket-shaped jit, or a
+    batch-parallel ``shard_map`` body (each device runs this closure over
+    its batch shard — the forward is per-sample independent, so the
+    sharded result is bitwise the unsharded one).  ``make_cnn_pipeline``
+    is exactly ``jax.jit`` of this.
+    """
+    cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
+    if chain is None:
+        chain = mnf and not fire_cfg.quantize_to_int8
+    chain = chain and mnf
+
+    def fwd(params, x):
+        return _forward(params, x, spec, mnf=mnf, fire_cfg=fire_cfg,
+                        cfg=cfg, chain=chain)
+
+    return fwd
+
+
 def make_cnn_pipeline(spec: CNNSpec, *, mnf: bool = True,
                       fire_cfg: FireConfig = FireConfig(),
                       engine_cfg: engine.EngineConfig | None = None,
@@ -469,15 +501,8 @@ def make_cnn_pipeline(spec: CNNSpec, *, mnf: bool = True,
     ``donate=True`` donates the input image buffer (serving never reuses a
     consumed batch; pass ``donate=False`` when the caller does).
     """
-    cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
-    if chain is None:
-        chain = mnf and not fire_cfg.quantize_to_int8
-    chain = chain and mnf
-
-    def fwd(params, x):
-        return _forward(params, x, spec, mnf=mnf, fire_cfg=fire_cfg,
-                        cfg=cfg, chain=chain)
-
+    fwd = make_cnn_forward(spec, mnf=mnf, fire_cfg=fire_cfg,
+                           engine_cfg=engine_cfg, chain=chain)
     return jax.jit(fwd, donate_argnums=(1,) if donate else ())
 
 

@@ -1,0 +1,264 @@
+"""ServeEngine — the production serving tier over the event-resident CNN.
+
+One engine = one replica: a (data, model) mesh with weights replicated and
+the batch axis sharded on ``data``, one AOT-compiled pipeline per batch
+bucket, and a continuous batcher routing the FIFO request queue into the
+smallest admissible bucket each tick (DESIGN.md §10).
+
+The three invariants the tier is built around, each enforced or measured:
+
+  * **No steady-state compilation.**  Every bucket executable is built at
+    startup (``serving.aot``); ``recompiles`` counts every lower+compile
+    the engine ever performs, and a flat counter after warmup proves no
+    tick traced or compiled anything (CI asserts this — ``serve --smoke``).
+  * **Padding is bitwise-free.**  Short batches are zero-padded to the
+    bucket shape; zero rows ride the pipeline as event-free streams and
+    their logits are sliced off, so a real request's logits are bitwise
+    the unpadded forward's (tests/test_serving.py asserts per bucket).
+  * **No silent event-path degradation.**  ``boundary_report`` abstract-
+    traces every bucket's pipeline under ``engine.trace_dispatch``; an
+    eligible boundary reporting ``fallback_decode`` is a serving bug, not
+    a slow path (CI-fatal in the smoke loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro import engine as mnf_engine
+from repro.core.fire import FireConfig
+from repro.launch.steps import make_cnn_serve_step
+from repro.serving.aot import (aot_compile, configure_persistent_cache,
+                               load_executable, save_executable,
+                               snapshot_key)
+from repro.serving.batcher import (DEFAULT_BUCKETS, ContinuousBatcher,
+                                   Request, pad_bucket)
+
+__all__ = ["ServeEngineConfig", "ServeEngine", "percentile"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeEngineConfig:
+    """Replica-level knobs of the serving tier (the CLI maps onto this).
+
+    buckets:      compiled batch shapes, ascending (requests are padded up
+                  to the smallest admissible one).
+    mnf:          event-resident pipeline (False = dense oracle serving).
+    backend/threshold: forwarded into the per-bucket EngineConfig.
+    cache_dir:    warm-start directory (None = off): holds both the JAX
+                  persistent compilation cache and per-bucket executable
+                  snapshots, so a restarted replica restores finished
+                  executables from disk without tracing or compiling.
+    aot_warmup:   compile every bucket at startup (False defers each bucket
+                  to its first request — only for tests/latency studies).
+    max_batches_per_tick: tick batch budget (None = drain the queue).
+    """
+
+    buckets: tuple = DEFAULT_BUCKETS
+    mnf: bool = True
+    backend: str = "auto"
+    threshold: float = 0.0
+    cache_dir: str | None = None
+    aot_warmup: bool = True
+    max_batches_per_tick: int | None = None
+
+
+def percentile(values: list, q: float) -> float:
+    """p-th percentile of a latency list (0 for an empty window)."""
+    if not values:
+        return 0.0
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+class ServeEngine:
+    """One serving replica: sharded, continuously batched, AOT-warmed."""
+
+    def __init__(self, spec, params, cfg: ServeEngineConfig | None = None, *,
+                 mesh=None, engine_cfg=None, fire_cfg=None):
+        self.cfg = cfg or ServeEngineConfig()
+        self.spec = spec
+        if self.cfg.cache_dir:
+            configure_persistent_cache(self.cfg.cache_dir)
+        if mesh is None:
+            from repro.launch.mesh import make_serve_mesh
+            mesh = make_serve_mesh()
+        self.mesh = mesh
+        ecfg = (engine_cfg or mnf_engine.EngineConfig(
+            backend=self.cfg.backend,
+            threshold=self.cfg.threshold)).resolved()
+        fire_cfg = fire_cfg or FireConfig(threshold=self.cfg.threshold)
+        self.fire_cfg = fire_cfg
+        # donate=False: logits cannot alias the image buffer, so donation
+        # buys nothing here and XLA warns per bucket; the padded buffer is
+        # engine-owned and reused across ticks anyway.
+        self.plans = {
+            b: make_cnn_serve_step(spec, b, mnf=self.cfg.mnf,
+                                   engine_cfg=ecfg, fire_cfg=fire_cfg,
+                                   mesh=mesh, donate=False)
+            for b in self.cfg.buckets}
+        self.engine_cfg = ecfg
+        self.batcher = ContinuousBatcher(
+            self.cfg.buckets,
+            max_batches_per_tick=self.cfg.max_batches_per_tick)
+        # Params are placed once, replicated over the mesh (weights
+        # replicated, batch sharded — ROADMAP item 1's layout).
+        self.params = self._replicate(params)
+        self._exec: dict[int, Any] = {}
+        #: Every lower+compile this engine ever ran.  Flat after warmup ==
+        #: no steady-state tick compiled anything (the CI smoke invariant).
+        self.recompiles = 0
+        #: Buckets whose executable was restored from a cache_dir snapshot
+        #: (no trace, no lower, no compile — the restarted-replica path).
+        self.snapshot_hits = 0
+        self.warmup_s: dict[int, dict] = {}
+        self.completed: list[Request] = []
+        self.ttfr_s: float | None = None   # time to first response
+        self._born = time.perf_counter()
+        self._serve_window = 0.0
+        if self.cfg.aot_warmup:
+            self.warm()
+
+    # -- placement -----------------------------------------------------------
+
+    def _replicate(self, params):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sh = NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda p: jax.device_put(p, sh), params)
+
+    def _place(self, bucket: int, x: np.ndarray):
+        sh = self.plans[bucket].input_sharding
+        return jax.device_put(x, sh) if sh is not None else jax.numpy.asarray(x)
+
+    # -- compilation ---------------------------------------------------------
+
+    def _snapshot_key(self, bucket: int) -> str:
+        return snapshot_key(self.spec, bucket, self.cfg.mnf,
+                            self.engine_cfg, self.fire_cfg,
+                            tuple(self.mesh.axis_names),
+                            tuple(self.mesh.devices.shape))
+
+    def _compiled(self, bucket: int):
+        """The bucket's AOT executable.
+
+        Resolution order: in-memory → ``cache_dir`` executable snapshot
+        (restored without any trace/lower/compile — the restarted-replica
+        fast path) → lower+compile (counted in ``recompiles``, snapshotted
+        for the next replica)."""
+        if bucket not in self._exec:
+            plan = self.plans[bucket]
+            key = self._snapshot_key(bucket)
+            if self.cfg.cache_dir:
+                t0 = time.perf_counter()
+                restored = load_executable(self.cfg.cache_dir, key)
+                if restored is not None:
+                    self._exec[bucket] = restored
+                    self.snapshot_hits += 1
+                    self.warmup_s[bucket] = dict(
+                        load_s=round(time.perf_counter() - t0, 4))
+                    return restored
+            self.recompiles += 1
+            compiled, lower_s, compile_s = aot_compile(plan.fn,
+                                                       plan.arg_specs)
+            self._exec[bucket] = compiled
+            self.warmup_s[bucket] = dict(lower_s=round(lower_s, 4),
+                                         compile_s=round(compile_s, 4))
+            if self.cfg.cache_dir:
+                save_executable(compiled, self.cfg.cache_dir, key)
+        return self._exec[bucket]
+
+    def warm(self) -> dict:
+        """AOT-compile every bucket (startup warmup; persistent-cache hits
+        make a restarted replica's warmup a disk read).  Returns per-bucket
+        lower/compile seconds."""
+        for b in self.cfg.buckets:
+            self._compiled(b)
+        return self.warmup_s
+
+    def boundary_report(self, bucket: int | None = None) -> dict:
+        """Abstract-trace one bucket's pipeline: chained/pool/fallback
+        counts (no numeric work — ``jax.eval_shape`` under the dispatch
+        tracer).  ``fallback_decodes`` must be 0 on an eligible network."""
+        from repro.models.cnn import make_cnn_forward
+        bucket = self.cfg.buckets[0] if bucket is None else bucket
+        plan = self.plans[bucket]
+        fwd = make_cnn_forward(self.spec, mnf=self.cfg.mnf,
+                               engine_cfg=self.engine_cfg)
+        with mnf_engine.trace_dispatch() as recs:
+            jax.eval_shape(fwd, plan.arg_specs[0], plan.arg_specs[1])
+        return dict(
+            bucket=bucket,
+            chained=sum(1 for r in recs if r.get("chained")),
+            pool_events=sum(1 for r in recs if r.get("pool_events")),
+            fallback_decodes=sum(
+                1 for r in recs if r.get("fallback_decode")),
+            boundaries=plan.boundaries)
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, image) -> Request:
+        """Enqueue one request (a (H, W, C) image)."""
+        return self.batcher.submit(image, submit_time=time.perf_counter())
+
+    def run_tick(self) -> list[Request]:
+        """Drain this tick's queue through the compiled buckets.
+
+        Routing, padding, execution, unpadding; completions carry
+        per-request latency (submit → logits ready).  Returns the
+        requests completed this tick, in FIFO order.
+        """
+        t_tick0 = time.perf_counter()
+        done: list[Request] = []
+        budget = self.batcher.max_batches_per_tick
+        batches = 0
+        while budget is None or batches < budget:
+            batch = self.batcher.next_batch()
+            if batch is None:
+                break
+            bucket, reqs = batch
+            batches += 1
+            x = pad_bucket([r.image for r in reqs], bucket)
+            y = self._compiled(bucket)(self.params, self._place(bucket, x))
+            y = jax.block_until_ready(y)
+            now = time.perf_counter()
+            logits = np.asarray(y)[:len(reqs)]      # mask padded rows off
+            for i, r in enumerate(reqs):
+                r.result = logits[i]
+                r.latency_s = now - r.submit_time
+                r.completion_tick = self.batcher.tick
+            if self.ttfr_s is None:
+                self.ttfr_s = now - self._born
+            done.extend(reqs)
+        self.batcher.end_tick()
+        self._serve_window += time.perf_counter() - t_tick0
+        self.completed.extend(done)
+        return done
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        """requests/s + p50/p99 latency, overall and per bucket."""
+        lats = [r.latency_s for r in self.completed]
+        per_bucket = {}
+        for b in self.cfg.buckets:
+            bl = [r.latency_s for r in self.completed if r.bucket == b]
+            per_bucket[b] = dict(
+                requests=len(bl),
+                p50_ms=round(percentile(bl, 50) * 1e3, 3),
+                p99_ms=round(percentile(bl, 99) * 1e3, 3))
+        return dict(
+            requests=len(lats),
+            requests_s=round(len(lats) / max(self._serve_window, 1e-9), 2),
+            p50_ms=round(percentile(lats, 50) * 1e3, 3),
+            p99_ms=round(percentile(lats, 99) * 1e3, 3),
+            per_bucket=per_bucket,
+            recompiles=self.recompiles,
+            snapshot_hits=self.snapshot_hits,
+            warmup_s=self.warmup_s,
+            ttfr_s=round(self.ttfr_s, 4) if self.ttfr_s is not None
+            else None,
+            devices=len(self.mesh.devices.flat),
+            data_shards={b: p.data_shards for b, p in self.plans.items()})

@@ -35,8 +35,8 @@ def test_sharded_train_step_runs_and_matches_single_device():
         cfg = get_config('qwen2-1.5b').reduced()
         cfg = dataclasses.replace(cfg, d_ff=128, vocab_size=256, fsdp=True)
         shape = ShapeConfig('t', 32, 8, 'train')
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import checked_mesh
+        mesh = checked_mesh((2, 4), ('data', 'model'))
         plan = make_train_step(cfg, shape, mesh)
         key = jax.random.PRNGKey(0)
         with mesh:
@@ -66,8 +66,8 @@ def test_pipeline_parallel_matches_sequential():
     r = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.parallel.pipeline import pipeline_apply
-        mesh = jax.make_mesh((4,), ('pipe',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import checked_mesh
+        mesh = checked_mesh((4,), ('pipe',))
         n_stages, n_micro, mb, d = 4, 8, 2, 16
         key = jax.random.PRNGKey(0)
         ws = jax.random.normal(key, (n_stages, d, d)) * 0.3
@@ -95,8 +95,8 @@ def test_small_mesh_dryrun_all_step_kinds():
         from repro.configs import get_config
         from repro.configs.base import ShapeConfig
         from repro.launch.steps import plan_cell
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import checked_mesh
+        mesh = checked_mesh((2, 4), ('data', 'model'))
         for arch in ('qwen2-1.5b', 'deepseek-moe-16b', 'rwkv6-7b',
                      'hymba-1.5b', 'whisper-base'):
             cfg = get_config(arch).reduced()
@@ -149,8 +149,8 @@ def test_gradient_accumulation_matches_full_batch():
         cfg = get_config('qwen2-0.5b').reduced()
         cfg = dataclasses.replace(cfg, d_ff=128, vocab_size=256)
         shape = ShapeConfig('t', 32, 8, 'train')
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import checked_mesh
+        mesh = checked_mesh((2, 4), ('data', 'model'))
         opt = AdamWConfig(lr=1e-3)
         key = jax.random.PRNGKey(0)
         batch = dict(
@@ -185,8 +185,8 @@ def test_moe_ep_shard_map_matches_gspmd():
 
         cfg = get_config('deepseek-moe-16b').reduced()
         cfg = dataclasses.replace(cfg, compute_dtype='float32')
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import checked_mesh
+        mesh = checked_mesh((2, 4), ('data', 'model'))
         p, _ = moe_init(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1),
                               (4, 16, cfg.d_model), jnp.float32) * 0.3

@@ -41,11 +41,12 @@ def test_schedules():
 
 
 def test_quantized_psum_single_device():
+    from repro.launch.mesh import checked_mesh
+    from repro.parallel.sharding import shard_map_compat
     x = jnp.linspace(-1, 1, 64)
-    out = jax.shard_map(
+    out = shard_map_compat(
         lambda v: quantized_psum(v, "i"),
-        mesh=jax.make_mesh((1,), ("i",),
-                           axis_types=(jax.sharding.AxisType.Auto,)),
+        checked_mesh((1,), ("i",)),
         in_specs=jax.sharding.PartitionSpec(),
         out_specs=jax.sharding.PartitionSpec())(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-2)
@@ -53,8 +54,9 @@ def test_quantized_psum_single_device():
 
 def test_event_psum_error_feedback():
     """Fired + residual always reconstructs the running gradient sum."""
-    mesh = jax.make_mesh((1,), ("i",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import checked_mesh
+    from repro.parallel.sharding import shard_map_compat
+    mesh = checked_mesh((1,), ("i",))
     P = jax.sharding.PartitionSpec
     residual = jnp.zeros(32)
     total_sent = jnp.zeros(32)
@@ -62,9 +64,9 @@ def test_event_psum_error_feedback():
     rng = np.random.default_rng(0)
     for step in range(6):
         g = jnp.asarray(rng.normal(size=32).astype(np.float32))
-        fired, residual = jax.shard_map(
+        fired, residual = shard_map_compat(
             lambda gv, rv: event_psum(gv, rv, "i", k_frac=0.25),
-            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))(g, residual)
+            mesh, in_specs=(P(), P()), out_specs=(P(), P()))(g, residual)
         total_sent = total_sent + fired
         total_true = total_true + g
         np.testing.assert_allclose(np.asarray(total_sent + residual),

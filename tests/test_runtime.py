@@ -59,8 +59,8 @@ def test_choose_mesh_shape():
 
 
 def test_reshard_tree_single_device():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import checked_mesh
+    mesh = checked_mesh((1, 1), ("data", "model"))
     tree = {"w": jnp.ones((4, 8))}
     specs = {"w": ("embed", "ff")}
     out = reshard_tree(tree, specs, mesh)

@@ -1,15 +1,15 @@
 """Logical-axis resolver: priority, divisibility, reuse (no multi-device)."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import logical_to_pspec, make_rules
+from repro.parallel.sharding import (abstract_mesh_compat, logical_to_pspec,
+                                     make_rules)
 
 
 @pytest.fixture(scope="module")
 def mesh16():
     # abstract mesh: shape arithmetic only, no devices needed
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh_compat((16, 16), ("data", "model"))
 
 
 def test_divisibility_drops_heads(mesh16):
@@ -52,7 +52,7 @@ def test_fsdp_rule(mesh16):
 
 
 def test_batch_over_pod_and_data():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = abstract_mesh_compat((2, 16, 16), ("pod", "data", "model"))
     rules = make_rules(mesh)
     ps = logical_to_pspec(("batch", None), (256, 4096), mesh, rules)
     assert ps == P(("pod", "data"))
@@ -62,7 +62,7 @@ def test_batch_over_pod_and_data():
 
 
 def test_overrides():
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh_compat((16, 16), ("data", "model"))
     rules = make_rules(mesh, overrides={"ff": None})
     ps = logical_to_pspec(("embed", "ff"), (1024, 4096), mesh, rules)
     assert ps == P()
