@@ -25,12 +25,18 @@ event-native max-pool (segment max over stream events, one launch) against
 the dense pool + re-encode round-trip.  ``--serve`` benchmarks the bucketed
 AOT-warmed serving replica (``repro.serving``): requests/s and p50/p99 per
 batch bucket, cold vs persistent-cache-warmed compile, and replica
-time-to-first-response.  All write/merge BENCH_engine.json.
+time-to-first-response.  ``--sweep`` runs the occupancy sweep 0→1 over
+conv/pool/linear boundaries: every route timed per point (``crossover``
+entries — the calibrated table ``route="adaptive"`` dispatch consults,
+DESIGN.md §11) and the adaptive router re-timed end-to-end against the
+best static route (``adaptive`` entries).  All write/merge
+BENCH_engine.json.
 ``--smoke`` runs a fast subset of everything (CI anti-rot) — including a
 downsampling mini-net whose stride-2 layer must ride the fused strip
 path — and **fails** if an eligible strip layer (either stride) or pool
 boundary falls back to a decode (fallback_decode) — the silent-degrade
-bug class.
+bug class — or if any adaptive routing decision contradicts the
+committed crossover table beyond the hysteresis band (``route_gate``).
 """
 from __future__ import annotations
 
@@ -642,6 +648,433 @@ def serve_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=3):
     return entries
 
 
+def _adaptive_case(mk: dict, stream, *, op: str, reps=3):
+    """One adaptive-vs-static contest on a shared input stream.
+
+    ``mk`` maps route names (one of them "adaptive") to un-jitted
+    single-arg callables differing only in their EngineConfig.route.
+    Returns (paired_best_us, route, exec_identical):
+
+      * paired_best_us — interleaved-minimum wall time per contender;
+      * route — the route the adaptive dispatch actually took (traced
+        records, no numeric work);
+      * exec_identical — whether the adaptive jaxpr is *textually
+        identical* to the chosen static route's jaxpr.  Routing is
+        trace-time static, so this is normally True — and it proves the
+        adaptive pick costs exactly what that static route costs,
+        immunizing the gate against the CPU harness's wall-clock noise
+        (identical executables re-timed here spread up to ~35%).
+    """
+    with engine.trace_dispatch() as recs:
+        jax.eval_shape(mk["adaptive"], stream)
+    routes = [r["route"] for r in recs if r.get("op") == op]
+    route = routes[-1] if routes else None
+    exec_identical = bool(
+        route in mk and str(jax.make_jaxpr(mk["adaptive"])(stream))
+        == str(jax.make_jaxpr(mk[route])(stream)))
+    fns = {name: jax.jit(f) for name, f in mk.items()}
+    best = _interleaved_best(
+        {name: (lambda fn=fn: fn(stream)) for name, fn in fns.items()},
+        reps=reps)
+    return best, route, exec_identical
+
+
+def _interleaved_best(fns: dict, reps=3) -> dict:
+    """Per-key minimum over interleaved timing rounds.
+
+    Ratios between the keys are what matters (adaptive vs each static
+    route): interleaving means a scheduler transient hits every
+    contender equally instead of whichever ran back-to-back (the
+    ``cnn_chain_rows`` technique)."""
+    for fn in fns.values():
+        jax.block_until_ready(fn())            # compile outside timing
+    best = {k: float("inf") for k in fns}
+    for _ in range(max(reps, 3)):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[k] = min(best[k], (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def _sweep_input(rng, shape, sparsity, blk=8):
+    """Non-negative activations with *block-structured* sparsity.
+
+    The engine's occupancy is block-granular (live fraction of the
+    row-group × K-block event grid), so elementwise masking saturates it —
+    one live element keeps the whole block live.  Masking whole
+    (8-row-strip × 8-channel-block) tiles makes stream occupancy track
+    ``1 - sparsity`` with exact endpoints: sparsity 0.0 → occupancy 1.0,
+    sparsity 1.0 → zero events."""
+    x = np.abs(rng.normal(size=shape)).astype(np.float32) + 1e-3
+    if sparsity >= 1.0:
+        return jnp.zeros(shape, jnp.float32)
+    if len(shape) == 4:
+        b, h, w0, c = shape
+        mask = rng.random((b, h, max(w0 // blk, 1),
+                           max(c // blk, 1))) > sparsity
+        mask = np.repeat(np.repeat(mask, blk, axis=2), blk, axis=3)
+        mask = mask[:, :, :w0, :c]
+    else:
+        m, kd = shape
+        mask = rng.random((max(m // blk, 1), max(kd // 32, 1))) > sparsity
+        mask = np.repeat(np.repeat(mask, blk, axis=0), 32, axis=1)
+        mask = mask[:m, :kd]
+    return jnp.asarray(x * mask)
+
+
+def sweep_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=5):
+    """Occupancy sweep 0 → 1 (exact endpoints) over conv / pool / linear
+    boundaries: every route timed at matched shapes per sweep point.
+
+    Two entry kinds come out of one pass:
+
+      * ``crossover`` — per (boundary, backend, shape_class, occupancy)
+        the measured per-route microseconds.  These seed the calibrated
+        :class:`repro.costmodel.crossover.CrossoverTable` that adaptive
+        routing consults — the sweep is the calibration run.
+      * ``adaptive`` — the ``route="adaptive"`` dispatch re-timed
+        end-to-end at each point with the just-measured table installed.
+        Routing is trace-time static, so the adaptive executable *is* the
+        chosen route's executable; ``overhead_vs_best`` states how far the
+        router's pick sits from the best static route at that point
+        (≤ 1.05 is the acceptance bar), and ``vs_static_event`` shows the
+        win over always-event at the losing shapes (1×1/stride-2 conv,
+        full-occupancy pallas linear).
+
+    The pool rows additionally record the *raw* window-major kernel
+    against the dense ``reduce_window`` (no re-encode on either side,
+    capacity clamped to the probe's live-block maximum — lossless): the
+    window-major grid (8/parts step reduction) + capacity clamp is the
+    rework that wins on raw steady-state time at high sparsity.
+
+    Raises if any adaptive pick is slower than the best static route by
+    more than ROUTE_HYSTERESIS — an unambiguously wrong decision, not
+    timing noise.
+    """
+    from repro.costmodel import crossover as xover
+    from repro.kernels.event_pool.ops import pool_window_plan
+
+    rng = np.random.default_rng(0)
+    sparsities = (0.0, 0.5, 1.0) if smoke \
+        else (0.0, 0.25, 0.5, 0.75, 0.9, 0.95, 1.0)
+    entries: list[dict] = []
+    adaptive_cases: list[dict] = []
+
+    # -- conv boundaries: strip vs pixel vs dense ---------------------------
+    # (B, H, W, CI, CO, k, padding, stride); the second row is the measured
+    # losing shape (1×1/stride-2 — taps touch 1/4 of the map, event
+    # overhead can't amortize) the adaptive router must route dense.
+    conv_shapes = [(2, 16, 16, 8, 16, 3, 1, 1)]
+    if not smoke:
+        conv_shapes.append((1, 9, 16, 8, 8, 1, 0, 2))
+    for (b, h, w0, ci, co, k, p, st) in conv_shapes:
+        wgt = jnp.asarray(rng.normal(size=(k, k, ci, co)).astype(np.float32))
+        cfg = engine.EngineConfig(backend="block", blk_m=1, blk_k=8,
+                                  blk_n=8)
+        strip_ok = engine.strip_eligible(w0, k, st, p, co=co)
+        for sp in sparsities:
+            # Every route is timed through the engine on a twin-kept
+            # stream of the granularity that can ride it (same as the
+            # adaptive dispatch will see): the boundary's currency is an
+            # EventStream, and dense-by-choice reads the kept twin — the
+            # crossover table must price exactly that.
+            x = _sweep_input(rng, (b, h, w0, ci), sp)
+            pixel = engine.fire_conv(x, cfg, blk_m=1, keep_dense=True)
+            occ = float(pixel.occupancy())
+            strip = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W,
+                                     keep_dense=True) if strip_ok else None
+            # Interleaved-minimum timing across the routes of one sweep
+            # point: the table's anchors are *ratios* between these keys,
+            # so a scheduler transient must hit every route equally — a
+            # sequential outlier on one route would mis-teach the table
+            # (and the adaptive pass would expose it as a wrong pick).
+            fns = {}
+            for route, stream_r in ([("strip", strip)] if strip_ok else []) \
+                    + [("pixel", pixel),
+                       ("dense", strip if strip_ok else pixel)]:
+                rcfg = cfg.replace(route=route)
+                fn = jax.jit(lambda s, rc=rcfg: engine.conv2d(
+                    s, wgt, cfg=rc, stride=st, padding=p))
+                fns[route] = (lambda f=fn, s=stream_r: f(s))
+            us = _interleaved_best(fns, reps=reps)
+            entries.append(dict(
+                kind="crossover", boundary="conv", backend="block",
+                shape_class=f"k{k}s{st}", b=b, h=h, w=w0, ci=ci, co=co,
+                k=k, padding=p, stride=st, sparsity=sp,
+                occupancy=round(occ, 4),
+                us={r: round(v, 1) for r, v in us.items()}))
+
+            def run_conv(occ=occ, cfg=cfg, wgt=wgt, st=st, p=p,
+                         strip_ok=strip_ok, strip=strip, pixel=pixel):
+                acfg = cfg.replace(route="adaptive", occupancy_hint=occ)
+                s = strip if strip_ok else pixel
+                cfgs = {"adaptive": acfg}
+                for r in (("strip", "dense") if strip_ok
+                          else ("pixel", "dense")):
+                    cfgs[r] = cfg.replace(route=r)
+                mk = {name: (lambda ss, rc=rc: engine.conv2d(
+                    ss, wgt, cfg=rc, stride=st, padding=p))
+                    for name, rc in cfgs.items()}
+                return _adaptive_case(mk, s, op="conv2d", reps=reps)
+            adaptive_cases.append(dict(
+                boundary="conv", backend="block", shape_class=f"k{k}s{st}",
+                sparsity=sp, occupancy=occ, us=us, run=run_conv,
+                achievable=(("strip", "dense") if strip_ok
+                            else ("pixel", "dense"))))
+
+    # -- pool boundaries: window vs pixel vs dense-by-choice ----------------
+    # (B, H, W, C, k, stride); the wide-channel row is the raw-time contest:
+    # reduce_window reads k²·C floats per output pixel while the
+    # capacity-clamped window grid touches only live blocks.
+    pool_shapes = [(2, 16, 16, 128, 2, 2)]
+    if not smoke:
+        pool_shapes.append((2, 16, 16, 16, 2, 2))
+    for (b, h, w0, c, k, st) in pool_shapes:
+        cfg = engine.EngineConfig(backend="block", blk_m=engine.STRIP_W,
+                                  blk_k=8)
+        for sp in sparsities:
+            x = _sweep_input(rng, (b, h, w0, c), sp)
+            probe = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W,
+                                     keep_dense=False)
+            cap = max(int(jnp.max(probe.events.counts)), 1)
+            ccfg = cfg.replace(capacity=cap)
+            stream = engine.fire_conv(x, ccfg, blk_m=engine.STRIP_W,
+                                      keep_dense=True)
+            occ = float(stream.occupancy())
+            fns = {}
+            for route in ("window", "pixel", "dense"):
+                rcfg = ccfg.replace(route=route)
+                fn = jax.jit(lambda s, rcfg=rcfg: engine.maxpool2d(
+                    s, k, st, cfg=rcfg))
+                fns[route] = (lambda f=fn: f(stream))
+            us = _interleaved_best(fns, reps=reps)
+            # Raw kernel vs raw reduce_window: no re-emission on either
+            # side — the kernel-rework claim, separated from boundary cost.
+            raw_w = jax.jit(lambda s: engine.get_backend(
+                "maxpool2d_events_window", "block")(s, k, st, ccfg))
+            raw_d = jax.jit(lambda xx: engine.maxpool2d(xx, k, st, cfg=ccfg))
+            no_twin = stream.without_dense()
+            raw_us = _interleaved_best(
+                dict(window=lambda: raw_w(no_twin), dense=lambda: raw_d(x)),
+                reps=reps)
+            us_rw, us_rd = raw_us["window"], raw_us["dense"]
+            yw, yd = raw_w(no_twin), raw_d(x)
+            plan = pool_window_plan((b, h, w0, c), k, st,
+                                    nkb=stream.events.num_k_blocks,
+                                    capacity=cap)
+            entries.append(dict(
+                kind="crossover", boundary="pool", backend="block",
+                shape_class=f"k{k}s{st}c{c}", b=b, h=h, w=w0, c=c, k=k,
+                stride=st, sparsity=sp, occupancy=round(occ, 4),
+                capacity=cap,
+                us={r: round(v, 1) for r, v in us.items()},
+                raw_window_us=round(us_rw, 1), raw_dense_us=round(us_rd, 1),
+                raw_speedup=round(us_rd / max(us_rw, 1e-9), 3),
+                raw_bit_exact=bool(jnp.all(
+                    yw.reshape(yd.shape) == yd)),
+                grid_reduction=round(plan["grid_reduction"], 2),
+                parts=plan["parts"]))
+
+            def run_pool(occ=occ, ccfg=ccfg, stream=stream, k=k, st=st):
+                acfg = ccfg.replace(route="adaptive", occupancy_hint=occ)
+                mk = {name: (lambda s, rc=rc: engine.maxpool2d(
+                    s, k, st, cfg=rc))
+                    for name, rc in (("adaptive", acfg),
+                                     ("window", ccfg.replace(
+                                         route="window")),
+                                     ("dense", ccfg.replace(
+                                         route="dense")))}
+                return _adaptive_case(mk, stream, op="maxpool2d", reps=reps)
+            adaptive_cases.append(dict(
+                boundary="pool", backend="block",
+                shape_class=f"k{k}s{st}c{c}",
+                sparsity=sp, occupancy=occ, us=us, run=run_pool,
+                achievable=("window", "dense")))
+
+    # -- linear boundaries: event vs dense ----------------------------------
+    # The pallas chained linear is the other measured losing case (0.87x at
+    # full occupancy) the adaptive router must route dense.
+    m, kd, n = 32, 256, 128
+    wl = jnp.asarray(rng.normal(size=(kd, n)).astype(np.float32))
+    for backend in (("block",) if smoke else ("block", "pallas")):
+        cfg = engine.EngineConfig(backend=backend, blk_m=8, blk_k=32,
+                                  blk_n=32)
+        for sp in sparsities:
+            a = _sweep_input(rng, (m, kd), sp)
+            stream = engine.fire(a, cfg)       # twin kept, like dispatch
+            occ = float(stream.occupancy())
+            ecfg2 = cfg.replace(route="event")
+            fn_e = jax.jit(lambda s: engine.linear(s, wl, cfg=ecfg2))
+            dcfg2 = cfg.replace(route="dense")
+            fn_d = jax.jit(lambda s: engine.linear(s, wl, cfg=dcfg2))
+            us = _interleaved_best(
+                dict(event=lambda: fn_e(stream),
+                     dense=lambda: fn_d(stream)), reps=reps)
+            entries.append(dict(
+                kind="crossover", boundary="linear", backend=backend,
+                shape_class=f"n{n}", m=m, k=kd, n=n, sparsity=sp,
+                occupancy=round(occ, 4),
+                us={r: round(v, 1) for r, v in us.items()}))
+
+            def run_linear(occ=occ, cfg=cfg, stream=stream, wl=wl):
+                acfg = cfg.replace(route="adaptive", occupancy_hint=occ)
+                mk = {name: (lambda s, rc=rc: engine.linear(s, wl, cfg=rc))
+                      for name, rc in (("adaptive", acfg),
+                                       ("event", cfg.replace(
+                                           route="event")),
+                                       ("dense", cfg.replace(
+                                           route="dense")))}
+                return _adaptive_case(mk, stream, op="linear", reps=reps)
+            adaptive_cases.append(dict(
+                boundary="linear", backend=backend, shape_class=f"n{n}",
+                sparsity=sp, occupancy=occ, us=us, run=run_linear,
+                achievable=("event", "dense")))
+
+    # -- adaptive pass: route with the just-measured table installed --------
+    table = xover.CrossoverTable(entries)
+    prev = xover.set_active_table(table)
+    try:
+        for case in adaptive_cases:
+            # Paired interleaved timings of the adaptive dispatch and the
+            # routes *achievable from this stream's granularity* — the
+            # flavor is producer-bound (a strip stream cannot
+            # retroactively ride the per-tap path), so those are the
+            # static choices the router actually arbitrates.
+            paired, route, exec_identical = case["run"]()
+            adaptive_us = paired.pop("adaptive")
+            # The calibration pass timed these exact executables on these
+            # exact streams (same cfg, same input — same jit graph): its
+            # minima are more samples of the same program, so pool them.
+            # This keeps the published table and the adaptive judgment one
+            # consistent measurement set — two phases disagreeing inside
+            # the noise floor about a near-crossover point must not read
+            # as a routing error.
+            for r, v in case["us"].items():
+                if r in paired:
+                    paired[r] = min(paired[r], v)
+            best_route = min(paired, key=paired.get)
+            best_us = paired[best_route]
+            ev_us = [v for r, v in paired.items()
+                     if r in xover.EVENT_ROUTES]
+            static_event_us = min(ev_us) if ev_us else None
+            # When the router picked the paired-best route, the adaptive
+            # executable IS that route's executable (jaxpr-identical) —
+            # overhead 1.0 by construction, not by a second noisy
+            # measurement.  Only a divergent pick is judged on wall time.
+            # Judging a divergent pick: the adaptive executable is jaxpr-
+            # identical to its chosen static route's, so their timings
+            # sample the *same program* — pool the minima.  A pick still
+            # over the acceptance bar after pooling gets bounded
+            # confirmation rounds (all-route re-timings, minima pooled):
+            # near-crossover boundaries sit inside the harness noise floor
+            # and a single calibration-vs-judgment disagreement there is
+            # not a routing error.  The hysteresis raise below still
+            # catches unambiguous misses — pooling sharpens both sides.
+            rounds = 0
+            while True:
+                if exec_identical and route in paired:
+                    pooled = min(adaptive_us, paired[route])
+                    adaptive_us = paired[route] = pooled
+                best_route = min(paired, key=paired.get)
+                best_us = paired[best_route]
+                if route == best_route and exec_identical:
+                    overhead = 1.0
+                    break
+                overhead = adaptive_us / max(best_us, 1e-9)
+                if overhead <= 1.05 or rounds >= 3:
+                    break
+                rounds += 1
+                paired2, _, exec2 = case["run"]()
+                adaptive_us = min(adaptive_us, paired2.pop("adaptive"))
+                for r, v in paired2.items():
+                    paired[r] = min(paired[r], v)
+                exec_identical = exec_identical or exec2
+            entries.append(dict(
+                kind="adaptive", boundary=case["boundary"],
+                backend=case["backend"], shape_class=case["shape_class"],
+                sparsity=case["sparsity"],
+                occupancy=round(case["occupancy"], 4), route=route,
+                exec_identical=exec_identical,
+                adaptive_us=round(adaptive_us, 1),
+                achievable=list(case["achievable"]),
+                best_route=best_route, best_us=round(best_us, 1),
+                static_event_us=(round(static_event_us, 1)
+                                 if static_event_us is not None else None),
+                vs_static_event=(round(static_event_us
+                                       / max(adaptive_us, 1e-9), 3)
+                                 if static_event_us is not None else None),
+                overhead_vs_best=round(overhead, 3)))
+            if overhead > 1.0 + xover.ROUTE_HYSTERESIS:
+                raise RuntimeError(
+                    f"sweep[{case['boundary']}/{case['shape_class']}@occ="
+                    f"{case['occupancy']:.2f}]: adaptive picked {route} at "
+                    f"{adaptive_us:.1f}us, {overhead:.2f}x the best static "
+                    f"route {best_route} ({best_us:.1f}us) — beyond the "
+                    f"hysteresis band, an unambiguously wrong decision")
+    finally:
+        xover.set_active_table(prev)
+    _merge_bench(out_path, entries, {"crossover", "adaptive"})
+    return entries
+
+
+def route_gate(out_path: str = "BENCH_engine.json"):
+    """CI smoke gate (DESIGN.md §11): re-derive every routing decision of
+    the smoke nets in adaptive mode across occupancy hints and **fail** if
+    any decision contradicts the committed crossover table by more than
+    ROUTE_HYSTERESIS (``route_conflicts``), or if adaptive mode ever
+    yields a fallback_decode on an eligible net — dense by *choice* is
+    ``routed_dense``, never a fallback.  No numeric work: decisions are
+    trace-time static, so ``jax.eval_shape`` under the dispatch tracer
+    sees exactly what a compiled graph would do."""
+    from repro.costmodel import crossover as xover
+    from repro.models.cnn import init_cnn_params, make_cnn_forward
+
+    table = xover.load_crossover_table(out_path)
+    if not len(table):
+        print(json.dumps(dict(kind="route_gate",
+                              skipped=f"no crossover entries in "
+                                      f"{out_path} — run --sweep first")))
+        return
+    prev = xover.set_active_table(table)
+    try:
+        records = []
+        for spec, size in ((_smoke_spec(), 8), (_smoke_ds_spec(), 16)):
+            spec = spec.scaled(size)
+            params = init_cnn_params(jax.random.PRNGKey(0), spec,
+                                     weight_sparsity=0.5)
+            x = jax.ShapeDtypeStruct(
+                (2, spec.input_size, spec.input_size, spec.in_ch),
+                jnp.float32)
+            for occ in (0.05, 0.5, 1.0):
+                cfg = engine.EngineConfig(backend="auto", route="adaptive",
+                                          occupancy_hint=occ)
+                fwd = make_cnn_forward(spec, mnf=True, engine_cfg=cfg)
+                with engine.trace_dispatch() as recs:
+                    jax.eval_shape(fwd, params, x)
+                records.extend(recs)
+        conflicts = xover.route_conflicts(records, table)
+        if conflicts:
+            raise RuntimeError(
+                f"route gate: {len(conflicts)} decision(s) contradict the "
+                f"crossover table beyond the {xover.ROUTE_HYSTERESIS:.0%} "
+                f"hysteresis band: {conflicts}")
+        fallbacks = [r for r in records if r.get("fallback_decode")]
+        if fallbacks:
+            raise RuntimeError(
+                f"route gate: adaptive mode produced fallback_decode on an "
+                f"eligible net (dense-by-choice must be routed_dense): "
+                f"{fallbacks}")
+        decided = [r for r in records if r.get("route") is not None]
+        print(json.dumps(dict(
+            kind="route_gate", decisions=len(decided), conflicts=0,
+            fallback_decodes=0,
+            routes={r: sum(1 for d in decided if d["route"] == r)
+                    for r in sorted({d["route"] for d in decided})})))
+    finally:
+        xover.set_active_table(prev)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", action="store_true",
@@ -663,6 +1096,14 @@ def main():
                          "replica: requests/s + p50/p99 per bucket, cold "
                          "vs persistent-cache-warmed compile and replica "
                          "TTFR (serve_bench entries)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="occupancy sweep 0-1 over conv/pool/linear "
+                         "boundaries: per-route microseconds at each point "
+                         "(crossover entries — the adaptive routing "
+                         "table) plus the adaptive router re-timed "
+                         "end-to-end against the best static route "
+                         "(adaptive entries); combine with --smoke for "
+                         "the fast CI subset")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: 1-rep kernel microbench + engine "
                          "sweep + mini-net cnn chain + one conv_fused and "
@@ -673,6 +1114,13 @@ def main():
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args()
     if args.smoke:
+        if args.sweep:
+            # Slow-lane CI subset: 3 sparsity points, one shape per
+            # boundary kind, block backend — exercises the whole sweep +
+            # adaptive machinery without the full calibration cost.
+            for e in sweep_rows(args.out, smoke=True, reps=2):
+                print(json.dumps(e))
+            return
         for name, us, compile_us, derived in rows(reps=1):
             print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")
         for e in engine_rows(args.out, reps=1):
@@ -685,6 +1133,7 @@ def main():
             print(json.dumps(e))
         for e in serve_rows(args.out, smoke=True, reps=1):
             print(json.dumps(e))
+        route_gate(args.out)
         return
     if args.engine:
         for e in engine_rows(args.out):
@@ -701,8 +1150,11 @@ def main():
     if args.serve:
         for e in serve_rows(args.out):
             print(json.dumps(e))
+    if args.sweep:
+        for e in sweep_rows(args.out):
+            print(json.dumps(e))
     if (args.engine or args.cnn_chain or args.conv_fused or args.pool
-            or args.serve):
+            or args.serve or args.sweep):
         return
     for name, us, compile_us, derived in rows():
         print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")

@@ -463,6 +463,95 @@ def pool_window_map(logical_shape: tuple, k: int, stride: int, blk_m: int):
     return src, row, live
 
 
+def pool_window_ineligible_reason(logical_shape: tuple, k: int, stride: int,
+                                  blk_m: int) -> str | None:
+    """Why the *window-major* strip pool cannot consume this stream
+    (None = it can; the per-event segment max remains the general path).
+
+    The window-major grid walks output strips — 8 consecutive pooled pixels
+    of one output row — so it needs a strip-aligned input stream
+    (blk_m == STRIP_W, W % 8 == 0) and a pooled width that tiles into whole
+    strips (OW % 8 == 0: every grid step's 8 output pixels are real).
+    """
+    if blk_m != STRIP_W:
+        return f"stream not strip-aligned (blk_m={blk_m} != STRIP_W)"
+    b, h, w, _ = logical_shape
+    if w <= 0 or w % STRIP_W:
+        return f"input width {w} not a multiple of STRIP_W={STRIP_W}"
+    if h < k or w < k:
+        return f"VALID {k}x{k} window exceeds the {h}x{w} map"
+    ow = (w - k) // stride + 1
+    if ow <= 0 or ow % STRIP_W:
+        return (f"pooled width {ow} ((W - k)//stride + 1) not a multiple "
+                f"of STRIP_W={STRIP_W}")
+    return None
+
+
+def pool_strip_map(logical_shape: tuple, k: int, stride: int):
+    """Window-major gather plan for the strip event pool (DESIGN.md §7).
+
+    Where :func:`pool_window_map` walks output *pixels* (grid P_out · k²·E),
+    this plan walks output *strips* — 8 consecutive pooled pixels of one
+    output row — so the consumer's grid shrinks 8-fold to
+    (B·OH·(OW/8), T, E).  Output row i of strip (b, oy, sx) pools input
+    pixel ix = 8·stride·sx + stride·i + dx at window tap (dy, dx); the 8
+    strided sources span up to ``parts = (7·stride + k - 1)//8 + 1`` input
+    strips, each contributing an interleaved part realized by the same
+    affine row remap as the fused conv plan (out row i <- src row
+    stride·i + d; rows outside [0, 8) are exact zeros — the max identity):
+
+      src   (G_out, T) int32  source input strip group (clamped when dead)
+      live  (G_out, T) bool   False = part sources no row (masked to 0)
+      shift (T,)       int32  signed row offset d = dx - 8·j of part j
+      tap   (T,)       int32  flat window index dy·k + dx of the subtap
+
+    T = k·k·parts subtaps, tap-major then parts left-to-right — the same
+    ordering discipline as ``strip_tap_map`` (max needs no order contract;
+    determinism keeps plans comparable).  Requires a strip-eligible
+    geometry (:func:`pool_window_ineligible_reason`); everything here is
+    shape-derived — plain numpy, evaluated at trace time.
+    """
+    import numpy as np
+
+    b, h, w, _ = logical_shape
+    reason = pool_window_ineligible_reason(logical_shape, k, stride, STRIP_W)
+    assert reason is None, (logical_shape, k, stride, reason)
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    nsx_in = w // STRIP_W
+    nsx_out = ow // STRIP_W
+    g_out = b * oh * nsx_out
+    parts = ((STRIP_W - 1) * stride + k - 1) // STRIP_W + 1
+    t_n = k * k * parts
+    gidx = np.arange(g_out, dtype=np.int64)
+    sx = gidx % nsx_out
+    oy = (gidx // nsx_out) % oh
+    bb = gidx // (nsx_out * oh)
+    src = np.zeros((g_out, t_n), np.int32)
+    live = np.zeros((g_out, t_n), bool)
+    shift = np.zeros((t_n,), np.int32)
+    tap = np.zeros((t_n,), np.int32)
+    t = 0
+    for dy in range(k):
+        for dx in range(k):
+            iy = oy * stride + dy              # always in-map (VALID)
+            for j in range(parts):
+                tx = stride * sx + dx // STRIP_W + j
+                d = dx % STRIP_W - j * STRIP_W
+                # Part j is live iff its affine map sources at least one of
+                # the strip's 8 rows; a live row's input pixel is a real
+                # VALID window read, so tx is automatically in-map.
+                ok = any(0 <= stride * i + d < STRIP_W
+                         for i in range(STRIP_W))
+                src[:, t] = ((bb * h + iy) * nsx_in
+                             + np.clip(tx, 0, nsx_in - 1)).astype(np.int32)
+                live[:, t] = ok & (tx >= 0) & (tx < nsx_in)
+                shift[t] = d
+                tap[t] = dy * k + dx
+                t += 1
+    return src, live, shift, tap
+
+
 def decode_block_events(ev: BlockEvents, *, blk_m: int, blk_k: int,
                         m: int, k: int) -> jax.Array:
     """Inverse of :func:`encode_block_events` (up to thresholded-away values).

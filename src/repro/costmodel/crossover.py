@@ -1,0 +1,312 @@
+"""Occupancy-adaptive routing: the event-vs-dense crossover model
+(DESIGN.md §11).
+
+The MNF paper's utilization argument cuts both ways: event-driven compute
+wins only while activation sparsity is high enough that the skipped work
+outweighs per-event overhead.  Our bench confirms the event path is not a
+universal win on this harness (conv_fused 0.52x at 1x1/stride-2, pallas
+chained linear 0.87x at full occupancy).  This module decides, **per layer
+boundary and at trace time**, whether the engine should consume the
+incoming ``EventStream`` on its event path or densify and run the dense
+dispatch — plus the cost estimates every decision records.
+
+Two cost sources, in authority order:
+
+  * **Measured crossover table** — ``kind == "crossover"`` entries in
+    BENCH_engine.json (written by ``kernel_bench.py --sweep``): per
+    (boundary kind, backend, shape class) the measured per-route
+    microseconds over an occupancy sweep.  Lookups interpolate
+    piecewise-linearly between occupancy anchors (the idiom of
+    ``accelerators.UTIL_CURVES``) and fall back from the exact shape class
+    to the (boundary, backend) aggregate to the boundary aggregate.
+  * **Analytic seed** — the paper-calibrated cycle models
+    (``mnf_layer_cycles`` / ``dense_layer_cycles``): used when no table
+    covers the boundary, and always used to fill the ``est_event_cost`` /
+    ``est_dense_cost`` trace fields so decisions stay explainable even
+    when the table drove them.
+
+Decisions are **compile-time static**: every input (occupancy hint,
+geometry, table) is a trace-time Python value — ``EventStream.occupancy()``
+is a traced array and is deliberately *not* consulted, so one compiled
+boundary has exactly one route and jit caching cannot flip it
+(DESIGN.md §11).
+
+``ROUTE_HYSTERESIS`` is the stated tolerance band of the CI smoke gate: a
+route is "against the table" only when the measured event/dense ratio at
+its occupancy leaves the [1/(1+h), 1+h] band *and* the chosen route sits on
+the losing side.  Decisions themselves take the argmin — the band only
+keeps near-crossover boundaries from flapping CI on timing noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.costmodel.accelerators import (PAPER_HW, dense_layer_cycles,
+                                          mnf_layer_cycles)
+
+__all__ = ["ROUTE_HYSTERESIS", "EVENT_ROUTES", "RouteDecision",
+           "boundary_costs", "CrossoverTable", "load_crossover_table",
+           "set_active_table", "active_table", "decide_route",
+           "route_conflicts"]
+
+#: Stated hysteresis margin of the route-vs-table CI gate (fractional band
+#: around ratio 1.0).  25% absorbs harness timing noise near the crossover
+#: while still catching a route that is wrong by more than it could ever
+#: recover.
+ROUTE_HYSTERESIS = 0.25
+
+#: Route labels the engine can record.  "strip"/"pixel"/"window"/"event"
+#: are event-path flavors (the stream is consumed); "dense" consumes the
+#: dense twin (or decodes, visibly) and runs the dense dispatch.
+EVENT_ROUTES = ("strip", "pixel", "window", "event")
+
+#: Per-launch overhead of the event path, in model cycles: dispatch /
+#: gather bookkeeping a dense dispatch does not pay.  Calibrated to the CPU
+#:  harness order of magnitude (one launch ~ one small dense tap); only the
+#: *seed* model uses it — measured tables carry real overheads implicitly.
+LAUNCH_OVERHEAD_CYCLES = 64.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """One boundary's routing decision plus the estimates that explain it.
+
+    route:          chosen route label ("dense" or an event flavor).
+    est_event_cost: estimated event-path cost (model cycles — the analytic
+                    seed, always filled, even when the table decided).
+    est_dense_cost: estimated dense-path cost (model cycles).
+    occupancy:      the static occupancy the decision was made at.
+    ratio:          event/dense cost ratio that drove the decision (table
+                    ratio when available, else est_event/est_dense).
+    source:         "forced" | "geometry" | "table" | "model".
+    """
+
+    route: str
+    est_event_cost: float
+    est_dense_cost: float
+    occupancy: float
+    ratio: float
+    source: str
+
+    @property
+    def is_event(self) -> bool:
+        return self.route in EVENT_ROUTES
+
+
+def boundary_costs(kind: str, occupancy: float, *, dense_macs: float,
+                   avg_touched: float, c_out: int,
+                   hw=PAPER_HW) -> tuple[float, float]:
+    """Analytic (event_cycles, dense_cycles) seed for one boundary.
+
+    ``dense_macs`` is the dense dispatch's work (window reads for a pool);
+    the event side scales it by occupancy through the paper's cycle model:
+    at occupancy 1 the event path does the dense work *divided by its
+    channel-remainder utilization* — slightly worse than dense, which is
+    exactly the measured full-density behaviour the sweep confirms.
+    """
+    occ = min(max(float(occupancy), 0.0), 1.0)
+    in_elems = dense_macs / max(avg_touched * c_out, 1e-9)
+    ev = mnf_layer_cycles(occ * in_elems, avg_touched, c_out, hw)
+    return ev + LAUNCH_OVERHEAD_CYCLES, dense_layer_cycles(dense_macs, hw)
+
+
+class CrossoverTable:
+    """Measured event-vs-dense ratios, occupancy-interpolated.
+
+    Built from ``kind == "crossover"`` BENCH entries, each::
+
+        {"kind": "crossover", "boundary": "conv"|"pool"|"linear",
+         "backend": "block", "shape_class": "k3s1", "occupancy": 0.43,
+         "sparsity": 0.5, "us": {"strip": 12.3, "pixel": 30.1, "dense": 9.8}}
+
+    ``ratio()`` returns (event route us) / (dense us) at the queried
+    occupancy, interpolating between the two nearest measured anchors and
+    clamping outside the measured range.  Curves are kept per event
+    *flavor* (strip/pixel/window/event) plus a flavor-blind best-event
+    aggregate; a lookup with ``flavor=`` prefers its flavor's curve —
+    the achievable flavor is granularity-bound, so a strip-granular
+    boundary must be judged on strip time even when the pixel path is
+    faster.  Keys fall back most-specific first: (boundary, backend,
+    shape_class) -> (boundary, backend) -> (boundary,); aggregates
+    average the ratios of their member entries at each anchor.
+    """
+
+    def __init__(self, entries: list[dict]):
+        self._curves: dict[tuple, list[tuple[float, float]]] = {}
+        buckets: dict[tuple, dict[float, list[float]]] = {}
+        for e in entries:
+            if e.get("kind") != "crossover":
+                continue
+            us = e.get("us") or {}
+            dense = us.get("dense")
+            flavors = {r: v for r, v in us.items()
+                       if r in EVENT_ROUTES and v is not None}
+            if not dense or not flavors:
+                continue
+            # One curve per event flavor plus the flavor-blind best (None):
+            # the achievable flavor is granularity-bound (a strip stream
+            # can only ride the strip kernel), so a decision must compare
+            # *its* flavor against dense — on a backend where one flavor is
+            # a slow correctness twin, the min would misroute it.
+            ratios = {None: min(flavors.values()) / dense}
+            ratios.update({r: v / dense for r, v in flavors.items()})
+            occ = float(e.get("occupancy", 1.0))
+            keys = [(e.get("boundary"),)]
+            if e.get("backend"):
+                keys.append((e.get("boundary"), e.get("backend")))
+                if e.get("shape_class"):
+                    keys.append((e.get("boundary"), e.get("backend"),
+                                 e.get("shape_class")))
+            for key in keys:
+                for flavor, ratio in ratios.items():
+                    buckets.setdefault((key, flavor), {}).setdefault(
+                        round(occ, 6), []).append(ratio)
+        for key, anchors in buckets.items():
+            self._curves[key] = sorted(
+                (occ, sum(rs) / len(rs)) for occ, rs in anchors.items())
+
+    def __len__(self) -> int:
+        return len(self._curves)
+
+    def ratio(self, boundary: str, occupancy: float, *,
+              backend: str | None = None,
+              shape_class: str | None = None,
+              flavor: str | None = None) -> float | None:
+        """Interpolated event/dense time ratio; None = no coverage.
+
+        ``flavor`` conditions the lookup on the event flavor the caller
+        can actually take ("strip"/"pixel"/"window"/"event"); per key the
+        flavor-specific curve wins over the flavor-blind aggregate."""
+        for key in ((boundary, backend, shape_class),
+                    (boundary, backend), (boundary,)):
+            if None in key[1:]:
+                continue
+            for fl in ((flavor, None) if flavor is not None else (None,)):
+                curve = self._curves.get((key, fl))
+                if curve:
+                    return _interp(curve, float(occupancy))
+        for fl in ((flavor, None) if flavor is not None else (None,)):
+            curve = self._curves.get(((boundary,), fl))
+            if curve:
+                return _interp(curve, float(occupancy))
+        return None
+
+
+def _interp(curve: list[tuple[float, float]], x: float) -> float:
+    if x <= curve[0][0]:
+        return curve[0][1]
+    for i in range(1, len(curve)):
+        if x <= curve[i][0]:
+            x0, y0 = curve[i - 1]
+            x1, y1 = curve[i]
+            t = (x - x0) / max(x1 - x0, 1e-12)
+            return y0 + t * (y1 - y0)
+    return curve[-1][1]
+
+
+def load_crossover_table(path: str) -> CrossoverTable:
+    """Table from a BENCH_engine.json file (empty table if absent).
+
+    Accepts either the raw entry list or the benchmark file's
+    ``{"device": ..., "entries": [...]}`` wrapper.
+    """
+    if not os.path.exists(path):
+        return CrossoverTable([])
+    with open(path) as f:
+        data = json.load(f)
+    entries = data.get("entries", []) if isinstance(data, dict) else data
+    return CrossoverTable(entries)
+
+
+#: Process-global calibrated table consulted by adaptive dispatch.  The
+#: engine never reads files implicitly — benchmarks / serving install the
+#: table they loaded; None = analytic seed only.
+_ACTIVE_TABLE: CrossoverTable | None = None
+
+
+def set_active_table(table: CrossoverTable | None) -> CrossoverTable | None:
+    """Install (or clear) the process-global table; returns the previous."""
+    global _ACTIVE_TABLE
+    prev = _ACTIVE_TABLE
+    _ACTIVE_TABLE = table
+    return prev
+
+
+def active_table() -> CrossoverTable | None:
+    return _ACTIVE_TABLE
+
+
+def decide_route(mode: str, boundary: str, *, occupancy: float | None,
+                 event_route: str | None, dense_macs: float,
+                 avg_touched: float, c_out: int, backend: str | None = None,
+                 shape_class: str | None = None,
+                 table: CrossoverTable | None = None) -> RouteDecision:
+    """The one routing decision point (engine.api calls this per boundary).
+
+    mode:        EngineConfig.route — "auto" (geometry-static event-first,
+                 the pre-adaptive behaviour), "adaptive", or a forced label
+                 ("dense" / "event" / "strip" / "pixel" / "window").
+    occupancy:   static occupancy hint (None = assume full occupancy 1.0
+                 for estimates; "auto" mode never routes on it).
+    event_route: the event flavor geometry dispatch would take (None =
+                 no event path exists; the decision is "dense" whatever
+                 the mode — the visible-fallback case).
+    """
+    occ = 1.0 if occupancy is None else min(max(float(occupancy), 0.0), 1.0)
+    est_ev, est_de = boundary_costs(boundary, occ, dense_macs=dense_macs,
+                                    avg_touched=avg_touched, c_out=c_out)
+    tab = table if table is not None else _ACTIVE_TABLE
+    flavor = event_route if event_route in EVENT_ROUTES else None
+    t_ratio = tab.ratio(boundary, occ, backend=backend,
+                        shape_class=shape_class,
+                        flavor=flavor) if tab else None
+    ratio = t_ratio if t_ratio is not None else est_ev / max(est_de, 1e-12)
+    if event_route is None:
+        route, source = "dense", "geometry"
+    elif mode == "auto":
+        route, source = event_route, "geometry"
+    elif mode == "adaptive":
+        route = "dense" if ratio > 1.0 else event_route
+        source = "table" if t_ratio is not None else "model"
+    else:                                   # forced
+        route = event_route if mode == "event" else mode
+        source = "forced"
+    return RouteDecision(route=route, est_event_cost=est_ev,
+                         est_dense_cost=est_de, occupancy=occ,
+                         ratio=float(ratio), source=source)
+
+
+def route_conflicts(records: list[dict], table: CrossoverTable, *,
+                    hysteresis: float = ROUTE_HYSTERESIS) -> list[dict]:
+    """Routes that contradict the calibrated table beyond the hysteresis.
+
+    The CI smoke gate: for every boundary record carrying a route and an
+    occupancy, look up the measured event/dense ratio; a record routed onto
+    the event path while the table says dense wins by more than the band
+    (ratio > 1 + h), or routed dense while events win by more than the band
+    (ratio < 1 / (1 + h)), is a conflict.  Records the table does not cover
+    are never conflicts (the analytic seed owns them).
+    """
+    out = []
+    for r in records:
+        route = r.get("route")
+        if route is None or r.get("occupancy") is None:
+            continue
+        boundary = {"conv2d": "conv", "maxpool2d": "pool",
+                    "linear": "linear"}.get(r.get("op"))
+        if boundary is None:
+            continue
+        event_taken = route in EVENT_ROUTES
+        ratio = table.ratio(boundary, float(r["occupancy"]),
+                            backend=r.get("backend"),
+                            shape_class=r.get("shape_class"),
+                            flavor=route if event_taken else None)
+        if ratio is None:
+            continue
+        if (event_taken and ratio > 1.0 + hysteresis) or \
+                (not event_taken and not r.get("fallback_decode")
+                 and ratio < 1.0 / (1.0 + hysteresis)):
+            out.append(dict(r, table_ratio=ratio))
+    return out

@@ -22,10 +22,11 @@ Typical use::
     y = engine.linear(s, w2, cfg=cfg)                     # layer 2, chained
 """
 from repro.core.events import (STRIP_CO_MIN, STRIP_STRIDES, STRIP_W,
-                               strip_eligible, strip_ineligible_reason)
+                               pool_window_ineligible_reason, strip_eligible,
+                               strip_ineligible_reason)
 from repro.engine.api import (conv2d, describe, fire, fire_conv, linear,
                               matmul, maxpool2d, pool_ineligible_reason,
-                              sparsify)
+                              route_conv, route_linear, route_pool, sparsify)
 from repro.engine.config import BACKENDS, EngineConfig
 from repro.engine.registry import (dispatch, get_backend, list_backends,
                                    register_backend, registered_ops)
@@ -37,10 +38,11 @@ import repro.engine.backends  # noqa: F401  (registers built-in backends)
 __all__ = [
     "BACKENDS", "EngineConfig", "EventStream",
     "STRIP_CO_MIN", "STRIP_STRIDES", "STRIP_W", "strip_eligible",
-    "strip_ineligible_reason",
+    "strip_ineligible_reason", "pool_window_ineligible_reason",
     "register_backend", "get_backend", "dispatch", "list_backends",
     "registered_ops",
     "matmul", "linear", "conv2d", "maxpool2d", "pool_ineligible_reason",
+    "route_conv", "route_pool", "route_linear",
     "fire", "fire_conv", "sparsify", "describe",
     "trace_dispatch",
 ]

@@ -8,20 +8,140 @@ consecutive MNF layers chain events without a decode→re-encode round-trip
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import events as ev
+from repro.costmodel import crossover as xover
 from repro.engine import trace
 from repro.engine.config import EngineConfig
 from repro.engine.registry import dispatch, get_backend, list_backends
 from repro.engine.stream import EventStream
 
 __all__ = ["matmul", "linear", "conv2d", "maxpool2d",
-           "pool_ineligible_reason", "fire", "fire_conv", "sparsify",
-           "describe"]
+           "pool_ineligible_reason", "route_conv", "route_pool",
+           "route_linear", "fire", "fire_conv", "sparsify", "describe"]
 
 _DEFAULT = EngineConfig()
+
+
+# ---------------------------------------------------------------------------
+# Boundary routing (DESIGN.md §11).  One decision function per op kind,
+# used both by the dispatching op below *and* by the model planners
+# (models/cnn aligns keep_dense / emitted granularity with the route a
+# boundary will take) — same inputs, same decision, so plan time and
+# dispatch time can never disagree.  Every input is a trace-time Python
+# value (geometry, cfg.occupancy_hint, the installed crossover table);
+# the traced ``EventStream.occupancy()`` is deliberately never consulted,
+# which is what makes each compiled boundary's route static.
+# ---------------------------------------------------------------------------
+
+def route_conv(logical_shape: tuple, w_shape: tuple, cfg: EngineConfig, *,
+               stride: int = 1, padding: int = 0,
+               blk_m: int = 1) -> "xover.RouteDecision":
+    """Routing decision for a conv boundary consuming an event stream of
+    granularity ``blk_m`` (STRIP_W = strip-aligned, 1 = pixel-granular).
+
+    The event flavor is granularity-bound — a strip stream can only ride
+    the fused strip kernel, a pixel stream only the per-tap path — so the
+    decision is event-flavor vs dense; the strip/pixel *choice* is made by
+    the producer (``models.cnn`` emits the granularity the consumer's
+    geometry wants).
+    """
+    from repro.core.mnf_conv import conv_out_size
+    name = cfg.resolve_backend()
+    bsz, h, wd, ci = logical_shape
+    kh, kw, _, co = w_shape
+    if blk_m == ev.STRIP_W:
+        event_route = "strip" if (
+            ev.strip_eligible(wd, kh, stride, padding, co=co)
+            and name in list_backends("conv2d_events_strip")) else None
+    else:
+        event_route = "pixel" if name in list_backends("conv2d_events") \
+            else None
+    oy = conv_out_size(h, kh, stride, padding)
+    ox = conv_out_size(wd, kw, stride, padding)
+    dec = xover.decide_route(
+        cfg.route, "conv", occupancy=cfg.occupancy_hint,
+        event_route=event_route,
+        dense_macs=float(bsz * oy * ox * kh * kw * ci * co),
+        avg_touched=(oy * ox * kh * kw) / max(bsz * h * wd, 1) * bsz,
+        c_out=co, backend=name, shape_class=f"k{kh}s{stride}")
+    if dec.is_event and dec.route != event_route:
+        # Forced event flavor the stream's granularity cannot serve:
+        # take the flavor that exists (the trace shows what ran).
+        dec = _with_route(dec, event_route or "dense")
+    return dec
+
+
+def route_pool(logical_shape: tuple, k: int, stride: int,
+               cfg: EngineConfig, *, blk_m: int = 1,
+               eligible: bool = True) -> "xover.RouteDecision":
+    """Routing decision for a max-pool boundary.
+
+    Two event flavors exist: the window-major strip grid ("window" — strip
+    streams whose pooled width tiles into whole strips) and the per-event
+    segment max ("pixel" — the general path).  Geometry prefers "window"
+    where it applies; ``eligible=False`` (magnitude fire, degenerate
+    window, backend without the op — ``pool_ineligible_reason``) forces
+    the visible dense fallback whatever the mode.
+
+    The shape class is channel-aware (``k2s2c128``): a dense pool's cost
+    scales with C while ``k``/``stride`` stay fixed across a net, so
+    pooling boundaries of different widths sit at different crossovers —
+    merging their measured curves under one key misroutes the narrow one
+    (the wide shape's event win pollutes the aggregate).
+    """
+    name = cfg.resolve_backend()
+    b, h, w, c = logical_shape
+    oh = max((h - k) // stride + 1, 0)
+    ow = max((w - k) // stride + 1, 0)
+    if not eligible:
+        event_route = None
+    elif (ev.pool_window_ineligible_reason(logical_shape, k, stride,
+                                           blk_m) is None
+          and name in list_backends("maxpool2d_events_window")
+          and cfg.route != "pixel"):
+        event_route = "window"
+    else:
+        event_route = "pixel"
+    dec = xover.decide_route(
+        cfg.route, "pool", occupancy=cfg.occupancy_hint,
+        event_route=event_route,
+        dense_macs=float(b * oh * ow * k * k * c),
+        avg_touched=(oh * ow * k * k) / max(h * w, 1), c_out=c,
+        backend=name, shape_class=f"k{k}s{stride}c{c}")
+    if dec.is_event and dec.route != event_route:
+        dec = _with_route(dec, event_route or "dense")
+    return dec
+
+
+def route_linear(m: int, k: int, n: int, cfg: EngineConfig
+                 ) -> "xover.RouteDecision":
+    """Routing decision for an FC boundary consuming a fire stream."""
+    name = cfg.resolve_backend()
+    event_route = "event" if name in list_backends("linear_events") else None
+    dec = xover.decide_route(
+        cfg.route, "linear", occupancy=cfg.occupancy_hint,
+        event_route=event_route, dense_macs=float(m * k * n),
+        avg_touched=1.0, c_out=n, backend=name, shape_class=f"n{n}")
+    if dec.is_event and dec.route != event_route:
+        dec = _with_route(dec, event_route or "dense")
+    return dec
+
+
+def _with_route(dec, route: str):
+    return dataclasses.replace(dec, route=route)
+
+
+def _route_fields(dec: "xover.RouteDecision", shape_class: str) -> dict:
+    """The per-decision trace fields every boundary record carries
+    (satellite contract pinned by tests/test_routing.py)."""
+    return dict(route=dec.route, est_event_cost=dec.est_event_cost,
+                est_dense_cost=dec.est_dense_cost, occupancy=dec.occupancy,
+                route_source=dec.source, shape_class=shape_class)
 
 
 def matmul(a: jax.Array, w: jax.Array,
@@ -49,10 +169,21 @@ def linear(x, w: jax.Array, b: jax.Array | None = None,
                           jnp.promote_types(x.events.values.dtype, w.dtype))
             return y if b is None else y + b
         name = cfg.resolve_backend()
-        if name in list_backends("linear_events"):
-            trace.record(op="linear", backend=name, chained=True)
+        dec = route_linear(x.shape[0], x.shape[1], w.shape[-1], cfg)
+        fields = _route_fields(dec, f"n{w.shape[-1]}")
+        if dec.is_event:
+            trace.record(op="linear", backend=name, chained=True, **fields)
             return get_backend("linear_events", name)(x, w, b, cfg)
-        trace.record(op="linear", backend=name, fallback_decode=True)
+        if dec.source == "geometry":
+            # No event path exists on this backend: visible decode.
+            trace.record(op="linear", backend=name, fallback_decode=True,
+                         **fields)
+        else:
+            # Dense by *choice* (adaptive / forced): the cost model says
+            # dense wins here — not a fallback, and the smoke gate must
+            # not count it as one.
+            trace.record(op="linear", backend=name, routed_dense=True,
+                         **fields)
         return linear(x.dense(), w, b, cfg)
     lead = x.shape[:-1]
     y = dispatch("linear", cfg)(x.reshape(-1, x.shape[-1]), w, b, cfg)
@@ -76,7 +207,10 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
     row-group gathers — the oracle the fused kernel is bit-exact against).
     Backends without the matching event op, and strip streams whose
     geometry cannot ride the fused kernel, decode once; every such fallback
-    is visible to ``trace_dispatch``.
+    is visible to ``trace_dispatch``.  Under ``cfg.route`` ("adaptive" or a
+    forced label) the boundary instead takes the :func:`route_conv`
+    decision — the chosen route and its cost estimates ride every record
+    (DESIGN.md §11).
     """
     if isinstance(x, EventStream):
         name = cfg.resolve_backend()
@@ -94,28 +228,47 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
                           jnp.promote_types(x.events.values.dtype, w.dtype))
             return y if b is None else y + b
         k = w.shape[0]
-        if is_conv_stream and x.blk_m == ev.STRIP_W:
-            if (ev.strip_eligible(x.logical_shape[2], k, stride, padding,
-                                  co=w.shape[-1])
-                    and name in list_backends("conv2d_events_strip")):
+        if is_conv_stream:
+            dec = route_conv(x.logical_shape, w.shape, cfg, stride=stride,
+                             padding=padding, blk_m=x.blk_m)
+            fields = _route_fields(dec, f"k{k}s{stride}")
+            if dec.route == "strip":
                 trace.record(op="conv2d", backend=name, chained=True,
-                             strip=True, launches=1, stride=stride)
+                             strip=True, launches=1, stride=stride,
+                             **fields)
                 return get_backend("conv2d_events_strip", name)(
                     x, w, b, cfg, stride, padding)
-            # A strip stream the fused path cannot consume (ineligible
-            # geometry or backend without the op): visible decode, never a
-            # silent re-tile.
-            trace.record(op="conv2d", backend=name, fallback_decode=True,
-                         strip=True)
+            if dec.route == "pixel":
+                trace.record(op="conv2d", backend=name, chained=True,
+                             launches=k * k, **fields)
+                return get_backend("conv2d_events", name)(x, w, b, cfg,
+                                                          stride, padding)
+            if dec.source == "geometry":
+                # No event path serves this stream (ineligible geometry or
+                # backend without the op): visible decode, never a silent
+                # re-tile.
+                trace.record(op="conv2d", backend=name, fallback_decode=True,
+                             strip=x.blk_m == ev.STRIP_W, **fields)
+            else:
+                # Dense by *choice* (adaptive / forced): the cost model says
+                # dense wins this boundary — recorded as routed_dense, not a
+                # fallback.  ``dense_nhwc`` reads the kept twin when the
+                # producer kept it; otherwise it decodes (the planner keeps
+                # twins at boundaries it knows will route dense).
+                trace.record(op="conv2d", backend=name, routed_dense=True,
+                             **fields)
             x = x.dense_nhwc()
-        elif is_conv_stream and name in list_backends("conv2d_events"):
-            trace.record(op="conv2d", backend=name, chained=True,
-                         launches=k * k)
-            return get_backend("conv2d_events", name)(x, w, b, cfg, stride,
-                                                      padding)
         else:
-            trace.record(op="conv2d", backend=name, fallback_decode=True)
-            x = x.dense_nhwc() if is_conv_stream else x.dense()
+            # Not a conv stream at all (no NHWC logical_shape): rough
+            # estimates so even this record carries the routing schema.
+            dec = xover.decide_route(
+                cfg.route, "conv", occupancy=cfg.occupancy_hint,
+                event_route=None,
+                dense_macs=float(x.shape[0] * x.shape[1] * w.shape[-1]),
+                avg_touched=1.0, c_out=w.shape[-1], backend=name)
+            trace.record(op="conv2d", backend=name, fallback_decode=True,
+                         **_route_fields(dec, f"k{k}s{stride}"))
+            x = x.dense()
     return dispatch("conv2d", cfg)(x, w, b, cfg, stride, padding)
 
 
@@ -164,11 +317,30 @@ def maxpool2d(x, k: int, stride: int | None = None,
     boundaries therefore stay events-only end to end (DESIGN.md §7).
     Ineligible streams (see :func:`pool_ineligible_reason`) decode once —
     visibly, never silently — and dense inputs return the dense pooled map.
+
+    Routing (DESIGN.md §11): :func:`route_pool` picks between the
+    window-major strip grid ("window"), the per-event segment max
+    ("pixel"), and — under adaptive/forced modes — a dense-by-choice pool
+    of the kept twin; the dense route still re-emits through the fire
+    phase, so the boundary's type and bits never depend on the route.
     """
     stride = k if stride is None else stride
     if isinstance(x, EventStream):
         name = cfg.resolve_backend()
         reason = pool_ineligible_reason(x, k, stride, cfg)
+        shape_ok = (x.logical_shape is not None
+                    and len(x.logical_shape) == 4)
+        if shape_ok:
+            dec = route_pool(x.logical_shape, k, stride, cfg, blk_m=x.blk_m,
+                             eligible=reason is None)
+        else:
+            dec = xover.decide_route(
+                cfg.route, "pool", occupancy=cfg.occupancy_hint,
+                event_route=None, dense_macs=float(x.shape[0] * x.shape[1]),
+                avg_touched=1.0, c_out=x.shape[1], backend=name)
+        fields = _route_fields(
+            dec, f"k{k}s{stride}c{x.logical_shape[3]}" if shape_ok
+            else f"k{k}s{stride}")
         if reason is None:
             b, h, w, c = x.logical_shape
             oh = (h - k) // stride + 1
@@ -183,9 +355,23 @@ def maxpool2d(x, k: int, stride: int | None = None,
                     (b * oh * ow, c), blk_m=bm, blk_k=cfg.blk_k,
                     dtype=x.events.values.dtype,
                     logical_shape=(b, oh, ow, c))
-            trace.record(op="maxpool2d", backend=name, chained=True,
-                         pool_events=True, launches=1)
-            rows = get_backend("maxpool2d_events", name)(x, k, stride, cfg)
+            if dec.is_event:
+                # "window" rides the window-major strip grid (one step per
+                # output strip); "pixel" the general per-event segment max.
+                op_name = ("maxpool2d_events_window" if dec.route == "window"
+                           else "maxpool2d_events")
+                trace.record(op="maxpool2d", backend=name, chained=True,
+                             pool_events=True, launches=1, **fields)
+                rows = get_backend(op_name, name)(x, k, stride, cfg)
+            else:
+                # Dense by *choice* (adaptive / forced): pool the dense twin
+                # — free when the producer kept it — through the dense
+                # dispatch.  Bit-identical to the segment max, and the
+                # boundary stays type-stable (re-emitted stream below).
+                trace.record(op="maxpool2d", backend=name, routed_dense=True,
+                             **fields)
+                rows = dispatch("maxpool2d", cfg)(
+                    x.dense_nhwc(), k, stride, cfg).reshape(b * oh * ow, c)
             # Pooled values are already fired (non-negative, sub-threshold
             # zeroed upstream): fire at threshold 0 is the identity
             # re-emission at the consumer's granularity.
@@ -193,7 +379,7 @@ def maxpool2d(x, k: int, stride: int | None = None,
                              cfg.replace(threshold=0.0),
                              keep_dense=keep_dense, blk_m=bm)
         trace.record(op="maxpool2d", backend=name, fallback_decode=True,
-                     reason=reason)
+                     reason=reason, **fields)
         x = x.dense_nhwc() if x.logical_shape is not None else x.dense()
     return dispatch("maxpool2d", cfg)(x, k, stride, cfg)
 

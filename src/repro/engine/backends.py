@@ -278,6 +278,25 @@ def _maxpool2d_events_pallas(stream, k, stride, cfg: EngineConfig):
                             interpret=cfg.resolve_interpret())
 
 
+# Window-major strip pool (DESIGN.md §7): output-strip grid, strip-masked
+# affine max — 8x fewer grid steps than the per-event segment max.  The
+# engine routes strip streams here whenever the pooled width tiles into
+# whole strips (core.events.pool_window_ineligible_reason); the per-event
+# op above stays the general path and the bitwise oracle.
+
+@register_backend("maxpool2d_events_window", "block")
+def _maxpool2d_events_window_block(stream, k, stride, cfg: EngineConfig):
+    from repro.kernels.event_pool.ref import event_max_pool2d_window_ref
+    return event_max_pool2d_window_ref(stream, k, stride)
+
+
+@register_backend("maxpool2d_events_window", "pallas")
+def _maxpool2d_events_window_pallas(stream, k, stride, cfg: EngineConfig):
+    from repro.kernels.event_pool.ops import event_max_pool2d_window
+    return event_max_pool2d_window(stream, k, stride,
+                                   interpret=cfg.resolve_interpret())
+
+
 # ---------------------------------------------------------------------------
 # fire (threshold + re-encode for the next layer)
 # ---------------------------------------------------------------------------

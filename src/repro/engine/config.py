@@ -38,6 +38,19 @@ class EngineConfig:
     interpret:  run Pallas kernels in interpret mode; None = auto (interpret
                 everywhere except real TPU devices).
     out_dtype:  accumulator/output dtype of the multiply phase.
+    route:      boundary routing policy (DESIGN.md §11): "auto" routes by
+                geometry alone (event path whenever one exists — the
+                pre-adaptive behaviour), "adaptive" consults the crossover
+                cost model (``costmodel.crossover``) against
+                ``occupancy_hint``, and "dense" / "event" / "strip" /
+                "pixel" / "window" force a route (tests, benches).  Every
+                value is a trace-time constant, so routing is static per
+                compiled boundary.
+    occupancy_hint: expected occupancy of incoming streams in [0, 1]
+                (None = assume 1.0).  A *static* planning value — adaptive
+                routing deliberately never reads the traced
+                ``EventStream.occupancy()`` (jit-compiled boundaries must
+                not route on data).
     """
 
     backend: str = "auto"
@@ -49,6 +62,8 @@ class EngineConfig:
     magnitude: bool = False
     interpret: bool | None = None
     out_dtype: str = "float32"
+    route: str = "auto"
+    occupancy_hint: float | None = None
 
     # NOTE: backend names beyond BACKENDS are allowed — the registry is open
     # (custom backends register at runtime); unknown names fail at dispatch

@@ -1,7 +1,15 @@
 from repro.kernels.event_pool.kernel import (event_pool_kernel,
-                                             event_pool_pallas)
-from repro.kernels.event_pool.ops import event_max_pool2d, pool_plan
-from repro.kernels.event_pool.ref import event_max_pool2d_ref
+                                             event_pool_pallas,
+                                             event_pool_window_kernel,
+                                             event_pool_window_pallas)
+from repro.kernels.event_pool.ops import (event_max_pool2d,
+                                          event_max_pool2d_window,
+                                          pool_plan, pool_window_plan)
+from repro.kernels.event_pool.ref import (event_max_pool2d_ref,
+                                          event_max_pool2d_window_ref)
 
 __all__ = ["event_pool_kernel", "event_pool_pallas", "event_max_pool2d",
-           "event_max_pool2d_ref", "pool_plan"]
+           "event_max_pool2d_ref", "pool_plan",
+           "event_pool_window_kernel", "event_pool_window_pallas",
+           "event_max_pool2d_window", "event_max_pool2d_window_ref",
+           "pool_window_plan"]

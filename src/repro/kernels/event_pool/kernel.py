@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["event_pool_kernel", "event_pool_pallas"]
+__all__ = ["event_pool_kernel", "event_pool_pallas",
+           "event_pool_window_kernel", "event_pool_window_pallas"]
 
 
 def event_pool_kernel(row_ref, src_ref, cnt_ref, a_idx_ref,
@@ -109,3 +110,97 @@ def event_pool_pallas(a_vals: jax.Array, a_idx: jax.Array, row: jax.Array,
         interpret=interpret,
         name="mnf_event_pool",
     )(row, src, cnt, a_idx, a_vals)
+
+
+# ---------------------------------------------------------------------------
+# Window-major grid (DESIGN.md §7): one grid step per *output strip* —
+# 8 pooled pixels — instead of per output pixel, and every subtap consumes
+# the whole gathered (bm, bk) tile through a strip-masked affine row remap
+# (out row i <- src row stride*i + shift; unsourced rows are exact 0, the
+# max identity).  8x fewer grid steps than the per-event kernel, no wasted
+# row picks — the raw-steady-state rework the ROADMAP calls out.
+# ---------------------------------------------------------------------------
+
+def event_pool_window_kernel(shift_ref, src_ref, cnt_ref, a_idx_ref,
+                             # ^ scalar-prefetch refs (strip plan + addrs)
+                             a_vals_ref,           # VMEM input (1, 1, bm, bk)
+                             out_ref,              # VMEM out (1, bm, nkb, bk)
+                             acc_ref,              # VMEM scratch (nkb, bm, bk)
+                             *, row_stride: int):
+    g = pl.program_id(0)
+    t = pl.program_id(1)
+    e = pl.program_id(2)
+    num_t = pl.num_programs(1)
+    num_e = pl.num_programs(2)
+
+    @pl.when((t == 0) & (e == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(e < cnt_ref[g, t])
+    def _segmax():
+        a = a_vals_ref[0, 0]                  # (bm, bk) source event tile
+        bm = a.shape[0]
+        d = shift_ref[t]
+        # Strip-masked affine remap as a 0/1 selection matmul (the fused
+        # conv kernel's exact-move idiom): out row i takes src row
+        # stride*i + d; rows whose source leaves [0, bm) get an all-zero
+        # selection row — the exact 0 the segment max treats as identity.
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+        sel = (cols == rows * row_stride + d).astype(a.dtype)
+        remap = jnp.dot(sel, a, preferred_element_type=jnp.float32)
+        kb = a_idx_ref[src_ref[g, t], e]      # direct K-block address
+        cur = pl.load(acc_ref, (pl.dslice(kb, 1), slice(None), slice(None)))
+        pl.store(acc_ref, (pl.dslice(kb, 1), slice(None), slice(None)),
+                 jnp.maximum(cur, remap[None]))
+
+    @pl.when((t == num_t - 1) & (e == num_e - 1))
+    def _writeback():
+        # Scratch is K-block-major (segment addresses lead — the dslice
+        # axis); the output strip wants rows leading.  One VMEM transpose
+        # per strip at writeback, amortized over the whole tap walk.
+        out_ref[0] = acc_ref[...].transpose(1, 0, 2).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nkb", "row_stride",
+                                             "interpret", "out_dtype"))
+def event_pool_window_pallas(a_vals: jax.Array, a_idx: jax.Array,
+                             shift: jax.Array, src: jax.Array,
+                             cnt: jax.Array, *, nkb: int, row_stride: int,
+                             interpret: bool = False,
+                             out_dtype=jnp.float32) -> jax.Array:
+    """One fused launch over the window-major grid (G_out, T, E).
+
+    a_vals/a_idx: event tiles (G_in, E, bm, bk) / addresses (G_in, E).
+    shift/src/cnt: the ``core.events.pool_strip_map`` plan — per-subtap row
+    offset (T,), source strip group (G_out, T), live event count
+    (G_out, T).  Returns (G_out, bm, nkb, bk): pooled rows per output
+    strip, rows-leading (reshape to (P_out, nkb·bk) outside).
+    """
+    g_in, e, bm, bk = a_vals.shape
+    g_out, t_n = src.shape
+    assert cnt.shape == src.shape, (cnt.shape, src.shape)
+    assert shift.shape == (t_n,), (shift.shape, t_n)
+
+    grid = (g_out, t_n, e)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda gi, ti, ei, sh, sr, ct, ai:
+                         (sr[gi, ti], ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, nkb, bk),
+                               lambda gi, ti, ei, sh, sr, ct, ai:
+                               (gi, 0, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((nkb, bm, bk), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(event_pool_window_kernel, row_stride=row_stride),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g_out, bm, nkb, bk), out_dtype),
+        interpret=interpret,
+        name="mnf_event_pool_window",
+    )(shift, src, cnt, a_idx, a_vals)

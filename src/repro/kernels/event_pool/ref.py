@@ -1,18 +1,26 @@
-"""Pure-jnp twin of the event-native max-pool kernel (DESIGN.md §7).
+"""Pure-jnp twins of the event-native max-pool kernels (DESIGN.md §7).
 
-Walks the same static window plan (``core.events.pool_window_map``) as the
-Pallas kernel: each of the k·k window taps is a row gather of the input
-stream's event tiles, scattered into a per-output-pixel segment-max
-accumulator keyed by the event's direct K-block address.  The engine
-registry's "block" backend of ``maxpool2d_events``.
+Two grids over the same segment-max semantics:
+
+  * ``event_max_pool2d_ref`` — the original *per-event* plan
+    (``core.events.pool_window_map``): one accumulator row per output
+    pixel, k·k row gathers each.  General (any granularity); the oracle.
+  * ``event_max_pool2d_window_ref`` — the *window-major* strip plan
+    (``core.events.pool_strip_map``): one accumulator tile per output
+    strip (8 pooled pixels), each subtap an affine strip gather
+    (``gather_row_strips`` — the fused conv kernel's row-remap idiom) that
+    uses all 8 gathered rows instead of picking one, so the tap walk is
+    8x shorter and no gathered row is wasted.  The raw-steady-state path
+    the bench sweep measures against dense ``reduce_window``.
 
 Bit-exactness contract (tested in tests/test_event_pool.py): the fire phase
 emits non-negative activations (ReLU at the threshold), event-absent
 positions are exactly 0, and max is order-invariant over a multiset — so
 the segment max over events, with identity 0, equals the dense
-``reduce_window`` max of the fired map bit for bit.  The identity-0
-argument is exactly why the engine gates this path on non-``magnitude``
-fire configs (negative events would be clipped).
+``reduce_window`` max of the fired map bit for bit — for either grid.  The
+identity-0 argument is exactly why the engine gates this path on
+non-``magnitude`` fire configs (negative events would be clipped), and why
+the affine row remap's out-of-range zeros are free (0 is the identity).
 """
 from __future__ import annotations
 
@@ -20,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import events as ev
 
-__all__ = ["event_max_pool2d_ref"]
+__all__ = ["event_max_pool2d_ref", "event_max_pool2d_window_ref"]
 
 
 def event_max_pool2d_ref(stream, k: int, stride: int) -> jnp.ndarray:
@@ -55,3 +63,40 @@ def event_max_pool2d_ref(stream, k: int, stride: int) -> jnp.ndarray:
         vals = jnp.where((slot < cnt[:, None])[:, :, None], vals, 0)
         acc = acc.at[parr, bev.block_idx[g]].max(vals)
     return acc.reshape(p_n, nkb * bk)[:, :c]
+
+
+def event_max_pool2d_window_ref(stream, k: int, stride: int) -> jnp.ndarray:
+    """Window-major segment-max pool over a *strip* EventStream.
+
+    Returns (B·OH·OW, C), bit-identical to :func:`event_max_pool2d_ref`
+    (and hence to the dense ``reduce_window``).  Requires
+    ``core.events.pool_window_ineligible_reason(...) is None`` — the engine
+    gates; the per-event grid stays the general path.
+    """
+    b, h, w, c = stream.logical_shape
+    bev = stream.events
+    bm = stream.blk_m
+    assert bm == ev.STRIP_W, (bm, "window-major pool wants a strip stream")
+    nkb, bk = bev.num_k_blocks, stream.blk_k
+    src, live, shift, _ = ev.pool_strip_map(stream.logical_shape, k, stride)
+    g_n, t_n = src.shape
+    acc = jnp.zeros((g_n, nkb, bm, bk), bev.values.dtype)
+    if g_n == 0:
+        return acc.reshape(0, nkb * bk)[:, :c]
+    e = bev.capacity
+    slot = jnp.arange(e, dtype=jnp.int32)[None, :]
+    garr = jnp.arange(g_n, dtype=jnp.int32)[:, None]
+    for t in range(t_n):
+        # Affine strip gather (out row i <- src row stride*i + shift; rows
+        # with no source are exact 0) — dead parts and padded event slots
+        # mask to the identity 0 before the scatter-max.
+        gat = ev.gather_row_strips(bev, jnp.asarray(src[:, t]),
+                                   jnp.asarray(live[:, t]), int(shift[t]),
+                                   row_stride=stride)
+        vals = jnp.where((slot < gat.counts[:, None])[:, :, None, None],
+                         gat.values, 0)                  # (G, E, bm, bk)
+        acc = acc.at[garr, gat.block_idx].max(vals)
+    # Group g's row i is output raster pixel g*8 + i (output strips tile
+    # the pooled raster), so the (strip, row) transpose is the whole
+    # un-tiling.
+    return acc.transpose(0, 2, 1, 3).reshape(g_n * bm, nkb * bk)[:, :c]

@@ -52,9 +52,16 @@ def serve_cnn(args) -> None:
 
     spec = _cnn_spec(args.cnn, args.cnn_size)
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    if args.route == "adaptive":
+        # Adaptive routing consults the measured crossover table (written
+        # by kernel_bench --sweep); installing it is explicit — the engine
+        # never reads files implicitly.
+        from repro.costmodel import crossover as xover
+        xover.set_active_table(xover.load_crossover_table(args.bench))
     ecfg = engine.EngineConfig(
         backend="pallas" if args.mnf_pallas else "auto",
-        threshold=args.mnf_threshold)
+        threshold=args.mnf_threshold, route=args.route,
+        occupancy_hint=args.occupancy_hint)
     key = jax.random.PRNGKey(0)
     params = init_cnn_params(key, spec, weight_sparsity=args.weight_sparsity)
 
@@ -104,7 +111,13 @@ def serve_cnn(args) -> None:
 
 
 def serve_smoke(args) -> None:
-    """CI gate: tiny bucketed serve loop + the tier's three invariants."""
+    """CI gate: tiny bucketed serve loop + the tier's three invariants,
+    plus the routing invariant of DESIGN.md §11: a snapshot-restored
+    replica must report routes identical to the replica that compiled the
+    executables (routes are trace-time static, so any drift means the
+    restored executable no longer matches its report)."""
+    import tempfile
+
     import numpy as np
 
     from repro import serving
@@ -112,11 +125,12 @@ def serve_smoke(args) -> None:
 
     spec = _cnn_spec("mini", 8)
     buckets = (1, 2, 4)
+    cache_dir = args.cache_dir or tempfile.mkdtemp(prefix="mnf_serve_smoke_")
     params = init_cnn_params(jax.random.PRNGKey(0), spec,
                              weight_sparsity=0.5)
     eng = serving.ServeEngine(
         spec, params, serving.ServeEngineConfig(buckets=buckets,
-                                                cache_dir=args.cache_dir))
+                                                cache_dir=cache_dir))
     warm = eng.recompiles
     rng = np.random.default_rng(0)
     images = np.maximum(rng.standard_normal((9, 8, 8, 3),
@@ -151,13 +165,27 @@ def serve_smoke(args) -> None:
         if not np.array_equal(ref, got):
             failures.append(f"padded-bucket logits not bitwise-equal to "
                             f"the unpadded forward at n={n}")
+    # Snapshot-restart route identity: a second replica restored from the
+    # first one's executable snapshots must report the exact same
+    # per-boundary routes (and restore, not recompile).
+    eng2 = serving.ServeEngine(
+        spec, params, serving.ServeEngineConfig(buckets=buckets,
+                                                cache_dir=cache_dir))
+    if eng2.snapshot_hits != len(buckets):
+        failures.append(f"restarted replica restored "
+                        f"{eng2.snapshot_hits}/{len(buckets)} buckets from "
+                        f"snapshot (restart must not recompile)")
+    report2 = eng2.boundary_report()
+    if report2["routes"] != report["routes"]:
+        failures.append(f"snapshot-restored replica reports different "
+                        f"routes: {report2['routes']} != {report['routes']}")
     print(json.dumps(dict(smoke="serve", boundaries=report, **eng.stats())))
     if failures:
         print("serve smoke FAILED:\n  " + "\n  ".join(failures),
               file=sys.stderr)
         raise SystemExit(1)
     print("serve smoke OK: no steady-state recompiles, no fallback_decode, "
-          "padding bitwise-exact")
+          "padding bitwise-exact, snapshot-restart routes identical")
 
 
 def main():
@@ -202,6 +230,21 @@ def main():
                          "MNF events (the default)")
     ap.add_argument("--weight-sparsity", type=float, default=0.5,
                     help="CNN mode: unstructured weight pruning density")
+    ap.add_argument("--route", default="auto",
+                    choices=("auto", "adaptive", "dense", "event", "strip",
+                             "pixel", "window"),
+                    help="CNN mode: per-boundary routing policy — auto "
+                         "(geometry event-first), adaptive (cost-model / "
+                         "crossover-table argmin at --occupancy-hint), or "
+                         "a forced route (DESIGN.md §11)")
+    ap.add_argument("--occupancy-hint", type=float, default=None,
+                    help="CNN mode: static occupancy the adaptive router "
+                         "decides at (routes are trace-time static; the "
+                         "hint is the deployment's expected activation "
+                         "density, default 1.0)")
+    ap.add_argument("--bench", default="BENCH_engine.json",
+                    help="CNN mode: BENCH file whose crossover entries "
+                         "seed the adaptive routing table")
     args = ap.parse_args()
 
     if args.smoke:

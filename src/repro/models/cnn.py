@@ -229,19 +229,41 @@ def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
     (``pool_events``), and how many densify points remain on the chain
     (``densify`` — dense-pool fallbacks; 0 when every pool is eligible,
     the DESIGN.md §7 invariant serving and benchmarks report).
+    ``routes`` lists, in chain order, the routing decision of every
+    boundary that consumes an EventStream — the same
+    ``engine.route_conv`` / ``engine.route_pool`` calls the dispatch makes
+    (DESIGN.md §11), so serving's boundary report can state each compiled
+    boundary's route without tracing.
     """
     cfg = _layer_cfg(engine_cfg, mnf=True, fire_cfg=fire_cfg)
     conv_base = cfg.replace(blk_m=1, blk_k=min(8, cfg.blk_k))
     shapes = _trace_shapes(spec)
-    out = dict(conv=0, fc=0, pool=0, pool_events=0, densify=0)
+    out = dict(conv=0, fc=0, pool=0, pool_events=0, densify=0, routes=[])
     # Mirrors _forward's chained dataflow: a pool sees a *conv stream* only
     # when fed by a conv or by a pool that itself chained (the first layer's
     # dense image, and FC streams, take the dense-pool fallback).
+    # ``blk_m`` tracks the granularity of the stream currently in flight —
+    # what _next_conv_blk_m made the producer emit.
     conv_stream_in = False
+    blk_m = 1
     for i, layer in enumerate(spec.layers):
         h, w, c = shapes[i]
+        nxt = spec.layers[i + 1] if i + 1 < len(spec.layers) else None
         if isinstance(layer, ConvSpec):
             out["conv"] += 1
+            if conv_stream_in:
+                dec = engine.route_conv(
+                    (batch, h, w, c), (layer.k, layer.k, c, layer.out_ch),
+                    conv_base, stride=layer.stride, padding=layer.padding,
+                    blk_m=blk_m)
+                out["routes"].append(dict(
+                    op="conv2d", route=dec.route, occupancy=dec.occupancy,
+                    est_event_cost=dec.est_event_cost,
+                    est_dense_cost=dec.est_dense_cost, source=dec.source,
+                    shape_class=f"k{layer.k}s{layer.stride}"))
+            oy = conv_out_size(h, layer.k, layer.stride, layer.padding)
+            ox = conv_out_size(w, layer.k, layer.stride, layer.padding)
+            blk_m = _next_conv_blk_m(nxt, (batch, oy, ox, layer.out_ch))
             conv_stream_in = True
         elif isinstance(layer, FCSpec):
             out["fc"] += 1
@@ -252,6 +274,18 @@ def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
                     (batch, h, w, c), layer.k, layer.stride,
                     conv_base) is None:
                 out["pool_events"] += 1
+                dec = engine.route_pool((batch, h, w, c), layer.k,
+                                        layer.stride, conv_base,
+                                        blk_m=blk_m)
+                out["routes"].append(dict(
+                    op="maxpool2d", route=dec.route,
+                    occupancy=dec.occupancy,
+                    est_event_cost=dec.est_event_cost,
+                    est_dense_cost=dec.est_dense_cost, source=dec.source,
+                    shape_class=f"k{layer.k}s{layer.stride}c{c}"))
+                oh = (h - layer.k) // layer.stride + 1
+                ow = (w - layer.k) // layer.stride + 1
+                blk_m = _next_conv_blk_m(nxt, (batch, oh, ow, c))
             else:
                 out["densify"] += 1
                 conv_stream_in = False
@@ -275,15 +309,36 @@ def _dense_nhwc(x) -> jax.Array:
     return x.dense_nhwc() if isinstance(x, engine.EventStream) else x
 
 
-def _next_conv_blk_m(nxt, out_w: int) -> int:
+def _next_conv_blk_m(nxt, out_shape: tuple) -> int:
     """Granularity of the stream a fired conv layer emits, chosen from its
     *consumer*: strip-aligned (STRIP_W-pixel row strips — the fused-tap
     kernel's unit, one launch per layer and an 8x smaller event grid) when
-    the next layer is a strip-eligible conv, pixel-granular otherwise."""
+    the next layer is a strip-eligible conv or a window-eligible pool (the
+    window-major pool grid consumes strip streams, DESIGN.md §7),
+    pixel-granular otherwise.  ``out_shape`` is the emitted map's NHWC
+    shape."""
+    out_w = out_shape[2]
     if isinstance(nxt, ConvSpec) and engine.strip_eligible(
             out_w, nxt.k, nxt.stride, nxt.padding, co=nxt.out_ch):
         return engine.STRIP_W
+    if isinstance(nxt, PoolSpec) and engine.pool_window_ineligible_reason(
+            tuple(out_shape), nxt.k, nxt.stride, engine.STRIP_W) is None:
+        return engine.STRIP_W
     return 1
+
+
+def _next_boundary_route(nxt, out_shape: tuple, cfg: engine.EngineConfig,
+                         blk_m: int):
+    """The routing decision the *next* boundary will take on the stream a
+    layer is about to emit — the same ``engine.route_conv`` /
+    ``engine.route_pool`` call the dispatch makes, with identical inputs,
+    so the planner's keep-twin choices and the dispatcher's routes can
+    never disagree (DESIGN.md §11)."""
+    if isinstance(nxt, ConvSpec):
+        return engine.route_conv(
+            out_shape, (nxt.k, nxt.k, out_shape[3], nxt.out_ch), cfg,
+            stride=nxt.stride, padding=nxt.padding, blk_m=blk_m)
+    return engine.route_pool(out_shape, nxt.k, nxt.stride, cfg, blk_m=blk_m)
 
 
 def _pixel_events(x):
@@ -371,9 +426,16 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
                                    tuple(acc.shape), nxt.k, nxt.stride,
                                    conv_base) is None)
                 keep = not (isinstance(nxt, ConvSpec) or pool_chains)
+                bm_next = _next_conv_blk_m(nxt, tuple(acc.shape))
+                if not keep and conv_base.route != "auto":
+                    # Adaptive/forced routing may send the next boundary
+                    # dense; keep the twin so its ``dense_nhwc`` is a free
+                    # read, not a decode.  Same decision function the
+                    # dispatch uses — plan and dispatch cannot disagree.
+                    keep = not _next_boundary_route(
+                        nxt, tuple(acc.shape), conv_base, bm_next).is_event
                 x = engine.fire_conv(acc, conv_base, keep_dense=keep,
-                                     blk_m=_next_conv_blk_m(nxt,
-                                                            acc.shape[2]))
+                                     blk_m=bm_next)
             else:
                 x = fire(acc, fire_cfg)              # fire phase == ReLU @ 0
             if stats is not None:
@@ -388,17 +450,21 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
                 # twin, no re-encode).  The pooled twin is kept only when
                 # the FC head (or the network output) reads it densely.
                 c = x.logical_shape[-1]
+                oh = (x.logical_shape[1] - layer.k) // layer.stride + 1
                 pw = (x.logical_shape[2] - layer.k) // layer.stride + 1
-                if isinstance(nxt, ConvSpec):
-                    pcfg = conv_base.for_pool(c, width=pw, k=nxt.k,
-                                              stride=nxt.stride,
-                                              padding=nxt.padding,
-                                              co=nxt.out_ch)
-                else:
-                    pcfg = conv_base.for_pool(c)
+                pooled_shape = (x.logical_shape[0], oh, pw, c)
+                # Emitted granularity from the consumer (same rule as the
+                # conv fire): strips for a strip-eligible conv *or* a
+                # window-eligible next pool, pixels otherwise.
+                pcfg = conv_base.for_pool(c).replace(
+                    blk_m=_next_conv_blk_m(nxt, pooled_shape))
+                keep_pool = not isinstance(nxt, ConvSpec)
+                if not keep_pool and conv_base.route != "auto":
+                    keep_pool = not _next_boundary_route(
+                        nxt, pooled_shape, conv_base,
+                        pcfg.blk_m).is_event
                 x = engine.maxpool2d(x, layer.k, layer.stride, cfg=pcfg,
-                                     keep_dense=not isinstance(nxt,
-                                                               ConvSpec))
+                                     keep_dense=keep_pool)
             else:
                 pooled = max_pool_nhwc(_dense_nhwc(x), layer.k, layer.stride)
                 if chain and isinstance(nxt, ConvSpec):
@@ -407,7 +473,7 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
                     # granularity the next conv consumes.
                     x = engine.EventStream.encode_nhwc(
                         pooled, blk_k=conv_base.blk_k,
-                        blk_m=_next_conv_blk_m(nxt, pooled.shape[2]),
+                        blk_m=_next_conv_blk_m(nxt, tuple(pooled.shape)),
                         keep_dense=False)
                 else:
                     x = pooled

@@ -180,8 +180,13 @@ class ServeEngine:
 
     def boundary_report(self, bucket: int | None = None) -> dict:
         """Abstract-trace one bucket's pipeline: chained/pool/fallback
-        counts (no numeric work — ``jax.eval_shape`` under the dispatch
-        tracer).  ``fallback_decodes`` must be 0 on an eligible network."""
+        counts plus the per-boundary routing decisions (no numeric work —
+        ``jax.eval_shape`` under the dispatch tracer).
+        ``fallback_decodes`` must be 0 on an eligible network, and because
+        routes are trace-time static (DESIGN.md §11) ``routes`` states
+        exactly what each compiled boundary does — a snapshot-restored
+        executable must report the same list it was compiled with (the
+        serve smoke checks restart drift)."""
         from repro.models.cnn import make_cnn_forward
         bucket = self.cfg.buckets[0] if bucket is None else bucket
         plan = self.plans[bucket]
@@ -189,12 +194,22 @@ class ServeEngine:
                                engine_cfg=self.engine_cfg)
         with mnf_engine.trace_dispatch() as recs:
             jax.eval_shape(fwd, plan.arg_specs[0], plan.arg_specs[1])
+        routes = [dict(op=r.get("op"), route=r.get("route"),
+                       occupancy=r.get("occupancy"),
+                       source=r.get("route_source"),
+                       shape_class=r.get("shape_class"))
+                  for r in recs if r.get("route") is not None]
+        route_counts: dict[str, int] = {}
+        for r in routes:
+            route_counts[r["route"]] = route_counts.get(r["route"], 0) + 1
         return dict(
             bucket=bucket,
             chained=sum(1 for r in recs if r.get("chained")),
             pool_events=sum(1 for r in recs if r.get("pool_events")),
             fallback_decodes=sum(
                 1 for r in recs if r.get("fallback_decode")),
+            routed_dense=sum(1 for r in recs if r.get("routed_dense")),
+            routes=routes, route_counts=route_counts,
             boundaries=plan.boundaries)
 
     # -- request path --------------------------------------------------------

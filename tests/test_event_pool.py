@@ -181,7 +181,15 @@ def test_chain_boundary_summary_counts_pools():
     from repro.core.fire import FireConfig
 
     s = chain_boundary_summary(MINI, batch=2)
+    routes = s.pop("routes")
     assert s == dict(conv=2, fc=1, pool=2, pool_events=2, densify=0)
+    # One routing decision per stream-consuming boundary (conv 2 consumes a
+    # stream, both pools do); default "auto" mode keeps every boundary on
+    # its geometric event route.
+    assert [r["op"] for r in routes] == ["maxpool2d", "conv2d", "maxpool2d"]
+    assert all(r["route"] in ("strip", "pixel", "window") for r in routes), \
+        routes
+    assert all(r["source"] == "geometry" for r in routes)
     # magnitude fire (the LM generalization) disables the identity-0
     # segment max: every pool becomes a densify point again
     s = chain_boundary_summary(MINI, batch=2,

@@ -128,16 +128,23 @@ def test_pool_geometry_bitwise(backend, b, h, wmul, c, k, stride, strips_in,
 @settings(max_examples=5, deadline=None)
 @given(size=st.sampled_from([8, 16]), ci=st.integers(1, 3),
        k1=st.sampled_from([1, 3]), k2=st.sampled_from([1, 3]),
-       s2=st.sampled_from([1, 2]), sparsity=st.sampled_from([0.3, 0.8]))
+       s2=st.sampled_from([1, 2]), sparsity=st.sampled_from([0.3, 0.8]),
+       route=st.sampled_from(["auto", "adaptive", "dense"]),
+       hint=st.sampled_from([0.05, 1.0]))
 def test_chained_conv_pool_conv_bitwise(backend, size, ci, k1, k2, s2,
-                                        sparsity):
+                                        sparsity, route, hint):
+    # ``route`` is a sampled dimension on purpose (DESIGN.md §11): the
+    # routing mode changes the *schedule* at every boundary — event flavor
+    # vs dense-by-choice — and the chained == round-trip bitwise contract
+    # must hold whatever mix of routes the sampled point lands on.
     spec = CNNSpec("prop", size, ci,
                    (ConvSpec(8, k1, 1, k1 // 2), PoolSpec(2, 2),
                     ConvSpec(8, k2, s2, k2 // 2), FCSpec(8)), num_classes=8)
     params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
     x = jax.nn.relu(_input(_seed(size, ci, k1, k2, s2, sparsity),
                            (1, size, size, ci), sparsity))
-    cfg = engine.EngineConfig(backend=backend)
+    cfg = engine.EngineConfig(backend=backend, route=route,
+                              occupancy_hint=hint)
     with engine.trace_dispatch() as recs:
         ym = cnn_forward(params, x, spec, mnf=True, chain=True,
                          engine_cfg=cfg)

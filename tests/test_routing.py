@@ -1,0 +1,372 @@
+"""Occupancy-adaptive dispatch: routing decisions, trace schema, bitwise
+invariance (DESIGN.md §11).
+
+What this suite pins:
+
+  * **Schema** — every dispatched boundary record (chained, routed_dense,
+    *and* fallback_decode) carries the full routing schema
+    (``ROUTE_FIELDS``): the chosen route and the cost estimates that
+    explain it.  A record without them is a regression in the dispatch
+    tracer, not a formatting nit — serving's boundary report and the CI
+    route gate both read these fields.
+  * **Decisions** — forced routes are honored (and normalized to the
+    flavor the stream's granularity can actually serve); adaptive routing
+    flips with occupancy exactly where its cost source (analytic model or
+    installed crossover table) says it should; zero-event streams stay on
+    the event path with exact-zero output and no dense fallback.
+  * **Staticness** — decisions consume only trace-time values
+    (geometry + ``occupancy_hint``), never traced data, so one compiled
+    boundary has exactly one route: re-tracing with different data must
+    yield identical decisions.
+  * **Bitwise invariance** — the route changes the *schedule*, never the
+    bits: a chained conv→pool→conv→FC forward equals its per-layer
+    round-trip twin bitwise under every routing mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.costmodel import crossover as xover
+from repro.models.cnn import (CNNSpec, ConvSpec, FCSpec, PoolSpec,
+                              cnn_forward, init_cnn_params)
+
+KEY = jax.random.PRNGKey(7)
+
+#: The satellite contract: every boundary record that dispatched (chained,
+#: routed dense by choice, or visibly fell back) explains itself with
+#: exactly these fields (engine.api._route_fields).
+ROUTE_FIELDS = ("route", "est_event_cost", "est_dense_cost", "occupancy",
+                "route_source", "shape_class")
+
+
+def _x(shape, sparsity=0.3, seed=0):
+    r = np.random.default_rng(seed)
+    x = np.abs(r.normal(size=shape)).astype(np.float32) + 1e-3
+    return jnp.asarray(x * (r.random(shape) > sparsity))
+
+
+def _cfg(**kw):
+    kw.setdefault("backend", "block")
+    kw.setdefault("blk_m", 1)
+    kw.setdefault("blk_k", 8)
+    kw.setdefault("blk_n", 8)
+    return engine.EngineConfig(**kw)
+
+
+def _records(recs, op):
+    return [r for r in recs if r.get("op") == op]
+
+
+def _assert_schema(rec):
+    for f in ROUTE_FIELDS:
+        assert f in rec, f"boundary record missing routing field {f!r}: {rec}"
+    assert rec["route"] is not None
+    assert rec["est_event_cost"] > 0 and rec["est_dense_cost"] > 0
+    assert 0.0 <= rec["occupancy"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# schema: chained / routed_dense / fallback_decode all carry ROUTE_FIELDS
+# ---------------------------------------------------------------------------
+
+def test_schema_on_chained_conv_and_pool_and_linear():
+    cfg = _cfg(blk_m=engine.STRIP_W)
+    x = _x((1, 16, 16, 8))
+    w = _x((3, 3, 8, 8), sparsity=0.0, seed=1)
+    stream = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=True)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(stream, w, cfg=cfg, stride=1, padding=1)
+        pooled = engine.maxpool2d(
+            engine.fire_conv(y, cfg, blk_m=engine.STRIP_W), 2, 2, cfg=cfg)
+        fstream = engine.fire(pooled.dense_nhwc().reshape(1, -1)[:, :256],
+                              _cfg(blk_m=8, blk_k=32, blk_n=32))
+        engine.linear(fstream, _x((256, 16), sparsity=0.0, seed=2),
+                      cfg=_cfg(blk_m=8, blk_k=32, blk_n=32))
+    for op in ("conv2d", "maxpool2d", "linear"):
+        rs = _records(recs, op)
+        assert rs, f"no {op} boundary record"
+        for r in rs:
+            _assert_schema(r)
+            assert r.get("chained"), r
+            assert r["route"] in xover.EVENT_ROUTES
+            assert r["route_source"] == "geometry"    # auto mode
+
+
+def test_schema_on_routed_dense():
+    cfg = _cfg(blk_m=engine.STRIP_W, route="dense")
+    x = _x((1, 16, 16, 8))
+    w = _x((3, 3, 8, 8), sparsity=0.0, seed=1)
+    stream = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=True)
+    with engine.trace_dispatch() as recs:
+        engine.conv2d(stream, w, cfg=cfg, stride=1, padding=1)
+        engine.maxpool2d(stream, 2, 2, cfg=cfg)
+    for op in ("conv2d", "maxpool2d"):
+        (r,) = _records(recs, op)
+        _assert_schema(r)
+        assert r.get("routed_dense") and not r.get("fallback_decode"), r
+        assert r["route"] == "dense" and r["route_source"] == "forced"
+
+
+def test_schema_on_fallback_decode():
+    # Strip stream on strip-ineligible geometry (no padding, k=3: the strip
+    # kernel needs SAME-family alignment) — conv has no event path for it.
+    cfg = _cfg(blk_m=engine.STRIP_W)
+    assert not engine.strip_eligible(16, 3, 1, 0, co=8)
+    x = _x((1, 16, 16, 8))
+    w = _x((3, 3, 8, 8), sparsity=0.0, seed=1)
+    stream = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=True)
+    with engine.trace_dispatch() as recs:
+        engine.conv2d(stream, w, cfg=cfg, stride=1, padding=0)
+    (r,) = _records(recs, "conv2d")
+    _assert_schema(r)
+    assert r.get("fallback_decode"), r
+    assert r["route"] == "dense" and r["route_source"] == "geometry"
+
+    # Pool: magnitude fire emits negative events — the segment max is
+    # ineligible whatever the mode; the fallback record still explains
+    # itself with the routing schema.
+    mcfg = _cfg(blk_m=engine.STRIP_W, magnitude=True, threshold=0.1)
+    mstream = engine.fire_conv(jnp.asarray(
+        np.random.default_rng(3).normal(size=(1, 8, 8, 8)).astype(
+            np.float32)), mcfg, blk_m=engine.STRIP_W, keep_dense=True)
+    with engine.trace_dispatch() as recs:
+        engine.maxpool2d(mstream, 2, 2, cfg=mcfg)
+    (r,) = _records(recs, "maxpool2d")
+    _assert_schema(r)
+    assert r.get("fallback_decode") and r.get("reason"), r
+    assert r["route"] == "dense" and r["route_source"] == "geometry"
+
+
+# ---------------------------------------------------------------------------
+# forced routes: honored, and normalized to the achievable flavor
+# ---------------------------------------------------------------------------
+
+def test_forced_routes_honored_and_bitwise():
+    x = _x((1, 16, 16, 8))
+    base = _cfg(blk_m=engine.STRIP_W)
+    stream = engine.fire_conv(x, base, blk_m=engine.STRIP_W, keep_dense=True)
+    outs, routes = {}, {}
+    for route in ("window", "pixel", "dense"):
+        cfg = base.replace(route=route)
+        with engine.trace_dispatch() as recs:
+            outs[route] = engine.maxpool2d(stream, 2, 2,
+                                           cfg=cfg).dense_nhwc()
+        (r,) = _records(recs, "maxpool2d")
+        routes[route] = r["route"]
+        assert r["route_source"] == "forced"
+    assert routes == {"window": "window", "pixel": "pixel",
+                      "dense": "dense"}
+    ref = outs.pop("dense")
+    for route, y in outs.items():
+        assert bool(jnp.all(y == ref)), f"{route} pool != dense pool"
+
+
+def test_forced_flavor_normalizes_to_granularity():
+    # Forcing "strip" on a pixel-granular stream: the stream cannot ride
+    # the fused strip kernel, so the decision lands on the flavor that
+    # exists ("pixel") — visibly, with source still "forced".
+    x = _x((1, 16, 16, 8))
+    cfg = _cfg(blk_m=1, route="strip")
+    stream = engine.fire_conv(x, cfg, blk_m=1, keep_dense=True)
+    w = _x((3, 3, 8, 8), sparsity=0.0, seed=1)
+    with engine.trace_dispatch() as recs:
+        engine.conv2d(stream, w, cfg=cfg, stride=1, padding=1)
+    (r,) = _records(recs, "conv2d")
+    assert r["route"] == "pixel" and r["route_source"] == "forced"
+    assert r.get("chained") and not r.get("fallback_decode")
+
+
+# ---------------------------------------------------------------------------
+# adaptive: flips with occupancy, from both cost sources
+# ---------------------------------------------------------------------------
+
+def test_adaptive_flips_on_analytic_model():
+    # No table installed: the analytic seed routes event at low occupancy
+    # (skipped work dominates) and dense at full occupancy (the event path
+    # pays LAUNCH_OVERHEAD_CYCLES it can never win back).
+    prev = xover.set_active_table(None)
+    try:
+        lo = engine.route_conv((1, 16, 16, 8), (3, 3, 8, 8),
+                               _cfg(route="adaptive", occupancy_hint=0.02),
+                               stride=1, padding=1, blk_m=1)
+        hi = engine.route_conv((1, 16, 16, 8), (3, 3, 8, 8),
+                               _cfg(route="adaptive", occupancy_hint=1.0),
+                               stride=1, padding=1, blk_m=1)
+    finally:
+        xover.set_active_table(prev)
+    assert lo.route == "pixel" and lo.source == "model"
+    assert hi.route == "dense" and hi.source == "model"
+    assert lo.ratio < 1.0 < hi.ratio
+
+
+def test_adaptive_flips_on_installed_table():
+    # A synthetic measured table inverts the analytic seed's verdicts —
+    # proof the table has authority when it covers the boundary.
+    entries = [
+        dict(kind="crossover", boundary="conv", backend="block",
+             shape_class="k3s1", occupancy=0.02,
+             us=dict(pixel=500.0, dense=100.0)),
+        dict(kind="crossover", boundary="conv", backend="block",
+             shape_class="k3s1", occupancy=1.0,
+             us=dict(pixel=10.0, dense=100.0)),
+    ]
+    prev = xover.set_active_table(xover.CrossoverTable(entries))
+    try:
+        lo = engine.route_conv((1, 16, 16, 8), (3, 3, 8, 8),
+                               _cfg(route="adaptive", occupancy_hint=0.02),
+                               stride=1, padding=1, blk_m=1)
+        hi = engine.route_conv((1, 16, 16, 8), (3, 3, 8, 8),
+                               _cfg(route="adaptive", occupancy_hint=1.0),
+                               stride=1, padding=1, blk_m=1)
+    finally:
+        xover.set_active_table(prev)
+    assert lo.route == "dense" and lo.source == "table"
+    assert hi.route == "pixel" and hi.source == "table"
+
+
+def test_table_flavor_conditioning():
+    # The achievable flavor is granularity-bound: a strip boundary must be
+    # judged on strip time even when the pixel path is faster (the
+    # flavor-blind min would misroute it onto a slow strip twin).
+    entries = [dict(kind="crossover", boundary="conv", backend="block",
+                    shape_class="k3s1", occupancy=0.5,
+                    us=dict(strip=300.0, pixel=20.0, dense=100.0))]
+    t = xover.CrossoverTable(entries)
+    assert t.ratio("conv", 0.5, backend="block", shape_class="k3s1",
+                   flavor="strip") == pytest.approx(3.0)
+    assert t.ratio("conv", 0.5, backend="block", shape_class="k3s1",
+                   flavor="pixel") == pytest.approx(0.2)
+    # Flavor-blind lookup (no flavor kwarg) sees the best event flavor.
+    assert t.ratio("conv", 0.5, backend="block",
+                   shape_class="k3s1") == pytest.approx(0.2)
+    dec = xover.decide_route("adaptive", "conv", occupancy=0.5,
+                             event_route="strip", dense_macs=1e6,
+                             avg_touched=9.0, c_out=8, backend="block",
+                             shape_class="k3s1", table=t)
+    assert dec.route == "dense" and dec.source == "table"
+
+
+def test_pool_shape_class_is_channel_aware():
+    # Dense-pool cost scales with C at fixed k/stride: wide and narrow
+    # pooling boundaries must not share a crossover curve (a merged curve
+    # let the wide shape's event win misroute the narrow one).
+    dec = engine.route_pool((2, 16, 16, 128), 2, 2,
+                            _cfg(blk_m=engine.STRIP_W),
+                            blk_m=engine.STRIP_W)
+    assert dec is not None
+    x = _x((2, 16, 16, 128))
+    cfg = _cfg(blk_m=engine.STRIP_W)
+    stream = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=True)
+    with engine.trace_dispatch() as recs:
+        engine.maxpool2d(stream, 2, 2, cfg=cfg)
+    (r,) = _records(recs, "maxpool2d")
+    assert r["shape_class"] == "k2s2c128"
+
+
+# ---------------------------------------------------------------------------
+# zero-event streams: the event route short-circuits, no dense fallback
+# ---------------------------------------------------------------------------
+
+def test_zero_event_stream_stays_event():
+    cfg = _cfg(blk_m=engine.STRIP_W, route="adaptive", occupancy_hint=0.0)
+    stream = engine.fire_conv(jnp.zeros((1, 16, 16, 8), jnp.float32), cfg,
+                              blk_m=engine.STRIP_W, keep_dense=False)
+    assert int(jnp.sum(stream.events.counts)) == 0
+    w = _x((3, 3, 8, 8), sparsity=0.0, seed=1)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(stream, w, cfg=cfg, stride=1, padding=1)
+    (r,) = _records(recs, "conv2d")
+    assert r["route"] in xover.EVENT_ROUTES and r.get("chained"), r
+    assert not any(x.get("fallback_decode") for x in recs), recs
+    assert bool(jnp.all(y == 0.0)), "zero events must produce exact zeros"
+
+
+# ---------------------------------------------------------------------------
+# staticness: decisions depend on cfg + geometry, never on traced data
+# ---------------------------------------------------------------------------
+
+def test_route_decisions_jit_deterministic():
+    cfg = _cfg(blk_m=engine.STRIP_W, route="adaptive", occupancy_hint=0.4)
+    w = _x((3, 3, 8, 8), sparsity=0.0, seed=1)
+
+    def fwd(s):
+        return engine.conv2d(s, w, cfg=cfg, stride=1, padding=1)
+
+    routes = []
+    for sparsity in (0.0, 0.95):   # wildly different *data* occupancy
+        s = engine.fire_conv(_x((1, 16, 16, 8), sparsity=sparsity), cfg,
+                             blk_m=engine.STRIP_W, keep_dense=True)
+        with engine.trace_dispatch() as recs:
+            # A fresh closure per trace: jax.eval_shape caches on
+            # (function identity, avals) and a cache hit records nothing.
+            jax.eval_shape(lambda ss: fwd(ss), s)
+        routes.append([(r["route"], r["route_source"], r["occupancy"])
+                       for r in _records(recs, "conv2d")])
+        assert routes[-1], "dispatch trace recorded no conv2d boundary"
+    assert routes[0] == routes[1], \
+        "route flipped on traced data — decisions must be trace-time static"
+    # And the jaxpr is data-independent too: one compiled boundary, one
+    # route (jit caching can never flip it).
+    s0 = engine.fire_conv(_x((1, 16, 16, 8), sparsity=0.0), cfg,
+                          blk_m=engine.STRIP_W, keep_dense=True)
+    s1 = engine.fire_conv(_x((1, 16, 16, 8), sparsity=0.95), cfg,
+                          blk_m=engine.STRIP_W, keep_dense=True)
+    assert str(jax.make_jaxpr(fwd)(s0)) == str(jax.make_jaxpr(fwd)(s1))
+
+
+# ---------------------------------------------------------------------------
+# bitwise invariance: the route never changes the bits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("route,hint", [
+    ("auto", None), ("adaptive", 0.05), ("adaptive", 1.0), ("dense", None)])
+def test_chain_bitwise_under_every_route(route, hint):
+    spec = CNNSpec("route-prop", 16, 3,
+                   (ConvSpec(8, 3, 1, 1), PoolSpec(2, 2),
+                    ConvSpec(8, 3, 2, 1), FCSpec(16)), num_classes=8)
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(_x((1, 16, 16, 3), sparsity=0.4, seed=11))
+    cfg = engine.EngineConfig(backend="block", route=route,
+                              occupancy_hint=hint)
+    with engine.trace_dispatch() as recs:
+        ym = cnn_forward(params, x, spec, mnf=True, chain=True,
+                         engine_cfg=cfg)
+    assert not any(r.get("fallback_decode") for r in recs), recs
+    for r in recs:
+        if r.get("route") is not None:
+            _assert_schema(r)
+    yr = cnn_forward(params, x, spec, mnf=True, chain=False, engine_cfg=cfg)
+    assert bool(jnp.all(ym == yr)), \
+        f"chained != round-trip under route={route} hint={hint}"
+    yd = cnn_forward(params, x, spec, mnf=False)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
+                               rtol=5e-3)
+
+
+def test_adaptive_routes_match_forced_executables():
+    # The adaptive executable IS the chosen static route's executable:
+    # trace the adaptive decision, then require jaxpr identity with the
+    # same boundary forced to that route (the sweep's noise-immune
+    # equivalence, pinned here as a unit test).
+    base = _cfg(blk_m=engine.STRIP_W)
+    x = _x((1, 16, 16, 8))
+    stream = engine.fire_conv(x, base, blk_m=engine.STRIP_W,
+                              keep_dense=True)
+    for hint in (0.05, 1.0):
+        acfg = base.replace(route="adaptive", occupancy_hint=hint)
+
+        def fwd(s, cfg=acfg):
+            return engine.maxpool2d(s, 2, 2, cfg=cfg).dense_nhwc()
+
+        with engine.trace_dispatch() as recs:
+            jax.eval_shape(fwd, stream)
+        (r,) = _records(recs, "maxpool2d")
+        fcfg = base.replace(route=r["route"])
+
+        def forced(s, cfg=fcfg):
+            return engine.maxpool2d(s, 2, 2, cfg=cfg).dense_nhwc()
+
+        assert str(jax.make_jaxpr(fwd)(stream)) \
+            == str(jax.make_jaxpr(forced)(stream))
