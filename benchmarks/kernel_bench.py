@@ -268,8 +268,9 @@ def pool_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=3):
 def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                     reps=3):
     """Fused strip-tiled conv (one launch per layer) vs the per-tap chained
-    path, matched shapes, per backend (conv_fused entries) — stride-1 and
-    stride-2 rows (the interleaved half-strip downsampling plan).
+    path, matched shapes, per backend (conv_fused entries) — stride-1,
+    stride-2 and stride-4 rows (the N-part interleaved straddle plan,
+    k11s4 being the AlexNet conv1 class: 121 launches fused into 1).
 
     Same events in, same outputs (bit-exact): the difference is purely one
     fused launch over an 8x-smaller strip event grid vs k*k re-dispatches
@@ -284,12 +285,15 @@ def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
     from repro.kernels.event_conv import fused_conv_plan
 
     rng = np.random.default_rng(0)
-    # (B, H, W, CI, CO, k, padding, stride) — stride-2 rows are the
-    # downsampling-conv class the interleaved half-strip plan covers.
-    shapes = [(1, 8, 8, 8, 8, 3, 1, 1), (1, 8, 16, 8, 8, 3, 1, 2)]
+    # (B, H, W, CI, CO, k, padding, stride) — stride-2/4 rows are the
+    # downsampling-conv classes the interleaved straddle plan covers; the
+    # k11s4 row is AlexNet conv1's shape class (5 straddle parts,
+    # 561/605 live subtaps after dead-part compaction).
+    shapes = [(1, 8, 8, 8, 8, 3, 1, 1), (1, 8, 16, 8, 8, 3, 1, 2),
+              (1, 8, 32, 8, 8, 3, 1, 4)]
     if not smoke:
         shapes += [(2, 16, 16, 8, 16, 3, 1, 1), (2, 9, 16, 8, 16, 5, 2, 2),
-                   (1, 9, 16, 8, 8, 1, 0, 2)]
+                   (1, 9, 16, 8, 8, 1, 0, 2), (1, 11, 32, 8, 8, 11, 4, 4)]
     entries = []
     for (b, h, w0, ci, co, k, p, st) in shapes:
         x = rng.normal(size=(b, h, w0, ci)).astype(np.float32)
@@ -335,6 +339,9 @@ def conv_fused_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                 bit_exact=bool(jnp.all(yf == yp)),
                 launches_fused=plan["launches_fused"],
                 launches_per_tap=plan["launches_per_tap"],
+                subtaps=plan["subtaps"],
+                subtaps_worst=plan["subtaps_worst"],
+                compaction=round(plan["compaction"], 3),
                 event_grid_strip=plan["event_grid_strip"],
                 event_grid_pixel=plan["event_grid_pixel"],
                 grid_reduction=plan["grid_reduction"],
@@ -354,22 +361,32 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
     boundaries vs a dense materialize + re-encode at every boundary.
     ``boundaries`` records where each compiled graph densifies.
     """
-    from repro.models.cnn import (ALEXNET, ALEXNET_DS, VGG16, VGG16_DS,
-                                  ConvSpec, FCSpec, PoolSpec,
+    from repro.core import events as ev
+    from repro.models.cnn import (ALEXNET, ALEXNET_DS, ALEXNET_FF, MINI_S4,
+                                  VGG16, VGG16_DS,
+                                  ConvSpec, FCSpec, FireConfig, PoolSpec,
+                                  _input_stream_blk_m, _layer_cfg,
                                   _trace_shapes, chain_boundary_summary,
                                   cnn_forward, init_cnn_params,
                                   make_cnn_pipeline)
 
-    # AlexNet@64 has no strip-eligible layer (stride-4 conv1, W=7/3 tails);
+    # AlexNet@64 keeps no strip-eligible interior layer (W=7/3 tails);
     # VGG16@32 runs six of its twelve chained convs on the fused strip path.
-    # The _ds variants replace pools with stride-2 conv blocks: their
-    # downsampling convs ride the fused stride-2 strip path too (VGG16_DS@32
+    # The _ds variants replace pools with stride-2 conv blocks (VGG16_DS@32
     # fuses 8/17 chained convs, ALEXNET_DS@68 both of its eligible layers).
-    nets = ([(_smoke_spec(), 8), (_smoke_ds_spec(), 16)] if smoke
-            else [(ALEXNET, 64), (VGG16, 32), (ALEXNET_DS, 68),
-                  (VGG16_DS, 32)])
+    # ALEXNET_FF@256 is the fully-fused demonstration: every conv —
+    # including the stride-4 k=11 head, strip-encoded straight off the
+    # dense image — runs 1 launch (conv1: 1 vs 121); batch 1 keeps the
+    # 121-launch round-trip twin affordable on the CPU harness.  MINI_S4@32
+    # is its smoke twin: a stride-4 mid-layer that must ride the fused
+    # path (fallback_decode there fails CI).
+    nets = ([(_smoke_spec(), 8, batch), (_smoke_ds_spec(), 16, batch),
+             (MINI_S4, 32, batch)] if smoke
+            else [(ALEXNET, 64, batch), (VGG16, 32, batch),
+                  (ALEXNET_DS, 68, batch), (VGG16_DS, 32, batch),
+                  (ALEXNET_FF, 256, 1)])
     entries = []
-    for spec, size in nets:
+    for spec, size, batch in nets:
         spec = spec.scaled(size)
         n_conv = sum(isinstance(l, ConvSpec) for l in spec.layers)
         n_fc = sum(isinstance(l, FCSpec) for l in spec.layers)
@@ -411,29 +428,59 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                 f"pool — a conv→pool→conv boundary silently densified")
 
         # Per-layer launch accounting (taps fused vs per-tap): the strip
-        # layers of the chained graph run 1 launch each, everything else
+        # layers of the chained graph run 1 launch each — including a
+        # dense-input conv whose input the chain strip-encodes
+        # (_input_stream_blk_m, the AlexNet-head case) — everything else
         # (incl. the whole round-trip twin) pays k*k per conv layer.
+        # Strip layers carry their compacted-vs-worst-case subtap counts
+        # (dead straddle parts dropped at plan time).
         shapes = _trace_shapes(spec)
-        per_layer, compute_idx = [], 0
+        conv_base = _layer_cfg(None, mnf=True, fire_cfg=FireConfig())
+        conv_base = conv_base.replace(blk_m=1,
+                                      blk_k=min(8, conv_base.blk_k))
+        per_layer, stream_in, dense_head_launches = [], False, 0
         for i, layer in enumerate(spec.layers):
-            if not isinstance(layer, ConvSpec):
+            h_in, w_in, c_in = shapes[i]
+            if isinstance(layer, FCSpec):
+                stream_in = False          # FC ends the conv chain
                 continue
-            h_in, w_in, _ = shapes[i]
-            strip = bool(compute_idx > 0 and engine.strip_eligible(
-                w_in, layer.k, layer.stride, layer.padding,
-                co=layer.out_ch))
-            per_layer.append(dict(
+            if isinstance(layer, PoolSpec):
+                # an ineligible pool densifies the chain (dense fallback)
+                stream_in = stream_in and engine.pool_ineligible_reason(
+                    (batch, h_in, w_in, c_in), layer.k, layer.stride,
+                    conv_base) is None
+                continue
+            if stream_in:
+                strip = bool(engine.strip_eligible(
+                    w_in, layer.k, layer.stride, layer.padding,
+                    co=layer.out_ch))
+            else:
+                # dense input (chain head / densified seam): strip only
+                # when the chain strip-encodes it for the fused kernel
+                strip = bool(_input_stream_blk_m(
+                    layer, (batch, h_in, w_in, c_in), conv_base))
+            if not (stream_in or strip):
+                dense_head_launches += layer.k ** 2
+            entry = dict(
                 layer=i, k=layer.k, w_in=w_in, strip=strip,
                 launches_chained=1 if strip else layer.k ** 2,
-                launches_roundtrip=layer.k ** 2))
-            compute_idx += 1
+                launches_roundtrip=layer.k ** 2)
+            if strip:
+                subtaps, worst = ev.strip_subtap_counts(
+                    layer.k, layer.padding, layer.stride)
+                entry.update(subtaps=subtaps, subtaps_worst=worst,
+                             compaction=round(subtaps / worst, 3))
+            per_layer.append(entry)
+            stream_in = True
         launches = dict(
             per_layer=per_layer,
             chained_total=sum(l["launches_chained"] for l in per_layer),
             roundtrip_total=sum(l["launches_roundtrip"] for l in per_layer))
-        # the first conv consumes the dense image (no chained record), so
-        # trace-derived launches cover all but its k*k
-        want = launches["chained_total"] - per_layer[0]["launches_chained"]
+        # convs consuming a dense input dispatch on the dense per-tap path
+        # (no chained record) unless the chain strip-encoded that input —
+        # strip-encoded heads do produce a chained record, so only
+        # dense-input non-strip convs are excluded from the traced total
+        want = launches["chained_total"] - dense_head_launches
         got = counts["chained"]["chained_conv_launches"]
         if got != want:
             raise RuntimeError(
@@ -479,6 +526,7 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
                 # (ineligible geometry — 0 on both paper workloads);
                 # roundtrip: every boundary is dense.
                 chained=dict(densify=summary["densify"],
+                             input_encode=summary["input_encode"],
                              **counts["chained"]),
                 roundtrip=dict(densify=n_conv + n_fc + n_pool - 1,
                                **counts["roundtrip"]))))
@@ -764,10 +812,13 @@ def sweep_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=5):
     # -- conv boundaries: strip vs pixel vs dense ---------------------------
     # (B, H, W, CI, CO, k, padding, stride); the second row is the measured
     # losing shape (1×1/stride-2 — taps touch 1/4 of the map, event
-    # overhead can't amortize) the adaptive router must route dense.
+    # overhead can't amortize) the adaptive router must route dense; the
+    # k3s4 row calibrates the stride-4 straddle-plan class (5 parts,
+    # dead-subtap-compacted grid) the AlexNet-head boundary prices.
     conv_shapes = [(2, 16, 16, 8, 16, 3, 1, 1)]
     if not smoke:
-        conv_shapes.append((1, 9, 16, 8, 8, 1, 0, 2))
+        conv_shapes += [(1, 9, 16, 8, 8, 1, 0, 2),
+                        (1, 8, 32, 8, 8, 3, 1, 4)]
     for (b, h, w0, ci, co, k, p, st) in conv_shapes:
         wgt = jnp.asarray(rng.normal(size=(k, k, ci, co)).astype(np.float32))
         cfg = engine.EngineConfig(backend="block", blk_m=1, blk_k=8,
@@ -1028,7 +1079,7 @@ def route_gate(out_path: str = "BENCH_engine.json"):
     trace-time static, so ``jax.eval_shape`` under the dispatch tracer
     sees exactly what a compiled graph would do."""
     from repro.costmodel import crossover as xover
-    from repro.models.cnn import init_cnn_params, make_cnn_forward
+    from repro.models.cnn import MINI_S4, init_cnn_params, make_cnn_forward
 
     table = xover.load_crossover_table(out_path)
     if not len(table):
@@ -1039,7 +1090,8 @@ def route_gate(out_path: str = "BENCH_engine.json"):
     prev = xover.set_active_table(table)
     try:
         records = []
-        for spec, size in ((_smoke_spec(), 8), (_smoke_ds_spec(), 16)):
+        for spec, size in ((_smoke_spec(), 8), (_smoke_ds_spec(), 16),
+                           (MINI_S4, 32)):
             spec = spec.scaled(size)
             params = init_cnn_params(jax.random.PRNGKey(0), spec,
                                      weight_sparsity=0.5)
@@ -1106,7 +1158,9 @@ def main():
                          "the fast CI subset")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: 1-rep kernel microbench + engine "
-                         "sweep + mini-net cnn chain + one conv_fused and "
+                         "sweep + mini-net cnn chains (incl. a stride-4 "
+                         "net whose mid-layer must ride the fused straddle "
+                         "plan) + stride-1/2/4 conv_fused shapes and "
                          "one pool shape + a mini serving replica — keeps "
                          "every benchmark path from rotting and fails on "
                          "strip-layer or pool-boundary fallback_decode, "

@@ -44,6 +44,9 @@ __all__ = [
     "scalar_event_rows",
     "strip_eligible",
     "strip_ineligible_reason",
+    "strip_parts",
+    "strip_shift_live",
+    "strip_subtap_counts",
     "strip_tap_map",
 ]
 
@@ -277,10 +280,51 @@ STRIP_CO_MIN = 8
 
 
 #: Strides the strip plan covers: output pixel x maps affinely to input
-#: pixel stride*x, so each tap gathers at most stride + 1 straddle parts
-#: (two adjacent-strip halves at stride 1; up to three interleaved
-#: half-strips — 4 same-parity pixels each — at stride 2).
-STRIP_STRIDES = (1, 2)
+#: pixel stride*x, so each tap gathers at most ``strip_parts(stride)``
+#: straddle parts (two adjacent-strip halves at stride 1; up to three
+#: interleaved half-strips — 4 same-parity pixels each — at stride 2; up
+#: to five quarter-strips — 2 same-residue pixels each — at stride 4, the
+#: AlexNet conv1 case).  The plan math is stride-generic; this tuple is
+#: the *validated* set (each member carries a bitwise strip == per-tap
+#: test suite), not a structural limit.
+STRIP_STRIDES = (1, 2, 4)
+
+
+def strip_parts(stride: int) -> int:
+    """Worst-case straddle parts per tap at ``stride``.
+
+    Output row i of a strip reads input pixel ``stride*i + s`` (s the tap
+    x-offset), so the 8 sources span ``7*stride + 1`` pixels and touch at
+    most ``(7*stride + STRIP_W - 1)//STRIP_W + 1`` input strips.  Equals
+    ``stride + 1`` for every stride in STRIP_STRIDES.
+    """
+    return ((STRIP_W - 1) * stride + STRIP_W - 1) // STRIP_W + 1
+
+
+def strip_shift_live(shift: int, stride: int) -> bool:
+    """True iff the affine row map ``out row i <- src row stride*i + shift``
+    sources at least one row in [0, STRIP_W).  Depends only on (shift,
+    stride) — never on the output strip — which is what makes dead
+    straddle parts *columns* of the plan, droppable at plan time."""
+    return any(0 <= stride * i + shift < STRIP_W for i in range(STRIP_W))
+
+
+def strip_subtap_counts(k: int, padding: int, stride: int) -> tuple[int, int]:
+    """(compacted, worst-case) subtap column counts of a strip conv plan.
+
+    ``worst = strip_parts(stride) * k * k`` is the uncompacted grid the
+    pre-compaction kernels launched; ``compacted`` keeps only parts whose
+    affine row map sources a row (``strip_shift_live``).  Pure arithmetic
+    twin of :func:`strip_tap_map`'s column enumeration — engine traces and
+    benches report both without building a plan.
+    """
+    parts = strip_parts(stride)
+    live = 0
+    for dx in range(k):
+        r = (dx - padding) % STRIP_W
+        live += sum(strip_shift_live(r - j * STRIP_W, stride)
+                    for j in range(parts))
+    return live * k, parts * k * k
 
 
 def strip_ineligible_reason(width: int, k: int, stride: int, padding: int,
@@ -288,20 +332,25 @@ def strip_ineligible_reason(width: int, k: int, stride: int, padding: int,
     """Why a conv layer cannot consume a strip-aligned stream (None = it can).
 
     Strip tiling (blk_m == STRIP_W) needs every tap's strided slice to be
-    an affine row remap of at most stride + 1 straddle parts: stride in
-    STRIP_STRIDES (output pixel x maps to input pixel stride*x + dx - p,
-    so the 8 sources of one output strip interleave with step ``stride``),
-    input and output widths tiling into whole strips, padding at most
-    k // 2 (so output strips never outnumber the input strips the straddle
-    plan pairs them with), and tap x-offsets within one strip of the
-    origin.  When the output-channel count ``co`` is known it must be a
-    multiple of STRIP_CO_MIN (see its note) so strip == per-tap stays
-    bitwise.
+    an affine row remap of at most ``strip_parts(stride)`` straddle parts:
+    stride in STRIP_STRIDES (output pixel x maps to input pixel
+    stride*x + dx - p, so the 8 sources of one output strip interleave
+    with step ``stride``), input and output widths tiling into whole
+    strips, padding at most k // 2 (so output strips never outnumber the
+    input strips the straddle plan pairs them with), and tap x-offsets
+    within one strip of the origin.  When the output-channel count ``co``
+    is known it must be a multiple of STRIP_CO_MIN (see its note) so
+    strip == per-tap stays bitwise.
+
+    Every message is derived from STRIP_STRIDES / STRIP_W / STRIP_CO_MIN —
+    never a hardcoded stride set — so extending STRIP_STRIDES can't ship a
+    stale error message (``test_strip_ineligible_reason_message_table``
+    pins the rendered strings against the same constants).
     """
     if stride not in STRIP_STRIDES:
         return (f"stride {stride} not in {set(STRIP_STRIDES)} (strip plans "
-                f"gather at most stride + 1 interleaved straddle parts per "
-                f"tap)")
+                f"gather up to (7*stride + 7)//8 + 1 interleaved straddle "
+                f"parts per tap; only these strides are validated bitwise)")
     out_w = (width + 2 * padding - k) // stride + 1
     if width <= 0 or width % STRIP_W:
         return f"input width {width} not a multiple of STRIP_W={STRIP_W}"
@@ -333,32 +382,48 @@ def strip_eligible(width: int, k: int, stride: int, padding: int,
 
 def strip_tap_map(logical_shape: tuple, k: int, padding: int,
                   stride: int = 1):
-    """Static subtap gather plan for the fused strip conv (DESIGN.md §6).
+    """Static *compacted* subtap gather plan for the fused strip conv
+    (DESIGN.md §6).
 
-    For each output strip and each of the (stride+1)*k*k subtaps (tap
-    (dy, dx) split into its stride + 1 straddle parts), the plan names the
-    source strip group and the in-tile affine row map that realize the
-    tap's strided slice:
+    For each output strip and each live subtap (tap (dy, dx) split into
+    its straddle parts, dead parts dropped — see below), the plan names
+    the source strip group and the in-tile affine row map that realize
+    the tap's strided slice:
 
       src   (G_out, T) int32  source strip group (clamped when dead)
-      live  (G_out, T) bool   False = no source (zero-padding border / dead part)
+      live  (G_out, T) bool   False = no source (zero-padding border)
       shift (T,)       int32  signed row offset d: out row i <- src row
                               stride*i + d
       tap   (T,)       int32  flat filter index dy*k + dx of the subtap
 
-    At stride 1 a tap splits into the familiar two adjacent-strip halves
-    (d = (dx-p) mod 8 and d - 8).  At stride 2 output row i reads input
-    pixel 16*sx + 2i + (dx-p): the 8 same-parity sources span 15 input
-    pixels, i.e. up to three strips, each contributing an *interleaved
-    half-strip* (at most 4 of its rows, step 2) — parts d = r, r - 8,
-    r - 16 with r = (dx-p) mod 8.  Parts whose affine map sources no row
-    in [0, 8) are marked dead (the consumer idles on them).
+    Output row i of strip (b, oy, sx) reads input pixel
+    ``8*stride*sx + stride*i + s`` for tap x-offset s = dx - p: the 8
+    sources span ``7*stride + 1`` pixels, i.e. up to
+    ``strip_parts(stride)`` input strips, part j contributing the rows
+    its affine map ``out row i <- src row stride*i + d`` (d = s%8 - 8j)
+    lands inside [0, 8).  At stride 1 that is the familiar two
+    adjacent-strip halves; at stride 2, up to three interleaved
+    half-strips (4 same-parity pixels each); at stride 4, up to five
+    quarter-strips (2 same-residue pixels each — AlexNet conv1).
 
-    Subtaps are ordered tap-major (dy, dx ascending — the per-tap oracle's
-    loop order), straddle parts left-to-right, so a consumer accumulating
-    in plan order reproduces the per-tap reduction tree bit-for-bit.
-    Everything here is shape-derived — plain numpy, evaluated at trace
-    time.
+    **Dead-subtap compaction**: a part whose (d, stride) sources no row
+    is dead for *every* output strip (``strip_shift_live`` depends on the
+    shift alone), so its column is dropped from the plan instead of
+    carried as an always-idle grid step — r == 0 taps lose their second
+    half at stride 1, r < 2 taps their third part at stride 2, r < 4
+    taps their fifth part at stride 4.  T is therefore the *compacted*
+    count ``strip_subtap_counts(k, padding, stride)[0]`` <= worst-case
+    ``strip_parts(stride)*k*k``, and consumers size their inner grid by
+    the plan they are handed.  Dropping a dead column only removes
+    additions of exact zeros from fixed reduction slots, so the
+    compacted plan stays bit-identical to the uncompacted one (and to
+    the per-tap oracle).
+
+    Subtaps are ordered tap-major (dy, dx ascending — the per-tap
+    oracle's loop order), surviving straddle parts left-to-right, so a
+    consumer accumulating in plan order reproduces the per-tap reduction
+    tree bit-for-bit.  Everything here is shape-derived — plain numpy,
+    evaluated at trace time.
     """
     import numpy as np
 
@@ -378,8 +443,8 @@ def strip_tap_map(logical_shape: tuple, k: int, padding: int,
     sx = gidx % nsx_out
     oy = (gidx // nsx_out) % oh
     bb = gidx // (nsx_out * oh)
-    parts = stride + 1
-    t_n = parts * k * k
+    parts = strip_parts(stride)
+    t_n, t_worst = strip_subtap_counts(k, padding, stride)
     src = np.zeros((g_out, t_n), np.int32)
     live = np.zeros((g_out, t_n), bool)
     shift = np.zeros((t_n,), np.int32)
@@ -392,18 +457,18 @@ def strip_tap_map(logical_shape: tuple, k: int, padding: int,
             base = stride * sx + (s // STRIP_W)    # first straddled strip
             r = s % STRIP_W                        # in-strip row offset
             for j in range(parts):
-                tx = base + j
                 d = r - j * STRIP_W
+                if not strip_shift_live(d, stride):
+                    continue                       # dead part: column dropped
+                tx = base + j
                 ok = (iy >= 0) & (iy < h) & (tx >= 0) & (tx < nsx_in)
-                if not any(0 <= stride * i + d < STRIP_W
-                           for i in range(STRIP_W)):
-                    ok = np.zeros_like(ok)         # dead part: sources no row
                 src[:, t] = ((bb * h + np.clip(iy, 0, h - 1)) * nsx_in
                              + np.clip(tx, 0, nsx_in - 1)).astype(np.int32)
                 live[:, t] = ok
                 shift[t] = d
                 tap[t] = dy * k + dx
                 t += 1
+    assert t == t_n <= t_worst, (t, t_n, t_worst)
     return src, live, shift, tap
 
 

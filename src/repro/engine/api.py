@@ -201,8 +201,10 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
     materialized (DESIGN.md §5).  A strip-aligned stream (blk_m == STRIP_W)
     on a strip-eligible layer rides ``conv2d_events_strip`` — the fused-tap
     path: one kernel launch for the whole layer, event grid STRIP_W-fold
-    smaller (DESIGN.md §6); stride-2 downsampling convs ride it too, each
-    tap gathering interleaved half-strips (``core.events.STRIP_STRIDES``).
+    smaller (DESIGN.md §6); downsampling convs (stride 2 and AlexNet's
+    stride-4 conv1 alike) ride it too, each tap gathering interleaved
+    partial strips (``core.events.STRIP_STRIDES``), dead straddle parts
+    compacted out of the inner grid at plan time.
     A pixel-granular stream takes the per-tap ``conv2d_events`` path (k·k
     row-group gathers — the oracle the fused kernel is bit-exact against).
     Backends without the matching event op, and strip streams whose
@@ -233,8 +235,14 @@ def conv2d(x, w: jax.Array, b: jax.Array | None = None,
                              padding=padding, blk_m=x.blk_m)
             fields = _route_fields(dec, f"k{k}s{stride}")
             if dec.route == "strip":
+                # Compacted inner-grid accounting rides every strip record
+                # (the BENCH per-layer compaction column reads these).
+                subtaps, subtaps_worst = ev.strip_subtap_counts(
+                    k, padding, stride)
                 trace.record(op="conv2d", backend=name, chained=True,
                              strip=True, launches=1, stride=stride,
+                             subtaps=subtaps, subtaps_worst=subtaps_worst,
+                             compaction=subtaps / subtaps_worst,
                              **fields)
                 return get_backend("conv2d_events_strip", name)(
                     x, w, b, cfg, stride, padding)

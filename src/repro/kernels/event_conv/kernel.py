@@ -16,20 +16,27 @@ the indirection through BlockSpec index maps:
                              event's direct weight address offset into its
                              tap's slab.
 
-Grid (G_out, N/bn, T, E), T = (stride+1)*k*k subtaps (each tap split into
-its stride + 1 strip-straddle parts: two adjacent-strip halves at stride 1,
-up to three interleaved half-strips at stride 2), E innermost.  Per subtap
-a scratch ``tap_acc`` accumulates events exactly like the per-tap
-``event_matmul`` kernel does, then flushes into the layer accumulator —
-reproducing the per-tap oracle's reduction tree bit-for-bit (the straddle
-part that does not source a given output row contributes exact zeros).
-The in-tile affine row remap of a straddling tap (out row i <- src row
-stride*i + d) is applied as a 0/1 selection matmul (``sel @ a``), which
-moves rows exactly (no rounding) and rides the MXU.
+Grid (G_out, N/bn, T, E), T the **compacted** subtap count of the plan
+(``strip_subtap_counts(k, p, stride)[0]``): each tap splits into its
+``strip_parts(stride)`` strip-straddle parts — two adjacent-strip halves at
+stride 1, up to three interleaved half-strips at stride 2, up to five
+quarter-strips at stride 4 — and parts whose affine map sources no row are
+*dropped from the plan* rather than idled over, so the inner grid axis
+shrinks from ``strip_parts(stride)*k*k`` toward ``k*k``.  E innermost.
+Per subtap a scratch ``tap_acc`` accumulates events exactly like the
+per-tap ``event_matmul`` kernel does, then flushes into the layer
+accumulator — reproducing the per-tap oracle's reduction tree bit-for-bit
+(the straddle part that does not source a given output row contributes
+exact zeros).  The in-tile affine row remap of a straddling tap (out row
+i <- src row stride*i + d) is applied as a 0/1 selection matmul
+(``sel @ a``), which moves rows exactly (no rounding) and rides the MXU;
+``remap="select"`` swaps in an 8-step vselect ladder (broadcast row m,
+select where stride*i + d == m) — same exact row moves on the VPU, kept
+for the Mosaic lowering cost comparison recorded in DESIGN.md §6.
 
 ``@pl.when(e < cnt[g, t])`` idles the unit on padded event slots and on
-dead subtaps (zero-padding border, parts whose affine map sources no row) —
-the paper's low-power idle, now covering the whole tap loop of a layer.
+border subtaps (zero-padding reads outside the map) — the paper's
+low-power idle, now covering the whole tap loop of a layer.
 """
 from __future__ import annotations
 
@@ -48,7 +55,7 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
                       a_vals_ref, w_ref,       # VMEM inputs
                       out_ref,                 # VMEM output
                       acc_ref, tap_acc_ref,    # VMEM scratch (bm, bn) f32
-                      *, row_stride: int = 1):
+                      *, row_stride: int = 1, remap: str = "matmul"):
     g = pl.program_id(0)
     t = pl.program_id(2)
     e = pl.program_id(3)
@@ -69,11 +76,22 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
         bm = a.shape[0]
         d = shift_ref[t]
         # Exact affine row remap: out row i <- src row row_stride*i + d
-        # (0/1 selection matmul; stride 2 picks the interleaved half-strip).
-        i = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
-        j = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
-        sel = (j == i * row_stride + d).astype(a.dtype)
-        shifted = jnp.dot(sel, a, preferred_element_type=jnp.float32)
+        # (strided straddle parts pick their interleaved partial strip).
+        if remap == "select":
+            # vselect ladder: bm row-broadcasts + masked selects (VPU).
+            want = (jax.lax.broadcasted_iota(jnp.int32, (bm, a.shape[1]), 0)
+                    * row_stride + d)
+            shifted = jnp.zeros(a.shape, jnp.float32)
+            for m in range(bm):
+                row = jax.lax.broadcast_in_dim(a[m].astype(jnp.float32),
+                                               a.shape, (1,))
+                shifted = jnp.where(want == m, row, shifted)
+        else:
+            # 0/1 selection matmul: one (bm, bm) @ (bm, bk) MXU op.
+            i = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+            j = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+            sel = (j == i * row_stride + d).astype(a.dtype)
+            shifted = jnp.dot(sel, a, preferred_element_type=jnp.float32)
         tap_acc_ref[...] += jnp.dot(shifted, w_ref[...],
                                     preferred_element_type=jnp.float32)
 
@@ -89,27 +107,33 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("nkb", "blk_n", "row_stride",
-                                             "interpret", "out_dtype"))
+                                             "interpret", "out_dtype",
+                                             "remap"))
 def event_conv_pallas(a_vals: jax.Array, a_idx: jax.Array, tap: jax.Array,
                       shift: jax.Array, src: jax.Array, cnt: jax.Array,
                       ws: jax.Array, *, nkb: int, blk_n: int = 128,
                       row_stride: int = 1, interpret: bool = False,
-                      out_dtype=jnp.float32) -> jax.Array:
+                      out_dtype=jnp.float32, remap: str = "matmul") -> jax.Array:
     """One fused launch: y[g] = sum_t sum_e remap_t(a[src[g,t], e]) @ W_tile.
 
     a_vals/a_idx: strip-encoded events (G_in, E, bm, bk) / (G_in, E).
-    tap/shift: (T,) subtap plan, T = (row_stride+1)*k*k; src/cnt: (G_out, T)
-    source strip + live event count per (output strip, subtap).  ws:
-    tap-stacked weights (k*k*nkb*bk, N), N a multiple of blk_n.
-    ``row_stride`` is the conv stride: out row i reads src row
-    row_stride*i + shift[t].  Returns (G_out, bm, N).
+    tap/shift: (T,) subtap plan, T the plan's **compacted** subtap count
+    (dead straddle parts already dropped — the grid axis is sized by the
+    plan handed in, not the worst case); src/cnt: (G_out, T) source strip
+    + live event count per (output strip, subtap).  ws: tap-stacked
+    weights (k*k*nkb*bk, N), N a multiple of blk_n.  ``row_stride`` is
+    the conv stride: out row i reads src row row_stride*i + shift[t].
+    ``remap`` picks the in-tile row-remap lowering ("matmul" | "select" —
+    bit-identical; see the kernel docstring).  Returns (G_out, bm, N).
     """
     g_in, e, bm, bk = a_vals.shape
     g_out, t_n = src.shape
     rows, n = ws.shape
-    assert t_n % (row_stride + 1) == 0, (t_n, row_stride)
-    assert rows == (t_n // (row_stride + 1)) * nkb * bk, \
-        (ws.shape, t_n, nkb, bk, row_stride)
+    assert remap in ("matmul", "select"), remap
+    assert rows % (nkb * bk) == 0, (ws.shape, nkb, bk)  # k*k weight slabs
+    assert t_n <= (rows // (nkb * bk)) * \
+        (((bm - 1) * row_stride + bm - 1) // bm + 1), \
+        (t_n, ws.shape, nkb, bk, row_stride)
     assert n % blk_n == 0, (n, blk_n)
 
     grid = (g_out, n // blk_n, t_n, e)
@@ -131,7 +155,8 @@ def event_conv_pallas(a_vals: jax.Array, a_idx: jax.Array, tap: jax.Array,
                         pltpu.VMEM((bm, blk_n), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(event_conv_kernel, row_stride=row_stride),
+        functools.partial(event_conv_kernel, row_stride=row_stride,
+                          remap=remap),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((g_out, bm, n), out_dtype),
         interpret=interpret,

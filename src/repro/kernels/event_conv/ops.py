@@ -38,7 +38,8 @@ def _stacked_weights(w: jax.Array, bk: int, nkb: int,
 
 def fused_event_conv2d(stream, w: jax.Array, *, stride: int = 1,
                        padding: int = 0, blk_n: int = 128,
-                       interpret: bool = False) -> jax.Array:
+                       interpret: bool = False,
+                       remap: str = "matmul") -> jax.Array:
     """Strip-tiled fused-tap conv, one Pallas launch.  Returns (B*OY*OX, CO).
 
     ``stream`` must be strip-aligned (blk_m == STRIP_W) and the layer
@@ -61,7 +62,7 @@ def fused_event_conv2d(stream, w: jax.Array, *, stride: int = 1,
     y = event_conv_pallas(bev.values, bev.block_idx, jnp.asarray(tap),
                           jnp.asarray(shift), src_j, cnt.astype(jnp.int32),
                           ws, nkb=nkb, blk_n=blk_n, row_stride=stride,
-                          interpret=interpret)
+                          interpret=interpret, remap=remap)
     oy = conv_out_size(h, k, stride, padding)
     ox = conv_out_size(wd, k, stride, padding)
     return y.reshape(-1, y.shape[-1])[:b * oy * ox, :co]
@@ -74,7 +75,11 @@ def fused_conv_plan(logical_shape: tuple, k: int, padding: int,
 
     event_grid counts (row groups x event slots) of the stream each path
     consumes — the gather grid the per-tap path inflates k*k-fold and the
-    strip encoding shrinks STRIP_W-fold.
+    strip encoding shrinks STRIP_W-fold.  ``subtaps`` is the compacted
+    inner-grid length the kernel actually launches (dead straddle parts
+    dropped at plan time); ``subtaps_worst`` the uncompacted
+    ``strip_parts(stride)*k*k`` it would have launched, ``compaction``
+    their ratio (1.0 = nothing to drop).
     """
     b, h, wd, _ = logical_shape
     e = nkb if capacity is None else min(capacity, nkb)
@@ -83,9 +88,12 @@ def fused_conv_plan(logical_shape: tuple, k: int, padding: int,
     g_pix = b * h * wd
     g_strip = g_pix // ev.STRIP_W
     g_out = b * oh * (ow // ev.STRIP_W)
+    subtaps, subtaps_worst = ev.strip_subtap_counts(k, padding, stride)
     return dict(
         launches_fused=1, launches_per_tap=k * k,
-        grid_fused=(g_out, (stride + 1) * k * k, e),
+        grid_fused=(g_out, subtaps, e),
+        subtaps=subtaps, subtaps_worst=subtaps_worst,
+        compaction=subtaps / subtaps_worst,
         event_grid_strip=g_strip * e, event_grid_pixel=g_pix * e,
         grid_reduction=float(g_pix) / float(g_strip),
         gathered_groups_per_tap=k * k * b * oh * ow,

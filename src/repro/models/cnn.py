@@ -44,10 +44,10 @@ from repro.core.mnf_conv import conv_out_size
 from repro.models.layers import max_pool_nhwc
 
 __all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
-           "ALEXNET_DS", "VGG16_DS", "MINI", "conv_downsampled",
-           "init_cnn_params", "cnn_forward", "make_cnn_forward",
-           "make_cnn_pipeline", "run_with_stats", "layer_dense_macs",
-           "chain_boundary_summary"]
+           "ALEXNET_DS", "ALEXNET_FF", "VGG16_DS", "MINI", "MINI_S4",
+           "conv_downsampled", "init_cnn_params", "cnn_forward",
+           "make_cnn_forward", "make_cnn_pipeline", "run_with_stats",
+           "layer_dense_macs", "chain_boundary_summary"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,12 +133,43 @@ def conv_downsampled(spec: CNNSpec, *, k: int = 3) -> CNNSpec:
 ALEXNET_DS = conv_downsampled(ALEXNET)
 VGG16_DS = conv_downsampled(VGG16)
 
+#: Fully-fused AlexNet: the geometry variant whose *entire* chained forward
+#: rides the fused strip kernel — zero pixel-granular conv layers, the
+#: stride-4 conv1 included (one launch instead of its 121 per-tap event
+#: matmuls; the chained path strip-encodes the input image itself).  Two
+#: deviations from stock AlexNet@224 make every layer width tile into
+#: 8-pixel strips, and both are forced by arithmetic, not taste:
+#:   * conv1 padding 2 -> 4: at stride 4 an input width of 8m yields
+#:     OW = 2m - 1 with p = 2 (odd — never a strip multiple at ANY input
+#:     size, 224 included), but OW = (W - 3)//4 + 1 with p = 4;
+#:   * input 224 -> 256 with stride-2 conv downsampling blocks: the three
+#:     halvings after conv1 need conv1's output width to be 8·2³ = 64,
+#:     i.e. W = 256 (the smallest fully-fused size; stock 224 -> 56 -> 28
+#:     breaks at the second stage).
+#: Same depth/channel plan as ALEXNET_DS otherwise.
+ALEXNET_FF = CNNSpec(
+    "alexnet_ff", 256, 3,
+    (ConvSpec(96, 11, 4, 4), ConvSpec(96, 3, 2, 1),
+     ConvSpec(256, 5, 1, 2), ConvSpec(256, 3, 2, 1),
+     ConvSpec(384, 3, 1, 1), ConvSpec(384, 3, 1, 1), ConvSpec(256, 3, 1, 1),
+     ConvSpec(256, 3, 2, 1),
+     FCSpec(4096), FCSpec(4096), FCSpec(1000)))
+
 #: Seconds-scale smoke network exercising every chain seam — conv→conv,
 #: the event-native conv→pool→conv boundary, pool→FC.  The serving-tier
 #: smoke loop and the benchmark smoke both bucket-serve this net.
 MINI = CNNSpec("mini", 8, 3,
                (ConvSpec(8, 3, 1, 1), ConvSpec(8, 3, 1, 1), PoolSpec(),
                 ConvSpec(8, 3, 1, 1), FCSpec(10)), num_classes=10)
+
+#: Stride-4 smoke network: a strip-eligible stride-4 downsampling conv
+#: (32 -> 8, the AlexNet-conv1 layer class at toy scale) between two
+#: stride-1 convs.  Every conv is strip-eligible, so its chained forward
+#: must report zero fallback_decode — the CI gate for the stride-4 plan
+#: (``kernel_bench --smoke``).
+MINI_S4 = CNNSpec("mini_s4", 32, 3,
+                  (ConvSpec(8, 3, 1, 1), ConvSpec(8, 3, 4, 1),
+                   ConvSpec(8, 3, 1, 1), FCSpec(10)), num_classes=10)
 
 
 def _trace_shapes(spec: CNNSpec):
@@ -238,12 +269,15 @@ def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
     cfg = _layer_cfg(engine_cfg, mnf=True, fire_cfg=fire_cfg)
     conv_base = cfg.replace(blk_m=1, blk_k=min(8, cfg.blk_k))
     shapes = _trace_shapes(spec)
-    out = dict(conv=0, fc=0, pool=0, pool_events=0, densify=0, routes=[])
+    out = dict(conv=0, fc=0, pool=0, pool_events=0, densify=0,
+               input_encode=0, routes=[])
     # Mirrors _forward's chained dataflow: a pool sees a *conv stream* only
-    # when fed by a conv or by a pool that itself chained (the first layer's
-    # dense image, and FC streams, take the dense-pool fallback).
-    # ``blk_m`` tracks the granularity of the stream currently in flight —
-    # what _next_conv_blk_m made the producer emit.
+    # when fed by a conv or by a pool that itself chained; a conv with a
+    # dense input (the chain head) strip-encodes it when the fused kernel
+    # can consume it (``input_encode`` counts those seams), and FC streams
+    # take the dense-pool fallback.  ``blk_m`` tracks the granularity of
+    # the stream currently in flight — what _next_conv_blk_m made the
+    # producer emit.
     conv_stream_in = False
     blk_m = 1
     for i, layer in enumerate(spec.layers):
@@ -251,6 +285,13 @@ def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
         nxt = spec.layers[i + 1] if i + 1 < len(spec.layers) else None
         if isinstance(layer, ConvSpec):
             out["conv"] += 1
+            if not conv_stream_in:
+                bm_in = _input_stream_blk_m(layer, (batch, h, w, c),
+                                            conv_base)
+                if bm_in:
+                    out["input_encode"] += 1
+                    conv_stream_in = True
+                    blk_m = bm_in
             if conv_stream_in:
                 dec = engine.route_conv(
                     (batch, h, w, c), (layer.k, layer.k, c, layer.out_ch),
@@ -325,6 +366,31 @@ def _next_conv_blk_m(nxt, out_shape: tuple) -> int:
             tuple(out_shape), nxt.k, nxt.stride, engine.STRIP_W) is None:
         return engine.STRIP_W
     return 1
+
+
+def _input_stream_blk_m(layer: "ConvSpec", x_shape: tuple,
+                        cfg: engine.EngineConfig) -> int:
+    """Granularity at which the chained path encodes a *dense* conv input
+    (the input image at the chain head, or a densified seam): STRIP_W when
+    the conv is strip-eligible off an encoded strip stream *and* the
+    boundary routes to the event path, 0 = stay dense (the per-tap dense
+    dispatch).  This is what puts AlexNet-class stride-4 first layers on
+    the fused kernel — 1 launch instead of k² — and it is bitwise-safe
+    because the encoded stream is lossless at threshold 0 and the fused
+    kernel is bit-exact against the per-tap oracle the dense dispatch runs
+    (DESIGN.md §6).  Pixel-granular encoding is never chosen: it would
+    trade the dense per-tap path for an identical-launch-count event
+    per-tap path.
+    """
+    b, h, w, c = x_shape
+    if not engine.strip_eligible(w, layer.k, layer.stride, layer.padding,
+                                 co=layer.out_ch):
+        return 0
+    dec = engine.route_conv((b, h, w, c),
+                            (layer.k, layer.k, c, layer.out_ch), cfg,
+                            stride=layer.stride, padding=layer.padding,
+                            blk_m=engine.STRIP_W)
+    return engine.STRIP_W if dec.route == "strip" else 0
 
 
 def _next_boundary_route(nxt, out_shape: tuple, cfg: engine.EngineConfig,
@@ -402,6 +468,17 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
     for i, (layer, wgt) in enumerate(zip(layers, params)):
         nxt = layers[i + 1] if i + 1 < len(layers) else None
         if isinstance(layer, ConvSpec):
+            if chain and not isinstance(x, engine.EventStream):
+                # Chain head (or densified seam): strip-encode the dense
+                # input when this conv can ride the fused kernel off it —
+                # the stride-4 AlexNet conv1 goes from k² per-tap event
+                # matmuls to one launch.  Lossless at threshold 0, bitwise
+                # vs the dense dispatch (see _input_stream_blk_m).
+                bm_in = _input_stream_blk_m(layer, tuple(x.shape), conv_base)
+                if bm_in:
+                    x = engine.EventStream.encode_nhwc(
+                        x, blk_k=min(conv_base.blk_k, max(x.shape[-1], 1)),
+                        blk_m=bm_in, keep_dense=False)
             ci = x.logical_shape[-1] if isinstance(x, engine.EventStream) \
                 else x.shape[-1]
             ccfg = conv_base.replace(threshold=0.0).for_conv(ci)

@@ -3,11 +3,14 @@
 The fused kernel consumes a strip-aligned (blk_m == STRIP_W) conv stream in
 one launch per layer; it must be *bit-identical* to the pixel-granular
 per-tap path (the oracle) — strips only interleave exact zeros into the
-same reduction tree.  Stride 1 and stride 2 both ride it (stride-2 taps
-gather interleaved half-strips).  Ineligible geometry (stride not in
+same reduction tree.  Strides 1, 2 and 4 all ride it (a stride-s tap
+gathers up to strip_parts(s) interleaved partial strips, dead parts
+compacted out of the plan).  Ineligible geometry (stride not in
 STRIP_STRIDES, W % 8 != 0, odd widths, misaligned output width) must
 degrade visibly, never silently.
 """
+from collections import Counter
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,7 +20,8 @@ from repro import engine
 from repro.core import events as ev
 from repro.core.mnf_conv import dense_conv2d
 from repro.kernels.event_conv import fused_conv_plan
-from repro.models.cnn import (ALEXNET_DS, VGG16, VGG16_DS, CNNSpec, ConvSpec,
+from repro.models.cnn import (ALEXNET_DS, ALEXNET_FF, MINI_S4, VGG16,
+                              VGG16_DS, CNNSpec, ConvSpec,
                               FCSpec, PoolSpec, cnn_forward,
                               conv_downsampled, init_cnn_params)
 
@@ -44,6 +48,9 @@ ELIGIBLE = [  # (B, H, W, CI, CO, k, padding, stride) — all strip-eligible
     (2, 7, 16, 4, 8, 5, 2, 2),   # stride-2 5x5, odd height
     (1, 9, 16, 3, 8, 1, 0, 2),   # stride-2 1x1 projection conv
     (1, 6, 16, 2, 8, 9, 4, 2),   # stride-2 widest filter (3-part straddles)
+    (1, 8, 32, 5, 8, 3, 1, 4),   # stride-4 3x3 (5-part straddle plan)
+    (1, 11, 32, 3, 8, 11, 4, 4),  # stride-4 k=11: the AlexNet conv1 class
+    (2, 9, 32, 4, 8, 1, 0, 4),   # stride-4 1x1 projection conv
 ]
 
 
@@ -82,8 +89,11 @@ def test_strip_eligibility_rules():
     assert engine.strip_eligible(16, 9, 1, 4)          # OX == W
     assert engine.strip_eligible(16, 3, 2, 1)          # stride-2 ds block
     assert engine.strip_eligible(16, 1, 2, 0)          # stride-2 projection
+    assert engine.strip_eligible(32, 3, 4, 1)          # stride-4 ds block
+    assert engine.strip_eligible(32, 11, 4, 4)         # AlexNet-class conv1
     assert not engine.strip_eligible(8, 3, 2, 1)       # OX = 4, misaligned
-    assert not engine.strip_eligible(16, 3, 4, 1)      # stride 4
+    assert not engine.strip_eligible(16, 3, 4, 1)      # OX = 4, misaligned
+    assert not engine.strip_eligible(24, 3, 3, 1)      # stride 3 unvalidated
     assert not engine.strip_eligible(12, 3, 1, 1)      # W % 8 != 0
     assert not engine.strip_eligible(7, 3, 1, 1)       # odd width
     assert not engine.strip_eligible(16, 3, 1, 0)      # OX = 14, misaligned
@@ -93,7 +103,8 @@ def test_strip_eligibility_rules():
     assert not engine.strip_eligible(8, 3, 1, 1, co=2)
     assert not engine.strip_eligible(8, 3, 1, 1, co=9)
     assert not engine.strip_eligible(8, 3, 1, 1, co=12)
-    assert "stride" in engine.strip_ineligible_reason(16, 3, 4, 1)
+    assert "stride" in engine.strip_ineligible_reason(24, 3, 3, 1)
+    assert "output width" in engine.strip_ineligible_reason(16, 3, 4, 1)
     assert "width 12" in engine.strip_ineligible_reason(12, 3, 1, 1)
     assert "output width" in engine.strip_ineligible_reason(16, 3, 1, 0)
     assert "output width" in engine.strip_ineligible_reason(8, 3, 2, 1)
@@ -107,12 +118,16 @@ def test_strip_eligibility_rules():
 def test_strip_ineligible_reason_message_table():
     """Regression-pin the exact rule strings: `for_conv(strips=True)` embeds
     them in its ValueError and callers grep them in CI logs — the stride
-    rule used to claim `stride != 1` even after stride 2 joined the plan,
-    so each message is pinned verbatim here."""
+    rule used to claim `stride != 1` even after stride 2 joined the plan
+    (and `{1, 2}` after stride 4 did), so each message is pinned verbatim
+    here and the stride set is derived from STRIP_STRIDES, never
+    hardcoded."""
     r = engine.strip_ineligible_reason
     assert r(16, 3, 3, 1) == (
-        "stride 3 not in {1, 2} (strip plans gather at most stride + 1 "
-        "interleaved straddle parts per tap)")
+        f"stride 3 not in {set(ev.STRIP_STRIDES)} (strip plans gather up "
+        f"to (7*stride + 7)//8 + 1 interleaved straddle parts per tap; "
+        f"only these strides are validated bitwise)")
+    assert str(set(ev.STRIP_STRIDES)) == "{1, 2, 4}"   # pins the verbatim text
     assert r(12, 3, 1, 1) == "input width 12 not a multiple of STRIP_W=8"
     assert r(16, 3, 1, 0) == (
         "output width 14 ((W + 2p - k)//stride + 1) not a multiple of "
@@ -132,7 +147,7 @@ def test_strip_ineligible_reason_message_table():
         "contract needs an M-invariant dot lowering — ragged lane "
         "remainders break it)")
     # every rule string above is the exact text for_conv(strips=True) raises
-    with pytest.raises(ValueError, match="not in \\{1, 2\\}"):
+    with pytest.raises(ValueError, match="not in \\{1, 2, 4\\}"):
         engine.EngineConfig().for_conv(8, width=16, k=3, stride=3,
                                        padding=1, strips=True)
 
@@ -190,13 +205,16 @@ def test_for_conv_strip_selection():
     assert cfg.for_conv(3).blk_k == 3                  # legacy clamp intact
     assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1).blk_m \
         == engine.STRIP_W
-    # stride-2 downsampling convs resolve to strips too (DESIGN.md §6)
+    # stride-2/4 downsampling convs resolve to strips too (DESIGN.md §6)
     assert cfg.for_conv(16, width=16, k=3, stride=2, padding=1).blk_m \
+        == engine.STRIP_W
+    assert cfg.for_conv(16, width=32, k=3, stride=4, padding=1).blk_m \
         == engine.STRIP_W
     # auto mode silently (and correctly) degrades to pixel granularity
     assert cfg.for_conv(16, width=12, k=3, stride=1, padding=1).blk_m == 1
     assert cfg.for_conv(16, width=8, k=3, stride=2, padding=1).blk_m == 1
     assert cfg.for_conv(16, width=16, k=3, stride=4, padding=1).blk_m == 1
+    assert cfg.for_conv(16, width=24, k=3, stride=3, padding=1).blk_m == 1
     # strips=False forces pixels even on eligible geometry
     assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1,
                         strips=False).blk_m == 1
@@ -207,6 +225,8 @@ def test_for_conv_rejects_degrading_strip_request():
     granularity must raise with the failing rule, not degrade."""
     cfg = engine.EngineConfig()
     with pytest.raises(ValueError, match="stride"):
+        cfg.for_conv(16, width=24, k=3, stride=3, padding=1, strips=True)
+    with pytest.raises(ValueError, match="output width"):
         cfg.for_conv(16, width=16, k=3, stride=4, padding=1, strips=True)
     with pytest.raises(ValueError, match="not a multiple"):
         cfg.for_conv(16, width=12, k=3, stride=1, padding=1, strips=True)
@@ -216,10 +236,12 @@ def test_for_conv_rejects_degrading_strip_request():
         cfg.for_conv(16, width=8, k=3, stride=2, padding=1, strips=True)
     with pytest.raises(ValueError, match="width= and k="):
         cfg.for_conv(16, strips=True)
-    # eligible geometry passes and picks strips — both strides
+    # eligible geometry passes and picks strips — every validated stride
     assert cfg.for_conv(16, width=16, k=3, stride=1, padding=1,
                         strips=True).blk_m == engine.STRIP_W
     assert cfg.for_conv(16, width=16, k=3, stride=2, padding=1,
+                        strips=True).blk_m == engine.STRIP_W
+    assert cfg.for_conv(16, width=32, k=3, stride=4, padding=1,
                         strips=True).blk_m == engine.STRIP_W
 
 
@@ -246,8 +268,27 @@ def test_strip_stream_stride2_misaligned_out_falls_back_visibly():
                                rtol=2e-4)
 
 
-def test_strip_stream_stride4_falls_back_visibly():
-    """Strides beyond STRIP_STRIDES stay a named-rule fallback."""
+def test_strip_stream_stride3_falls_back_visibly():
+    """Strides beyond STRIP_STRIDES (3: unvalidated) stay a named-rule
+    fallback even on geometry whose widths would tile (W=24 -> OW=8)."""
+    x = _fired(13, (1, 9, 24, 4))
+    r = np.random.default_rng(13)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, stride=3, padding=1)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    ref = dense_conv2d(x, wgt, stride=3, padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_strip_stream_stride4_misaligned_out_falls_back_visibly():
+    """Stride 4 is strip-eligible now, but a downsampled output width that
+    doesn't tile strips (here 16 -> 4) must still take the visible decode
+    fallback."""
     x = _fired(13, (1, 9, 16, 4))
     r = np.random.default_rng(13)
     wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
@@ -284,6 +325,46 @@ def test_stride2_zero_event_stream(backend):
     assert not any(rec.get("fallback_decode") for rec in recs)
     want = jnp.broadcast_to(bias, (1, 4, 8, 8))
     assert bool(jnp.all(y == want))
+
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+def test_stride4_zero_event_stream(backend):
+    """An all-dead feature map rides the fused stride-4 path with zero live
+    events: every compacted subtap idles and the result is exactly the
+    bias plane."""
+    x = jnp.zeros((1, 8, 32, 4), jnp.float32)
+    r = np.random.default_rng(25)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    bias = jnp.asarray(r.normal(size=(8,)).astype(np.float32))
+    cfg = engine.EngineConfig(backend=backend, blk_m=1, blk_k=4, blk_n=4)
+    strip = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W, keep_dense=False)
+    assert int(strip.num_events) == 0
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(strip, wgt, bias, cfg=cfg, stride=4, padding=1)
+    assert any(rec.get("strip") and rec.get("chained") for rec in recs), recs
+    assert not any(rec.get("fallback_decode") for rec in recs)
+    want = jnp.broadcast_to(bias, (1, 2, 8, 8))
+    assert bool(jnp.all(y == want))
+
+
+def test_stride4_odd_downsampled_width_falls_back_visibly():
+    """(24 - 3)//4 + 1 = 6: W misaligned after stride-4 downsampling cannot
+    tile strips — named output-width rule, visible decode, correct
+    result."""
+    reason = engine.strip_ineligible_reason(24, 3, 4, 0)
+    assert reason is not None and "output width 6" in reason
+    x = _fired(26, (1, 7, 24, 4))
+    r = np.random.default_rng(26)
+    wgt = jnp.asarray(r.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W)
+    with engine.trace_dispatch() as recs:
+        y = engine.conv2d(s, wgt, cfg=cfg, stride=4, padding=0)
+    assert any(rec.get("fallback_decode") and rec.get("strip")
+               for rec in recs), recs
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(dense_conv2d(x, wgt, stride=4)),
+                               atol=2e-4, rtol=2e-4)
 
 
 def test_stride2_empty_batch_short_circuits():
@@ -397,7 +478,9 @@ def test_downsampling_mini_net_fuses_stride2_layer():
           and rec.get("stride") == 2]
     s1 = [rec for rec in recs if rec.get("strip") and rec.get("chained")
           and rec.get("stride") == 1]
-    assert len(s2) == 1 and len(s1) == 1, recs
+    # conv1 strip-encodes the dense image (input_encode), so both stride-1
+    # layers fuse alongside the stride-2 one
+    assert len(s2) == 1 and len(s1) == 2, recs
     assert not any(rec.get("fallback_decode") for rec in recs)
     yr = cnn_forward(params, x, spec, mnf=True, chain=False)
     assert bool(jnp.all(ym == yr)), "chained != round-trip with stride-2 strip"
@@ -428,6 +511,73 @@ def test_ds_workloads_report_ten_fused_launches():
             assert sum(1 for r in fused if r.get("stride") == 2) == 2
         total_fused += len(fused)
     assert total_fused >= 10, total_fused
+
+
+def test_first_conv_input_encode_fuses_stride4_net_bitwise():
+    """MINI_S4@32 (conv -> stride-4 conv -> conv): the chain strip-encodes
+    the dense input image, so *every* conv — including the head — runs one
+    fused launch (zero pixel-granular layers, no fallback), and the
+    chained forward stays bit-identical to the per-tap round-trip twin."""
+    spec = MINI_S4
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(jax.random.normal(KEY, (2, 32, 32, 3)))
+    with engine.trace_dispatch() as recs:
+        ym = cnn_forward(params, x, spec, mnf=True, chain=True)
+    strips = [rec for rec in recs if rec.get("strip") and rec.get("chained")]
+    pertap = [rec for rec in recs if rec.get("chained")
+              and rec["op"] == "conv2d" and not rec.get("strip")]
+    assert len(strips) == 3 and not pertap, recs
+    assert all(rec.get("launches") == 1 for rec in strips)
+    s4 = [rec for rec in strips if rec.get("stride") == 4]
+    assert len(s4) == 1, recs
+    assert (s4[0]["subtaps"], s4[0]["subtaps_worst"]) == (39, 45)
+    assert not any(rec.get("fallback_decode") for rec in recs)
+    yr = cnn_forward(params, x, spec, mnf=True, chain=False)
+    assert bool(jnp.all(ym == yr)), "chained != round-trip with stride-4 head"
+    yd = cnn_forward(params, x, spec, mnf=False)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
+                               rtol=5e-3)
+
+
+def test_alexnet_ff_fully_fused_structurally():
+    """ALEXNET_FF@256: the fully-fused AlexNet variant — all 8 convs
+    (stride-4 k=11 head included, strip-encoded straight off the dense
+    image) run 1 launch each on the chain, zero pixel-granular conv
+    layers, zero fallbacks; conv1 reports its compacted 561/605 subtap
+    plan (121 -> 1 launches).  Traced structurally (eval_shape: no
+    numeric work)."""
+    spec = ALEXNET_FF
+    params = jax.eval_shape(lambda k: init_cnn_params(k, spec), KEY)
+    x = jax.ShapeDtypeStruct((1, 256, 256, 3), jnp.float32)
+    with engine.trace_dispatch() as recs:
+        jax.eval_shape(lambda p, xx: cnn_forward(p, xx, spec, mnf=True,
+                                                 chain=True), params, x)
+    conv = [r for r in recs if r.get("op") == "conv2d" and r.get("chained")]
+    strips = [r for r in conv if r.get("strip")]
+    assert len(strips) == 8 and len(conv) == 8, recs
+    assert all(r.get("launches") == 1 for r in strips)
+    assert not any(r.get("fallback_decode") or r.get("decode")
+                   for r in recs), recs
+    head = [r for r in strips if r.get("stride") == 4]
+    assert len(head) == 1, recs
+    assert (head[0]["subtaps"], head[0]["subtaps_worst"]) == (561, 605)
+    # compacted inner grid <= k^2 + live straddle parts beyond one per tap
+    for r in strips:
+        assert r["subtaps"] <= r["subtaps_worst"]
+        assert r["compaction"] <= 1.0
+
+
+@pytest.mark.slow
+def test_alexnet_ff_chained_bitwise():
+    """Whole-net ALEXNET_FF@256 numerics: the fully-fused chain (stride-4
+    k=11 head on the compacted 5-part straddle plan) is bit-identical to
+    the per-tap round-trip twin."""
+    spec = ALEXNET_FF
+    params = init_cnn_params(KEY, spec, weight_sparsity=0.8)
+    x = jax.nn.relu(jax.random.normal(KEY, (1, 256, 256, 3)))
+    ym = cnn_forward(params, x, spec, mnf=True, chain=True)
+    yr = cnn_forward(params, x, spec, mnf=True, chain=False)
+    assert bool(jnp.all(ym == yr))
 
 
 @pytest.mark.slow
@@ -521,3 +671,73 @@ def test_fused_conv_plan_grid_reduction():
     assert plan["event_grid_pixel"] == 8 * plan["event_grid_strip"]
     assert plan["grid_reduction"] == 8.0
     assert plan["gathered_groups_fused"] == 0
+    # the inner grid axis is sized by the *compacted* subtap count
+    assert (plan["subtaps"], plan["subtaps_worst"]) == (15, 18)
+    assert plan["grid_fused"][1] == plan["subtaps"]
+    assert plan["compaction"] == 15 / 18
+    plan4 = fused_conv_plan((1, 11, 32, 3), 11, 4, nkb=1, stride=4)
+    assert (plan4["subtaps"], plan4["subtaps_worst"]) == (561, 605)
+    assert plan4["grid_fused"][1] == 561
+
+
+def test_remap_select_ladder_bitwise_equals_matmul():
+    """The two in-tile row-remap lowerings of the fused kernel — the 0/1
+    selection matmul (default, MXU) and the vselect ladder
+    (remap="select", VPU) — move rows identically, bit for bit, at every
+    validated stride.  The DESIGN.md §6 Mosaic cost verdict rests on this
+    equivalence."""
+    from repro.kernels.event_conv import fused_event_conv2d
+    for shape in ((2, 6, 8, 5, 8, 3, 1, 1), (1, 8, 16, 5, 8, 5, 2, 2),
+                  (1, 11, 32, 3, 8, 11, 4, 4)):
+        b, h, w0, ci, co, k, p, s = shape
+        x = _fired(sum(shape), (b, h, w0, ci))
+        r = np.random.default_rng(2)
+        wgt = jnp.asarray(r.normal(size=(k, k, ci, co)).astype(np.float32))
+        cfg = engine.EngineConfig(backend="pallas", blk_k=4)
+        stream = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W,
+                                  keep_dense=False)
+        ym = fused_event_conv2d(stream, wgt, stride=s, padding=p, blk_n=8,
+                                interpret=True, remap="matmul")
+        ys = fused_event_conv2d(stream, wgt, stride=s, padding=p, blk_n=8,
+                                interpret=True, remap="select")
+        assert bool(jnp.all(ym == ys)), shape
+
+
+# ---------------------------------------------------------------------------
+# dead-subtap compaction: plan columns == live subtaps, no dead column
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,p,s,want", [
+    (3, 1, 1, (15, 18)),    # stride 1: r==0 taps lose their second half
+    (5, 2, 2, (65, 75)),    # stride 2: r<2 taps lose their third part
+    (3, 1, 4, (39, 45)),    # stride 4 ds block
+    (11, 4, 4, (561, 605)),  # AlexNet conv1 class
+    (1, 0, 2, (2, 3)),      # 1x1 projection
+    (9, 4, 1, (153, 162)),  # widest stride-1 filter
+])
+def test_strip_subtap_counts_pinned(k, p, s, want):
+    assert ev.strip_subtap_counts(k, p, s) == want
+    live, worst = want
+    assert worst == ev.strip_parts(s) * k * k
+    assert live <= worst
+
+
+@pytest.mark.parametrize("k,p,s,w", [
+    (3, 1, 1, 16), (5, 2, 2, 16), (3, 1, 4, 32), (11, 4, 4, 32),
+    (1, 0, 2, 16), (9, 4, 2, 16),
+])
+def test_strip_tap_map_compacted_no_dead_columns(k, p, s, w):
+    """Every plan column sources at least one output row (strip_shift_live)
+    and the column count equals strip_subtap_counts — dead straddle parts
+    are dropped at plan time, not masked at run time."""
+    shape = (1, 8, w, 4)
+    src, live, shift, tap = ev.strip_tap_map(shape, k, p, s)
+    t = src.shape[1]
+    assert t == ev.strip_subtap_counts(k, p, s)[0]
+    assert shift.shape == (t,) and tap.shape == (t,)
+    for d in shift:
+        assert ev.strip_shift_live(int(d), s), (int(d), s)
+    # each tap appears with at most strip_parts(s) live parts
+    per_tap = Counter(int(x) for x in tap)
+    assert max(per_tap.values()) <= ev.strip_parts(s)
+    assert set(per_tap) == set(range(k * k))

@@ -6,13 +6,15 @@ threshold, sparsity) with hypothesis (or the deterministic fallback shim —
 tests/_hypothesis_fallback.py) and asserts the same contracts hold across
 the sampled space, on both the block and pallas backends:
 
-  * conv: a strip-eligible geometry (stride 1 *or* 2 — the interleaved
-    half-strip plan) rides the fused strip path bit-identical to the
-    per-tap pixel oracle and allclose to the dense conv; ineligible
-    geometry degrades visibly (fallback_decode) and stays correct.
+  * conv: a strip-eligible geometry (stride 1, 2 or 4 — the N-part
+    interleaved straddle plan, dead subtaps compacted) rides the fused
+    strip path bit-identical to the per-tap pixel oracle and allclose to
+    the dense conv; ineligible geometry (odd downsampled widths,
+    over-padding p > k//2, stride-4 on narrow maps) degrades visibly
+    (fallback_decode) and stays correct.
   * pool: the event-native segment max equals the dense ``reduce_window``
     pool bit for bit, from pixel- and strip-granular streams alike.
-  * chain: a conv→pool→conv(+stride-2)→FC network's chained forward is
+  * chain: a conv→pool→conv(stride 1/2/4)→FC network's chained forward is
     bit-identical to the per-layer round-trip twin, whatever mix of
     strip/pixel/pool boundaries the sampled geometry lands on.
 
@@ -51,17 +53,20 @@ def _seed(*parts) -> int:
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("backend", ["block", "pallas"])
-@settings(max_examples=10, deadline=None)
-@given(b=st.integers(1, 2), h=st.integers(4, 9), wmul=st.integers(1, 2),
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 2), h=st.integers(4, 9), wmul=st.sampled_from([1, 2, 4]),
        ci=st.integers(1, 5), comul=st.integers(1, 2),
-       k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
-       same_pad=st.booleans(), threshold=st.sampled_from([0.0, 0.2]),
+       k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2, 4]),
+       pad_mode=st.sampled_from(["none", "same", "over"]),
+       threshold=st.sampled_from([0.0, 0.2]),
        sparsity=st.sampled_from([0.25, 0.6, 1.0]))
 def test_conv_geometry_strip_pertap_dense(backend, b, h, wmul, ci, comul, k,
-                                          stride, same_pad, threshold,
+                                          stride, pad_mode, threshold,
                                           sparsity):
+    # wmul=4 gives the W=32 maps where stride-4 geometries tile strips;
+    # "over" samples p > k//2 — the padding rule's visible fallback.
     w0 = 8 * wmul
-    p = k // 2 if same_pad else 0
+    p = {"none": 0, "same": k // 2, "over": k // 2 + 1}[pad_mode]
     co = 8 * comul
     h = max(h, k)                          # at least one output row
     x = _input(_seed(b, h, w0, ci, co, k, stride, p, sparsity),
@@ -121,14 +126,14 @@ def test_pool_geometry_bitwise(backend, b, h, wmul, c, k, stride, strips_in,
 
 
 # ---------------------------------------------------------------------------
-# chain: conv -> pool -> conv(stride 1 or 2) -> FC, chained == round-trip
+# chain: conv -> pool -> conv(stride 1, 2 or 4) -> FC, chained == round-trip
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("backend", ["block", "pallas"])
 @settings(max_examples=5, deadline=None)
 @given(size=st.sampled_from([8, 16]), ci=st.integers(1, 3),
        k1=st.sampled_from([1, 3]), k2=st.sampled_from([1, 3]),
-       s2=st.sampled_from([1, 2]), sparsity=st.sampled_from([0.3, 0.8]),
+       s2=st.sampled_from([1, 2, 4]), sparsity=st.sampled_from([0.3, 0.8]),
        route=st.sampled_from(["auto", "adaptive", "dense"]),
        hint=st.sampled_from([0.05, 1.0]))
 def test_chained_conv_pool_conv_bitwise(backend, size, ci, k1, k2, s2,
