@@ -534,6 +534,115 @@ def cnn_chain_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
     return entries
 
 
+def _fc_sweep_input(rng, shape, sparsity, blk=8, kblk=16):
+    """``_sweep_input`` for flat (batch, features) activations.
+
+    Same block-structured masking idea, but with a 16-wide feature block so
+    MNIST-class widths (784 = 49·16) tile exactly — the 32-wide K-block of
+    the conv variant does not divide them."""
+    m, kd = shape
+    x = np.abs(rng.normal(size=shape)).astype(np.float32) + 1e-3
+    if sparsity >= 1.0:
+        return jnp.zeros(shape, jnp.float32)
+    mask = rng.random((max(m // blk, 1), max(kd // kblk, 1))) > sparsity
+    mask = np.repeat(np.repeat(mask, blk, axis=0), kblk, axis=1)[:m, :kd]
+    return jnp.asarray(x * mask)
+
+
+def mlp_rows(out_path: str = "BENCH_engine.json", *, smoke=False, batch=8,
+             reps=3):
+    """Event-native MLP pipeline (mlp_chain entries): the FC family end to
+    end — chained fire→EventStream→linear at every boundary, zero densify
+    points by construction (DESIGN.md §12).
+
+    Per (net, input sparsity) sweep point: events/token entering the chain
+    (the paper's MNIST-class headline quantity), event vs dense MACs
+    (Algorithm 2), f32 vs int8 steady-state wall time of the chained
+    pipeline, and the exactness-contract flags — f32 chained bitwise ==
+    the per-layer round-trip twin, int8 chained bitwise == the fake-quant
+    twin (both CI-fatal when they break, like every structural gate here).
+    Also CI-fatal: any FC boundary of the chained graph reporting
+    fallback_decode — every FC→FC boundary is structurally eligible, so a
+    fallback there is the silent-degrade bug class on the new seam.
+    """
+    from repro.core.fire import FireConfig
+    from repro.models.mlp import (LENET_300_100, MLP_MINI, init_mlp_params,
+                                  make_mlp_forward, make_mlp_pipeline,
+                                  mlp_boundary_summary, run_mlp_with_stats)
+
+    nets = [MLP_MINI] if smoke else [MLP_MINI, LENET_300_100]
+    sparsities = (0.0, 0.9) if smoke else (0.0, 0.5, 0.75, 0.9, 0.98)
+    rng = np.random.default_rng(0)
+    entries = []
+    for spec in nets:
+        params = init_mlp_params(jax.random.PRNGKey(0), spec,
+                                 weight_sparsity=0.5)
+        # Structural gate first: abstract-trace the chained graph — every
+        # FC boundary must consume events, none may fall back.
+        x_sds = jax.ShapeDtypeStruct((batch, spec.in_features), jnp.float32)
+        with engine.trace_dispatch() as recs:
+            jax.eval_shape(make_mlp_forward(spec, mnf=True), params, x_sds)
+        if any(r.get("fallback_decode") for r in recs):
+            raise RuntimeError(
+                f"mlp_chain[{spec.name}]: an eligible FC boundary reported "
+                f"fallback_decode — every FC→FC boundary is structurally "
+                f"event-eligible: {recs}")
+        summary = mlp_boundary_summary(spec, batch=batch)
+        if summary["densify"]:
+            raise RuntimeError(
+                f"mlp_chain[{spec.name}]: boundary summary reports densify "
+                f"points on an all-FC chain: {summary}")
+
+        fq = FireConfig(quantize_to_int8=True)
+        fns = dict(
+            f32_chained=make_mlp_pipeline(spec, chain=True, donate=False),
+            f32_roundtrip=make_mlp_pipeline(spec, chain=False, donate=False),
+            int8_chained=make_mlp_pipeline(spec, fire_cfg=fq, chain=True,
+                                           donate=False),
+            int8_roundtrip=make_mlp_pipeline(spec, fire_cfg=fq, chain=False,
+                                             donate=False))
+        for sp in sparsities:
+            x = _fc_sweep_input(rng, (batch, spec.in_features), sp)
+            out = {}
+            for name, fn in fns.items():
+                out[name] = fn(params, x)
+                jax.block_until_ready(out[name])
+            best = _interleaved_best(
+                {name: (lambda fn=fn: fn(params, x))
+                 for name, fn in fns.items()}, reps=reps)
+            bit_f32 = bool(jnp.all(out["f32_chained"]
+                                   == out["f32_roundtrip"]))
+            bit_int8 = bool(jnp.all(out["int8_chained"]
+                                    == out["int8_roundtrip"]))
+            if not (bit_f32 and bit_int8):
+                raise RuntimeError(
+                    f"mlp_chain[{spec.name}@sparsity={sp}]: exactness "
+                    f"contract broken — f32 bitwise={bit_f32}, int8 "
+                    f"fake-quant bitwise={bit_int8} (DESIGN.md §12)")
+            _, stats = run_mlp_with_stats(params, x, spec)
+            entries.append(dict(
+                kind="mlp_chain", net=spec.name, batch=batch,
+                in_features=spec.in_features, widths=list(spec.widths),
+                sparsity=sp,
+                events_per_token=round(
+                    sum(s["in_events"] for s in stats) / batch, 1),
+                event_macs=round(sum(s["event_macs"] for s in stats), 1),
+                dense_macs=round(sum(s["dense_macs"] for s in stats), 1),
+                f32_chained_us=round(best["f32_chained"], 1),
+                f32_roundtrip_us=round(best["f32_roundtrip"], 1),
+                int8_chained_us=round(best["int8_chained"], 1),
+                int8_roundtrip_us=round(best["int8_roundtrip"], 1),
+                speedup=round(best["f32_roundtrip"]
+                              / max(best["f32_chained"], 1e-9), 3),
+                int8_vs_f32=round(best["f32_chained"]
+                                  / max(best["int8_chained"], 1e-9), 3),
+                bit_exact_f32=bit_f32, bit_exact_int8=bit_int8,
+                densify=summary["densify"],
+                routes=[r["route"] for r in summary["routes"]]))
+    _merge_bench(out_path, entries, {"mlp_chain"})
+    return entries
+
+
 def serve_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=3):
     """Serving-tier benchmark: the bucketed AOT-warmed replica
     (serve_bench entries, one per batch bucket, plus a replica summary).
@@ -1148,6 +1257,12 @@ def main():
                          "replica: requests/s + p50/p99 per bucket, cold "
                          "vs persistent-cache-warmed compile and replica "
                          "TTFR (serve_bench entries)")
+    ap.add_argument("--mlp", action="store_true",
+                    help="benchmark the event-native MLP chain (mlp_chain "
+                         "entries): events/token at swept input sparsity, "
+                         "int8 vs f32 steady-state, and the per-layer "
+                         "exactness-contract flags; fails on any eligible "
+                         "FC boundary reporting fallback_decode")
     ap.add_argument("--sweep", action="store_true",
                     help="occupancy sweep 0-1 over conv/pool/linear "
                          "boundaries: per-route microseconds at each point "
@@ -1161,7 +1276,8 @@ def main():
                          "sweep + mini-net cnn chains (incl. a stride-4 "
                          "net whose mid-layer must ride the fused straddle "
                          "plan) + stride-1/2/4 conv_fused shapes and "
-                         "one pool shape + a mini serving replica — keeps "
+                         "one pool shape + the MLP mini-net chain + a "
+                         "mini serving replica — keeps "
                          "every benchmark path from rotting and fails on "
                          "strip-layer or pool-boundary fallback_decode, "
                          "steady-state recompiles, or padding drift")
@@ -1185,6 +1301,8 @@ def main():
             print(json.dumps(e))
         for e in pool_rows(args.out, smoke=True, reps=1):
             print(json.dumps(e))
+        for e in mlp_rows(args.out, smoke=True, reps=1):
+            print(json.dumps(e))
         for e in serve_rows(args.out, smoke=True, reps=1):
             print(json.dumps(e))
         route_gate(args.out)
@@ -1204,11 +1322,14 @@ def main():
     if args.serve:
         for e in serve_rows(args.out):
             print(json.dumps(e))
+    if args.mlp:
+        for e in mlp_rows(args.out):
+            print(json.dumps(e))
     if args.sweep:
         for e in sweep_rows(args.out):
             print(json.dumps(e))
     if (args.engine or args.cnn_chain or args.conv_fused or args.pool
-            or args.serve or args.sweep):
+            or args.serve or args.mlp or args.sweep):
         return
     for name, us, compile_us, derived in rows():
         print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")

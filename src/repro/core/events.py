@@ -41,6 +41,9 @@ __all__ = [
     "gather_row_strips",
     "pad_to_block_multiple",
     "pool_window_map",
+    "retile_block_events",
+    "retile_fc_addr_offsets",
+    "retile_ineligible_reason",
     "scalar_event_rows",
     "strip_eligible",
     "strip_ineligible_reason",
@@ -615,6 +618,124 @@ def pool_strip_map(logical_shape: tuple, k: int, stride: int):
                 tap[t] = dy * k + dx
                 t += 1
     return src, live, shift, tap
+
+
+def retile_ineligible_reason(logical_shape: tuple | None, blk_m: int,
+                             blk_k: int) -> str | None:
+    """Why a conv stream cannot re-tile to the FC view (None = it can).
+
+    The conv→FC re-tile maps a (B·H·W, C)-tiled stream onto the flattened
+    (B, H·W·C) view by address arithmetic alone (DESIGN.md §12): FC K-block
+    ``pix·nkb + j`` is conv tile ``j`` of raster pixel ``pix``, which only
+    works when every conv K-block lands intact inside the flattened row.
+    That needs a conv stream (NHWC logical shape), a channel depth that
+    tiles into whole K-blocks (C % blk_k == 0 — otherwise the conv
+    encoding's K-padding columns would interleave into the middle of the
+    FC row), and pixel- or strip-granular rows (blk_m in {1, STRIP_W} —
+    the two granularities fire emits; a strip splits into 8 per-pixel
+    events before re-tiling).
+
+    Messages are derived from STRIP_W and the offending shape — never
+    hardcoded — and are pinned verbatim by
+    ``test_retile_ineligible_reason_message_table``.
+    """
+    if logical_shape is None or len(logical_shape) != 4:
+        return ("stream has no NHWC logical shape (not a conv stream; "
+                "nothing to re-tile)")
+    c = logical_shape[-1]
+    if c % blk_k:
+        return (f"channel depth {c} not a multiple of blk_k={blk_k} (the "
+                f"conv encoding's K-padding columns would interleave into "
+                f"the flattened FC row)")
+    if blk_m not in (1, STRIP_W):
+        return (f"row granularity blk_m={blk_m} is neither pixel (1) nor "
+                f"strip (STRIP_W={STRIP_W})")
+    return None
+
+
+def retile_fc_addr_offsets(logical_shape: tuple, num_k_blocks: int,
+                           capacity: int):
+    """Static address plan for the conv→FC re-tile (DESIGN.md §12).
+
+    For a pixel-granular (blk_m == 1) conv stream over (B, H, W, C) with
+    ``num_k_blocks`` K-blocks per pixel and ``capacity`` event slots per
+    row group, the flattened (B, H·W·C) view puts conv tile ``j`` of
+    raster pixel ``pix`` at FC K-block ``pix·num_k_blocks + j``.  Slots of
+    one batch row are laid out pixel-major (all slots of pixel 0, then
+    pixel 1, ...), so the per-slot address offset is a pure function of
+    the slot position:
+
+      off (H·W·capacity,) int32   off[s] = (s // capacity) · num_k_blocks
+
+    The re-tiled address of slot s is ``off[s] + block_idx[pix, slot]`` —
+    a static offset add, no decode.  Everything here is shape-derived —
+    plain numpy, evaluated at trace time (the ``strip_tap_map`` idiom).
+    """
+    import numpy as np
+
+    _, h, w, _ = logical_shape
+    slots = h * w * capacity
+    off = (np.arange(slots, dtype=np.int64) // capacity) * num_k_blocks
+    return off.astype(np.int32)
+
+
+def retile_block_events(bev: BlockEvents, logical_shape: tuple,
+                        blk_m: int) -> BlockEvents:
+    """Re-tile a (B·H·W, C) conv block stream to the (B, H·W·C) FC view.
+
+    Exactness contract (pinned by tests/test_retile.py): for a stream
+    produced by ``encode_block_events`` at threshold 0 (every live tile
+    holds a non-zero and block addresses are unique per group),
+
+        retile_block_events(bev, (B, H, W, C), blk_m)
+          == encode_block_events(decoded.reshape(B, H*W*C), blk_m=1,
+                                 blk_k=bk, capacity=H*W*E, threshold=0.0)
+
+    array for array (values, block_idx, counts) — where ``decoded`` is the
+    dense (B·H·W, C) twin and E the input capacity.  With the lossless
+    default capacity (E == num_k_blocks) the re-tiled capacity H·W·E is
+    exactly the FC view's block count, i.e. the lossless default again.
+
+    The pipeline is the encode pipeline run over pre-compacted slots:
+    strip tiles first split into 8 per-pixel events (a pure transpose —
+    rows move, values don't), per-slot FC addresses come from the static
+    :func:`retile_fc_addr_offsets` plan, live slots (in-count and holding
+    a non-zero) compact live-first by stable argsort — pixel-major slot
+    order with ascending per-group addresses means ascending FC addresses,
+    encode's raster event order — and padding repeats the last live
+    address with zeroed values, exactly as encode pads.  Values move by
+    gather only (any dtype, int8 included); no FP arithmetic touches them.
+    """
+    b, h, w, c = logical_shape
+    g, e, bm, bk = bev.values.shape
+    reason = retile_ineligible_reason(logical_shape, blk_m, bk)
+    assert reason is None, reason
+    assert bm == blk_m and g * blk_m == b * h * w, (bev.values.shape,
+                                                   logical_shape, blk_m)
+    nkb = bev.num_k_blocks
+    vals, idx, counts = bev.values, bev.block_idx, bev.counts
+    if blk_m != 1:          # split strips into per-pixel events: rows move,
+        vals = vals.transpose(0, 2, 1, 3).reshape(g * bm, e, 1, bk)
+        idx = jnp.repeat(idx, bm, axis=0)          # values don't.
+        counts = jnp.repeat(counts, bm)
+    slots = h * w * e
+    off = jnp.asarray(retile_fc_addr_offsets(logical_shape, nkb, e))
+    addr = idx.reshape(b, slots) + off[None, :]
+    in_count = (jnp.arange(e, dtype=jnp.int32)[None, :]
+                < counts[:, None]).reshape(b, slots)
+    live = in_count & jnp.any(vals.reshape(b, slots, bk) != 0, axis=-1)
+    order = jnp.argsort(jnp.logical_not(live), axis=-1, stable=True)
+    addr = jnp.take_along_axis(addr, order, axis=1)
+    live = jnp.take_along_axis(live, order, axis=1)
+    vals = jnp.take_along_axis(vals.reshape(b, slots, 1, bk),
+                               order[:, :, None, None], axis=1)
+    counts_fc = jnp.sum(live, axis=-1, dtype=jnp.int32)
+    last_live = jnp.maximum(counts_fc - 1, 0)
+    gathered_last = jnp.take_along_axis(addr, last_live[:, None], axis=1)
+    addr = jnp.where(live, addr, gathered_last).astype(jnp.int32)
+    vals = jnp.where(live[:, :, None, None], vals, 0)
+    return BlockEvents(values=vals, block_idx=addr, counts=counts_fc,
+                       num_k_blocks=h * w * nkb)
 
 
 def decode_block_events(ev: BlockEvents, *, blk_m: int, blk_k: int,

@@ -85,12 +85,18 @@ def block_event_linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
     return y
 
 
-def block_event_linear_from_events(bev: ev.BlockEvents,
-                                   w: jax.Array) -> jax.Array:
+def block_event_linear_from_events(bev: ev.BlockEvents, w: jax.Array,
+                                   qparams=None) -> jax.Array:
     """Multiply phase on *pre-encoded* block events (pure-jnp twin of
     kernels/event_matmul.event_matmul_from_events; the engine's chained-layer
     path rides this so consecutive layers skip the decode→re-encode
     round-trip).  Returns (G * blk_m, N); callers slice off row padding.
+
+    With ``qparams`` the event values are int8 codes: each tile is
+    dequantized at load — before the slot mask, so padding slots stay
+    exact f32 zeros whatever the zero point — and the contraction runs in
+    f32, matching the f32 path fed the fake-quant twin bit for bit
+    (DESIGN.md §12).
     """
     g, e, bm, bk = bev.values.shape
     n = w.shape[1]
@@ -101,7 +107,11 @@ def block_event_linear_from_events(bev: ev.BlockEvents,
     # contract: acc[g, bm, n] = sum_e vals[g, e, bm, bk] @ W[idx[g, e], bk, n].
     wtiles = wb[bev.block_idx]                            # (G, E, bk, N)
     slot_live = jnp.arange(e, dtype=jnp.int32)[None, :] < bev.counts[:, None]
-    vals = jnp.where(slot_live[:, :, None, None], bev.values, 0)
+    values = bev.values
+    if qparams is not None:
+        from repro.core.quantize import dequantize
+        values = dequantize(values, qparams)
+    vals = jnp.where(slot_live[:, :, None, None], values, 0)
     acc = jnp.einsum("gemk,gekn->gmn", vals, wtiles)
     return acc.reshape(g * bm, n)
 

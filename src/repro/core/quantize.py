@@ -6,8 +6,10 @@ weights/activations are int8 (simulated in fp32 carriers on CPU), partial
 sums are fp32/int32, and the fire phase re-quantizes.
 
 At LM scale (the assigned-architecture cells) we compute in bf16 — see
-DESIGN.md §8 item 2 — so this module is used by the CNN reproduction path
-and by tests.
+DESIGN.md §8 item 2.  On the event path this module is first-class: with
+``EngineConfig(int8_events=True)`` fire emits int8 event values carrying a
+symmetric ``QParams`` on the stream and consumers dequantize at tile load
+(DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -16,8 +18,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["QParams", "calibrate", "quantize", "dequantize", "fake_quant",
-           "requantize_accumulator"]
+__all__ = ["QParams", "calibrate", "dequantize_accumulator", "quantize",
+           "dequantize", "fake_quant", "requantize_accumulator"]
 
 
 @jax.tree_util.register_dataclass
@@ -64,13 +66,25 @@ def fake_quant(x: jax.Array, qp: QParams, *, bits: int = 8) -> jax.Array:
     return dequantize(quantize(x, qp, bits=bits), qp)
 
 
+def dequantize_accumulator(acc: jax.Array, in_qp: QParams,
+                           w_qp: QParams) -> jax.Array:
+    """Real value of an accumulator of int8×int8 products.
+
+    acc is an int32 (or fp32 carrier) accumulator of products whose input
+    and weight scales are ``in_qp`` / ``w_qp``; its real value is
+    acc * in_scale * w_scale (zero points are handled by the MAC itself).
+    """
+    return acc.astype(jnp.float32) * (in_qp.scale * w_qp.scale)
+
+
 def requantize_accumulator(acc: jax.Array, in_qp: QParams, w_qp: QParams,
                            out_qp: QParams, *, bits: int = 8) -> jax.Array:
     """Paper §5.2.3: 32-bit accumulated sum -> 8-bit output activation.
 
-    acc is an int32 (or fp32 carrier) accumulator of int8×int8 products; its
-    real value is acc * in_scale * w_scale.  Returns int8 output in
-    ``out_qp`` scale.
+    Dequantize the accumulated sum to its real value, then quantize into
+    ``out_qp`` scale — the boundary requantization the int8 event path
+    applies at every fire (DESIGN.md §12; the engine dequantizes at tile
+    load, so its accumulators carry unit scales).
     """
-    real = acc.astype(jnp.float32) * (in_qp.scale * w_qp.scale)
-    return quantize(real, out_qp, bits=bits)
+    return quantize(dequantize_accumulator(acc, in_qp, w_qp), out_qp,
+                    bits=bits)

@@ -47,9 +47,25 @@ from repro.costmodel.accelerators import (PAPER_HW, dense_layer_cycles,
                                           mnf_layer_cycles)
 
 __all__ = ["ROUTE_HYSTERESIS", "EVENT_ROUTES", "RouteDecision",
-           "boundary_costs", "CrossoverTable", "load_crossover_table",
-           "set_active_table", "active_table", "decide_route",
-           "route_conflicts"]
+           "boundary_costs", "CrossoverTable", "linear_shape_class",
+           "load_crossover_table", "set_active_table", "active_table",
+           "decide_route", "route_conflicts"]
+
+
+def linear_shape_class(m: int, k: int, n: int) -> str:
+    """Shape class of an FC boundary for crossover curves.
+
+    Keyed on the output width and a power-of-two K bucket: N fixes the
+    weight tile the event matmul streams, K's magnitude fixes how many
+    K-blocks one row can touch, and batch M scales both paths linearly —
+    so boundaries of one (N, K-bucket) family share a measured crossover
+    curve, and the conv→FC seam's K = H·W·C lands in the same family
+    whatever the batch.  Used by ``engine.route_linear``, the model
+    boundary summaries, and the ``kernel_bench --sweep`` calibration
+    entries, so lookups always hit the curves the sweep wrote.
+    """
+    kb = 1 << max(int(k) - 1, 0).bit_length()
+    return f"n{n}kb{kb}"
 
 #: Stated hysteresis margin of the route-vs-table CI gate (fractional band
 #: around ratio 1.0).  25% absorbs harness timing noise near the crossover

@@ -22,8 +22,10 @@ Typical use::
     y = engine.linear(s, w2, cfg=cfg)                     # layer 2, chained
 """
 from repro.core.events import (STRIP_CO_MIN, STRIP_STRIDES, STRIP_W,
-                               pool_window_ineligible_reason, strip_eligible,
+                               pool_window_ineligible_reason,
+                               retile_ineligible_reason, strip_eligible,
                                strip_ineligible_reason)
+from repro.costmodel.crossover import linear_shape_class
 from repro.engine.api import (conv2d, describe, fire, fire_conv, linear,
                               matmul, maxpool2d, pool_ineligible_reason,
                               route_conv, route_linear, route_pool, sparsify)
@@ -39,6 +41,7 @@ __all__ = [
     "BACKENDS", "EngineConfig", "EventStream",
     "STRIP_CO_MIN", "STRIP_STRIDES", "STRIP_W", "strip_eligible",
     "strip_ineligible_reason", "pool_window_ineligible_reason",
+    "retile_ineligible_reason", "linear_shape_class",
     "register_backend", "get_backend", "dispatch", "list_backends",
     "registered_ops",
     "matmul", "linear", "conv2d", "maxpool2d", "pool_ineligible_reason",

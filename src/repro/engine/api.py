@@ -118,15 +118,26 @@ def route_pool(logical_shape: tuple, k: int, stride: int,
     return dec
 
 
-def route_linear(m: int, k: int, n: int, cfg: EngineConfig
-                 ) -> "xover.RouteDecision":
-    """Routing decision for an FC boundary consuming a fire stream."""
+def route_linear(m: int, k: int, n: int, cfg: EngineConfig, *,
+                 eligible: bool = True) -> "xover.RouteDecision":
+    """Routing decision for an FC boundary consuming a fire stream.
+
+    For a conv→FC seam pass the *flattened* FC shape (m = B, k = H·W·C);
+    ``eligible=False`` (a conv stream whose geometry cannot re-tile to the
+    FC view — ``core.events.retile_ineligible_reason``) forces the visible
+    dense fallback whatever the mode.  The shape class comes from
+    :func:`costmodel.crossover.linear_shape_class`, so FC boundaries of one
+    (N, K-bucket) family share a measured crossover curve.
+    """
     name = cfg.resolve_backend()
-    event_route = "event" if name in list_backends("linear_events") else None
+    event_route = "event" if (eligible and
+                              name in list_backends("linear_events")) \
+        else None
     dec = xover.decide_route(
         cfg.route, "linear", occupancy=cfg.occupancy_hint,
         event_route=event_route, dense_macs=float(m * k * n),
-        avg_touched=1.0, c_out=n, backend=name, shape_class=f"n{n}")
+        avg_touched=1.0, c_out=n, backend=name,
+        shape_class=xover.linear_shape_class(m, k, n))
     if dec.is_event and dec.route != event_route:
         dec = _with_route(dec, event_route or "dense")
     return dec
@@ -155,11 +166,25 @@ def linear(x, w: jax.Array, b: jax.Array | None = None,
     """y = x @ W (+ b).  ``x`` is a dense (..., K) array or an EventStream.
 
     EventStream inputs are consumed *directly* by event-native backends
-    (block, pallas) — the chained-layer fast path.  Oracle backends (dense,
-    scalar) decode once; that round-trip is exactly what they exist to
-    measure against.
+    (block, pallas) — the chained-layer fast path.  A *conv* stream (NHWC
+    ``logical_shape``) is first re-tiled to the flattened (B, H·W·C) FC
+    view by static address plan — the event-domain image of
+    ``dense_nhwc().reshape(B, -1)`` (DESIGN.md §12) — so the conv→FC seam
+    chains events-only; re-tile-ineligible geometry decodes visibly with a
+    named ``retile_ineligible_reason``.  Oracle backends (dense, scalar)
+    decode once; that round-trip is exactly what they exist to measure
+    against.
     """
     if isinstance(x, EventStream):
+        is_conv_stream = (x.logical_shape is not None
+                          and len(x.logical_shape) == 4)
+        if is_conv_stream and 0 in x.logical_shape:
+            # Degenerate conv stream (empty batch / 0-extent map): the FC
+            # view is (B, H·W·C) — exact zero result, no backend dispatch.
+            y = jnp.zeros((x.logical_shape[0], w.shape[-1]),
+                          jnp.promote_types(jnp.result_type(
+                              x.events.values.dtype, jnp.float32), w.dtype))
+            return y if b is None else y + b
         if x.shape[0] == 0:
             # Zero-row stream (empty batch / dead layer): exact empty
             # result, no backend dispatch — Pallas must not see a 0-extent
@@ -168,14 +193,35 @@ def linear(x, w: jax.Array, b: jax.Array | None = None,
             y = jnp.zeros((0, w.shape[-1]),
                           jnp.promote_types(x.events.values.dtype, w.dtype))
             return y if b is None else y + b
+        retile_reason = None
+        retiled = False
+        if is_conv_stream:
+            retile_reason = ev.retile_ineligible_reason(
+                x.logical_shape, x.blk_m, x.blk_k)
+            if retile_reason is None:
+                x = x.retile_fc()
+                retiled = True
+        if retile_reason is None:
+            m, k = x.shape
+        else:
+            bsz, hh, ww, cc = x.logical_shape
+            m, k = bsz, hh * ww * cc
         name = cfg.resolve_backend()
-        dec = route_linear(x.shape[0], x.shape[1], w.shape[-1], cfg)
-        fields = _route_fields(dec, f"n{w.shape[-1]}")
+        dec = route_linear(m, k, w.shape[-1], cfg,
+                           eligible=retile_reason is None)
+        fields = _route_fields(dec,
+                               xover.linear_shape_class(m, k, w.shape[-1]))
+        if retiled:
+            fields["retile"] = True
         if dec.is_event:
             trace.record(op="linear", backend=name, chained=True, **fields)
             return get_backend("linear_events", name)(x, w, b, cfg)
         if dec.source == "geometry":
-            # No event path exists on this backend: visible decode.
+            # No event path serves this stream (re-tile-ineligible conv
+            # geometry or backend without the op): visible decode, with
+            # the named rule when a re-tile was refused.
+            if retile_reason is not None:
+                fields["reason"] = retile_reason
             trace.record(op="linear", backend=name, fallback_decode=True,
                          **fields)
         else:
@@ -184,7 +230,9 @@ def linear(x, w: jax.Array, b: jax.Array | None = None,
             # not count it as one.
             trace.record(op="linear", backend=name, routed_dense=True,
                          **fields)
-        return linear(x.dense(), w, b, cfg)
+        xd = x.dense_nhwc().reshape(m, k) if (is_conv_stream and
+                                              not retiled) else x.dense()
+        return linear(xd, w, b, cfg)
     lead = x.shape[:-1]
     y = dispatch("linear", cfg)(x.reshape(-1, x.shape[-1]), w, b, cfg)
     return y.reshape(*lead, w.shape[-1])
@@ -334,6 +382,15 @@ def maxpool2d(x, k: int, stride: int | None = None,
     """
     stride = k if stride is None else stride
     if isinstance(x, EventStream):
+        qp_in = x.qparams
+        if qp_in is not None:
+            # Int8 stream: the segment max consumes the *dequantized* event
+            # values (a per-tile scalar multiply — still event-domain, not
+            # a decode), so it sees the same floats the fake-quant twin
+            # pools, bitwise.  The pooled stream re-quantizes below under
+            # the SAME QParams — quantize∘dequantize is exact on in-range
+            # int8, so pooling never recalibrates (DESIGN.md §12).
+            x = x.dequantize_events()
         name = cfg.resolve_backend()
         reason = pool_ineligible_reason(x, k, stride, cfg)
         shape_ok = (x.logical_shape is not None
@@ -383,13 +440,54 @@ def maxpool2d(x, k: int, stride: int | None = None,
             # Pooled values are already fired (non-negative, sub-threshold
             # zeroed upstream): fire at threshold 0 is the identity
             # re-emission at the consumer's granularity.
-            return fire_conv(rows.reshape(b, oh, ow, c),
-                             cfg.replace(threshold=0.0),
-                             keep_dense=keep_dense, blk_m=bm)
+            if qp_in is None:
+                return fire_conv(rows.reshape(b, oh, ow, c),
+                                 cfg.replace(threshold=0.0, int8_events=False),
+                                 keep_dense=keep_dense, blk_m=bm)
+            # Int8 passthrough: every pooled value is a dequantized event
+            # value, so quantizing under the incoming QParams recovers the
+            # original int8 codes exactly — no calibration, no new scale.
+            from repro.core.quantize import quantize
+            q_rows = quantize(rows, qp_in, bits=cfg.int8_bits)
+            s = EventStream.encode_nhwc(q_rows.reshape(b, oh, ow, c),
+                                        blk_k=cfg.blk_k, blk_m=bm,
+                                        capacity=cfg.capacity, threshold=0.0,
+                                        keep_dense=False)
+            return dataclasses.replace(
+                s, fired=rows if keep_dense else None, qparams=qp_in)
         trace.record(op="maxpool2d", backend=name, fallback_decode=True,
                      reason=reason, **fields)
         x = x.dense_nhwc() if x.logical_shape is not None else x.dense()
     return dispatch("maxpool2d", cfg)(x, k, stride, cfg)
+
+
+def _fire_int8(acc2: jax.Array, cfg: EngineConfig, c2: EngineConfig,
+               keep_dense: bool, logical_shape: tuple | None = None
+               ) -> EventStream:
+    """Int8 fire (DESIGN.md §12): threshold the accumulator, dynamically
+    calibrate a *symmetric* QParams over the fired map (zero point 0 — an
+    absent event must be an exact zero in both domains), requantize the
+    accumulator into it (unit input/weight scales: the engine dequantizes
+    at tile load, so accumulators carry real values), and encode the int8
+    codes at threshold 0.  The kept twin is the dequantized map — exactly
+    the fake-quant round-trip's values, which is what makes the int8 chain
+    bitwise against its fake-quant twin within a backend."""
+    from repro.core.fire import FireConfig
+    from repro.core.fire import fire as jnp_fire
+    from repro.core.quantize import (QParams, calibrate, dequantize,
+                                     requantize_accumulator)
+
+    fired = jnp_fire(acc2, FireConfig(threshold=c2.threshold,
+                                      magnitude=c2.magnitude))
+    qp = calibrate(fired, symmetric=True, bits=cfg.int8_bits)
+    unit = QParams.symmetric(1.0)
+    q = requantize_accumulator(fired, unit, unit, qp, bits=cfg.int8_bits)
+    s = EventStream.encode(q, blk_m=c2.blk_m, blk_k=c2.blk_k,
+                           capacity=c2.capacity, threshold=0.0,
+                           keep_dense=False)
+    return dataclasses.replace(
+        s, fired=dequantize(q, qp) if keep_dense else None, qparams=qp,
+        logical_shape=logical_shape)
 
 
 def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
@@ -398,7 +496,10 @@ def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
 
     Returns an EventStream ready to feed ``linear`` with no re-encode.
     ``keep_dense=False`` drops the dense twin so downstream code provably
-    runs event-only.
+    runs event-only.  With ``cfg.int8_events`` the emitted values are int8
+    codes carrying a symmetric ``QParams`` on the stream (the jnp fire +
+    encode lowering — the fused Pallas fire kernel stays f32); consumers
+    dequantize at tile load (DESIGN.md §12).
     """
     # Clamp once here and hand the backend the *same* geometry the stream
     # records — a custom fire backend must see the tile sizes the consuming
@@ -410,6 +511,8 @@ def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
         return EventStream.empty(acc.shape, blk_m=c.blk_m, blk_k=c.blk_k,
                                  capacity=c.capacity, dtype=acc.dtype,
                                  fired=acc if keep_dense else None)
+    if cfg.int8_events:
+        return _fire_int8(acc, cfg, c, keep_dense)
     fired, bev = dispatch("fire", cfg)(acc, c)
     stream = EventStream(events=bev, fired=fired if keep_dense else None,
                          shape=acc.shape, blk_m=c.blk_m, blk_k=c.blk_k)
@@ -441,6 +544,9 @@ def fire_conv(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
                                  capacity=c2.capacity, dtype=acc.dtype,
                                  fired=acc2 if keep_dense else None,
                                  logical_shape=(b, h, w, c))
+    if cfg.int8_events:
+        return _fire_int8(acc2, cfg, c2, keep_dense,
+                          logical_shape=(b, h, w, c))
     fired, bev = dispatch("fire_conv", cfg)(acc2, c2)
     return EventStream(events=bev, fired=fired if keep_dense else None,
                        shape=acc2.shape, blk_m=c2.blk_m, blk_k=c2.blk_k,

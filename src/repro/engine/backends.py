@@ -83,7 +83,8 @@ for _name in ("dense", "scalar", "block", "pallas"):
 def _linear_events_block(stream, w, b, cfg: EngineConfig):
     m, k = stream.shape
     assert w.shape[0] == k, (w.shape, stream.shape)
-    y = block_event_linear_from_events(stream.events, w)
+    y = block_event_linear_from_events(stream.events, w,
+                                       qparams=stream.qparams)
     return _bias(y[:m], b)
 
 
@@ -95,7 +96,8 @@ def _linear_events_pallas(stream, w, b, cfg: EngineConfig):
     wp = ev.pad_to_block_multiple(w, stream.blk_k, 0)
     wp = ev.pad_to_block_multiple(wp, cfg.blk_n, 1)
     y = event_matmul_from_events(stream.events, wp, blk_n=cfg.blk_n,
-                                 interpret=cfg.resolve_interpret())
+                                 interpret=cfg.resolve_interpret(),
+                                 qparams=stream.qparams)
     return _bias(y[:m, :n], b)
 
 
@@ -191,8 +193,11 @@ def _conv2d_events(stream, w, b, cfg: EngineConfig, stride, padding,
 
 @register_backend("conv2d_events", "block")
 def _conv2d_events_block(stream, w, b, cfg: EngineConfig, stride, padding):
-    return _conv2d_events(stream, w, b, cfg, stride, padding,
-                          block_event_linear_from_events)
+    def tap_matmul(tap, wt):
+        return block_event_linear_from_events(tap, wt,
+                                              qparams=stream.qparams)
+
+    return _conv2d_events(stream, w, b, cfg, stride, padding, tap_matmul)
 
 
 @register_backend("conv2d_events", "pallas")
@@ -205,7 +210,8 @@ def _conv2d_events_pallas(stream, w, b, cfg: EngineConfig, stride, padding):
         wp = ev.pad_to_block_multiple(wt, stream.blk_k, 0)
         wp = ev.pad_to_block_multiple(wp, blk_n, 1)
         y = event_matmul_from_events(tap, wp, blk_n=blk_n,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     qparams=stream.qparams)
         return y[:, :co]
 
     return _conv2d_events(stream, w, b, cfg, stride, padding, tap_matmul)

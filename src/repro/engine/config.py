@@ -51,6 +51,14 @@ class EngineConfig:
                 routing deliberately never reads the traced
                 ``EventStream.occupancy()`` (jit-compiled boundaries must
                 not route on data).
+    int8_events: fire emits int8 event values (DESIGN.md §12): the fired
+                map is requantized per layer (symmetric, dynamic
+                calibration) and the stream carries the ``QParams``;
+                consumers dequantize at tile load, so accumulators stay
+                f32 and the chain matches its fake-quant round-trip twin
+                bitwise within a backend.
+    int8_bits:  quantization width (8 = int8; kept a knob so narrower
+                event payloads can be explored without a new config).
     """
 
     backend: str = "auto"
@@ -64,6 +72,8 @@ class EngineConfig:
     out_dtype: str = "float32"
     route: str = "auto"
     occupancy_hint: float | None = None
+    int8_events: bool = False
+    int8_bits: int = 8
 
     # NOTE: backend names beyond BACKENDS are allowed — the registry is open
     # (custom backends register at runtime); unknown names fail at dispatch

@@ -24,6 +24,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events as ev
+# Import by submodule path: ``repro.core`` re-exports the ``quantize``
+# *function* under the same name, shadowing the module attribute.
+from repro.core.quantize import QParams as _QParams
+from repro.core.quantize import dequantize as _dequantize
 from repro.engine import trace
 
 __all__ = ["EventStream"]
@@ -44,6 +48,11 @@ class EventStream:
     logical_shape: batched pre-flatten shape       [static] — (B, H, W, C)
             for conv feature maps (rows are raster-order pixels, K is the
             channel axis); ``None`` for plain (M, K) FC activations.
+    qparams: quantization parameters of the event values (DESIGN.md §12) —
+            set when ``values`` carry int8 (symmetric, zero_point == 0, so
+            absent events are exact zeros in both domains); the kept
+            ``fired`` twin is always the dequantized f32 map.  ``None``
+            for f32 streams.
     """
 
     events: ev.BlockEvents
@@ -53,6 +62,7 @@ class EventStream:
     blk_k: int = dataclasses.field(metadata=dict(static=True))
     logical_shape: tuple | None = dataclasses.field(
         default=None, metadata=dict(static=True))
+    qparams: _QParams | None = None
 
     # -- construction -------------------------------------------------------
 
@@ -166,6 +176,8 @@ class EventStream:
         y = ev.decode_block_events(self.events, blk_m=self.blk_m,
                                    blk_k=self.blk_k, m=g * self.blk_m,
                                    k=self.events.num_k_blocks * self.blk_k)
+        if self.qparams is not None:
+            y = _dequantize(y, self.qparams)
         return y[:m, :k]
 
     def dense_nhwc(self) -> jax.Array:
@@ -182,3 +194,43 @@ class EventStream:
         """Drop the cached dense twin — events-only from here on (what a
         chained-layer test uses to prove no densify happens)."""
         return dataclasses.replace(self, fired=None)
+
+    # -- transforms ---------------------------------------------------------
+
+    def retile_fc(self) -> "EventStream":
+        """Re-tile a conv stream to the flattened (B, H·W·C) FC view.
+
+        Event-domain image of ``dense_nhwc().reshape(B, -1)``: the static
+        address plan of :func:`repro.core.events.retile_block_events` moves
+        block events — values travel by gather only — so no decode happens
+        and the result equals encoding the flattened dense twin at the same
+        (blk_m=1, blk_k) geometry, array for array (DESIGN.md §12).  The
+        cached twin and ``qparams`` ride along.  Asserts eligibility; gate
+        with :func:`repro.core.events.retile_ineligible_reason`.
+        """
+        reason = ev.retile_ineligible_reason(self.logical_shape, self.blk_m,
+                                             self.blk_k)
+        assert reason is None, reason
+        b, h, w, c = self.logical_shape
+        bev = ev.retile_block_events(self.events, self.logical_shape,
+                                     self.blk_m)
+        fired = None
+        if self.fired is not None:
+            fired = self.fired.reshape(b, h * w * c)
+        return EventStream(events=bev, fired=fired, shape=(b, h * w * c),
+                           blk_m=1, blk_k=self.blk_k, logical_shape=None,
+                           qparams=self.qparams)
+
+    def dequantize_events(self) -> "EventStream":
+        """Dequantize int8 event values in place — still event-domain.
+
+        A per-tile scalar multiply (symmetric: zero stays zero, padding
+        slots stay exact zeros), not a decode: consumers that want f32
+        values (the pool's segment max) read the same floats the kept twin
+        carries, bitwise.  No-op on f32 streams.
+        """
+        if self.qparams is None:
+            return self
+        vals = _dequantize(self.events.values, self.qparams)
+        bev = dataclasses.replace(self.events, values=vals)
+        return dataclasses.replace(self, events=bev, qparams=None)

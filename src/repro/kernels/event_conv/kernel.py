@@ -47,7 +47,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["event_conv_kernel", "event_conv_pallas"]
+__all__ = ["event_conv_kernel", "event_conv_pallas",
+           "event_conv_int8_kernel", "event_conv_int8_pallas"]
+
+
+def _shift_rows(a, d, *, row_stride: int, remap: str):
+    """Exact affine row remap: out row i <- src row row_stride*i + d
+    (strided straddle parts pick their interleaved partial strip).
+    Rows the map doesn't source come out exact f32 zeros."""
+    bm = a.shape[0]
+    if remap == "select":
+        # vselect ladder: bm row-broadcasts + masked selects (VPU).
+        want = (jax.lax.broadcasted_iota(jnp.int32, (bm, a.shape[1]), 0)
+                * row_stride + d)
+        shifted = jnp.zeros(a.shape, jnp.float32)
+        for m in range(bm):
+            row = jax.lax.broadcast_in_dim(a[m].astype(jnp.float32),
+                                           a.shape, (1,))
+            shifted = jnp.where(want == m, row, shifted)
+        return shifted
+    # 0/1 selection matmul: one (bm, bm) @ (bm, bk) MXU op.
+    i = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+    sel = (j == i * row_stride + d).astype(a.dtype)
+    return jnp.dot(sel, a, preferred_element_type=jnp.float32)
 
 
 def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
@@ -73,25 +96,8 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
     @pl.when(e < cnt_ref[g, t])
     def _mac():
         a = a_vals_ref[0, 0]                     # (bm, bk) source strip tile
-        bm = a.shape[0]
-        d = shift_ref[t]
-        # Exact affine row remap: out row i <- src row row_stride*i + d
-        # (strided straddle parts pick their interleaved partial strip).
-        if remap == "select":
-            # vselect ladder: bm row-broadcasts + masked selects (VPU).
-            want = (jax.lax.broadcasted_iota(jnp.int32, (bm, a.shape[1]), 0)
-                    * row_stride + d)
-            shifted = jnp.zeros(a.shape, jnp.float32)
-            for m in range(bm):
-                row = jax.lax.broadcast_in_dim(a[m].astype(jnp.float32),
-                                               a.shape, (1,))
-                shifted = jnp.where(want == m, row, shifted)
-        else:
-            # 0/1 selection matmul: one (bm, bm) @ (bm, bk) MXU op.
-            i = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
-            j = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
-            sel = (j == i * row_stride + d).astype(a.dtype)
-            shifted = jnp.dot(sel, a, preferred_element_type=jnp.float32)
+        shifted = _shift_rows(a, shift_ref[t], row_stride=row_stride,
+                              remap=remap)
         tap_acc_ref[...] += jnp.dot(shifted, w_ref[...],
                                     preferred_element_type=jnp.float32)
 
@@ -99,6 +105,56 @@ def event_conv_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
     def _tap_flush():
         # Matches the per-tap oracle's outer `acc = acc + tap_result`;
         # dead subtaps flush exact zeros (bitwise no-op).
+        acc_ref[...] += tap_acc_ref[...]
+
+    @pl.when((t == num_t - 1) & (e == num_e - 1))
+    def _writeback():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+def event_conv_int8_kernel(tap_ref, shift_ref, src_ref, cnt_ref, a_idx_ref,
+                           scale_ref, zp_ref,
+                           # ^ scalar-prefetch refs (plan + QParams)
+                           a_vals_ref, w_ref,       # VMEM inputs
+                           out_ref,                 # VMEM output
+                           acc_ref, tap_acc_ref,    # VMEM scratch (bm, bn)
+                           *, row_stride: int = 1, remap: str = "matmul"):
+    """Int8-value lowering of :func:`event_conv_kernel` (DESIGN.md §12).
+
+    Strip tiles arrive as int8 codes; the kernel dequantizes at tile load
+    — ``(q - zp) * scale`` in f32, the exact floats ``quantize.dequantize``
+    produces — *before* the affine row remap, so unsourced rows stay exact
+    f32 zeros whatever the zero point, and the selection matmul / vselect
+    ladder then runs on the same floats the f32 kernel sees when fed the
+    fake-quant twin.  TPU int8 min tiles are (32, 128); upcasting at load
+    keeps the sub-tile remap structure intact instead of forcing int8 MXU
+    alignment.
+    """
+    g = pl.program_id(0)
+    t = pl.program_id(2)
+    e = pl.program_id(3)
+    num_t = pl.num_programs(2)
+    num_e = pl.num_programs(3)
+
+    @pl.when((t == 0) & (e == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(e == 0)
+    def _tap_init():
+        tap_acc_ref[...] = jnp.zeros_like(tap_acc_ref)
+
+    @pl.when(e < cnt_ref[g, t])
+    def _mac():
+        a = a_vals_ref[0, 0].astype(jnp.float32)   # (bm, bk) int8 codes
+        a = (a - zp_ref[0].astype(jnp.float32)) * scale_ref[0]
+        shifted = _shift_rows(a, shift_ref[t], row_stride=row_stride,
+                              remap=remap)
+        tap_acc_ref[...] += jnp.dot(shifted, w_ref[...],
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(e == num_e - 1)
+    def _tap_flush():
         acc_ref[...] += tap_acc_ref[...]
 
     @pl.when((t == num_t - 1) & (e == num_e - 1))
@@ -162,4 +218,61 @@ def event_conv_pallas(a_vals: jax.Array, a_idx: jax.Array, tap: jax.Array,
         interpret=interpret,
         name="mnf_event_conv_fused",
     )(tap, shift, src, cnt, a_idx, a_vals, ws)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("nkb", "blk_n", "row_stride",
+                                             "interpret", "out_dtype",
+                                             "remap"))
+def event_conv_int8_pallas(a_vals: jax.Array, a_idx: jax.Array,
+                           tap: jax.Array, shift: jax.Array, src: jax.Array,
+                           cnt: jax.Array, scale: jax.Array,
+                           zero_point: jax.Array, ws: jax.Array, *, nkb: int,
+                           blk_n: int = 128, row_stride: int = 1,
+                           interpret: bool = False, out_dtype=jnp.float32,
+                           remap: str = "matmul") -> jax.Array:
+    """Fused strip conv on int8 event payloads (DESIGN.md §12).
+
+    Same launch/plan structure as :func:`event_conv_pallas`; ``a_vals`` are
+    int8 codes and ``scale``/``zero_point`` the stream's QParams, riding
+    the scalar prefetch next to the plan arrays.  Returns (G_out, bm, N)
+    in f32 accumulation, bit-identical to the f32 kernel fed the
+    fake-quant twin.
+    """
+    g_in, e, bm, bk = a_vals.shape
+    g_out, t_n = src.shape
+    rows, n = ws.shape
+    assert remap in ("matmul", "select"), remap
+    assert a_vals.dtype == jnp.int8, a_vals.dtype
+    assert rows % (nkb * bk) == 0, (ws.shape, nkb, bk)
+    assert n % blk_n == 0, (n, blk_n)
+
+    grid = (g_out, n // blk_n, t_n, e)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda gi, ni, ti, ei, tp, sh, sr, ct, ai, sc, zp:
+                         (sr[gi, ti], ei, 0, 0)),
+            pl.BlockSpec((bk, blk_n),
+                         lambda gi, ni, ti, ei, tp, sh, sr, ct, ai, sc, zp:
+                         (tp[ti] * nkb + ai[sr[gi, ti], ei], ni)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, blk_n),
+                               lambda gi, ni, ti, ei, tp, sh, sr, ct, ai,
+                               sc, zp: (gi, 0, ni)),
+        scratch_shapes=[pltpu.VMEM((bm, blk_n), jnp.float32),
+                        pltpu.VMEM((bm, blk_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(event_conv_int8_kernel, row_stride=row_stride,
+                          remap=remap),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g_out, bm, n), out_dtype),
+        interpret=interpret,
+        name="mnf_event_conv_fused_int8",
+    )(tap, shift, src, cnt, a_idx,
+      scale.reshape(1).astype(jnp.float32),
+      zero_point.reshape(1).astype(jnp.int32), a_vals, ws)
     return out

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core import events as ev
 from repro.core.mnf_conv import conv_out_size
-from repro.kernels.event_conv.kernel import event_conv_pallas
+from repro.kernels.event_conv.kernel import (event_conv_int8_pallas,
+                                             event_conv_pallas)
 
 __all__ = ["fused_event_conv2d", "fused_conv_plan"]
 
@@ -45,7 +46,8 @@ def fused_event_conv2d(stream, w: jax.Array, *, stride: int = 1,
     ``stream`` must be strip-aligned (blk_m == STRIP_W) and the layer
     strip-eligible (stride in STRIP_STRIDES — see
     ``core.events.strip_eligible``; the engine API enforces this before
-    dispatching here).
+    dispatching here).  Streams carrying int8 event values (``qparams``
+    set) dispatch to the dequantize-at-load kernel variant (DESIGN.md §12).
     """
     b, h, wd, ci = stream.logical_shape
     k, _, ci2, co = w.shape
@@ -59,10 +61,17 @@ def fused_event_conv2d(stream, w: jax.Array, *, stride: int = 1,
     src_j = jnp.asarray(src)
     cnt = jnp.where(jnp.asarray(live), bev.counts[src_j], 0)
     ws = _stacked_weights(w, bk, nkb, blk_n)
-    y = event_conv_pallas(bev.values, bev.block_idx, jnp.asarray(tap),
-                          jnp.asarray(shift), src_j, cnt.astype(jnp.int32),
-                          ws, nkb=nkb, blk_n=blk_n, row_stride=stride,
-                          interpret=interpret, remap=remap)
+    if stream.qparams is not None:
+        y = event_conv_int8_pallas(
+            bev.values, bev.block_idx, jnp.asarray(tap), jnp.asarray(shift),
+            src_j, cnt.astype(jnp.int32), stream.qparams.scale,
+            stream.qparams.zero_point, ws, nkb=nkb, blk_n=blk_n,
+            row_stride=stride, interpret=interpret, remap=remap)
+    else:
+        y = event_conv_pallas(bev.values, bev.block_idx, jnp.asarray(tap),
+                              jnp.asarray(shift), src_j, cnt.astype(jnp.int32),
+                              ws, nkb=nkb, blk_n=blk_n, row_stride=stride,
+                              interpret=interpret, remap=remap)
     oy = conv_out_size(h, k, stride, padding)
     ox = conv_out_size(wd, k, stride, padding)
     return y.reshape(-1, y.shape[-1])[:b * oy * ox, :co]

@@ -42,5 +42,6 @@ def fused_event_conv2d_ref(stream, w: jax.Array, *, stride: int = 1,
         gat = ev.gather_row_strips(stream.events, jnp.asarray(src[:, t]),
                                    jnp.asarray(live[:, t]), int(shift[t]),
                                    row_stride=stride)
-        acc = acc + block_event_linear_from_events(gat, wtap[int(tap[t])])
+        acc = acc + block_event_linear_from_events(gat, wtap[int(tap[t])],
+                                                   qparams=stream.qparams)
     return acc

@@ -1,6 +1,10 @@
 from repro.kernels.event_matmul.ops import (event_matmul, event_matmul_cfg,
-                                            event_matmul_from_events)
-from repro.kernels.event_matmul.ref import event_matmul_ref, mask_dead_blocks
+                                            event_matmul_from_events,
+                                            event_matmul_int8)
+from repro.kernels.event_matmul.ref import (event_matmul_int8_ref,
+                                            event_matmul_ref,
+                                            mask_dead_blocks)
 
 __all__ = ["event_matmul", "event_matmul_cfg", "event_matmul_from_events",
-           "event_matmul_ref", "mask_dead_blocks"]
+           "event_matmul_int8", "event_matmul_int8_ref", "event_matmul_ref",
+           "mask_dead_blocks"]

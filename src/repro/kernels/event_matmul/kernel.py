@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["event_matmul_kernel", "event_matmul_pallas"]
+__all__ = ["event_matmul_kernel", "event_matmul_pallas",
+           "event_matmul_int8_kernel", "event_matmul_int8_pallas"]
 
 
 def event_matmul_kernel(a_idx_ref, counts_ref,   # scalar-prefetch refs
@@ -54,6 +55,83 @@ def event_matmul_kernel(a_idx_ref, counts_ref,   # scalar-prefetch refs
     @pl.when(e == num_e - 1)
     def _flush():
         out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+def event_matmul_int8_kernel(a_idx_ref, counts_ref, scale_ref, zp_ref,
+                             # ^ scalar-prefetch refs (addresses + QParams)
+                             a_vals_ref, w_ref,       # VMEM inputs
+                             out_ref,                 # VMEM output
+                             acc_ref):                # VMEM scratch f32
+    """Int8-value lowering of :func:`event_matmul_kernel` (DESIGN.md §12).
+
+    Event tiles arrive as int8 codes; the kernel dequantizes at tile load
+    — ``(q - zp) * scale`` in f32, the exact floats ``quantize.dequantize``
+    produces — and accumulates in f32, so the result is bit-identical to
+    the f32 kernel fed the fake-quant twin.  scale/zp ride the scalar
+    prefetch next to the event addresses (one QParams per stream —
+    dynamic per-layer calibration).
+    """
+    g = pl.program_id(0)
+    e = pl.program_id(2)
+    num_e = pl.num_programs(2)
+
+    @pl.when(e == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(e < counts_ref[g])
+    def _mac():
+        a = a_vals_ref[0, 0].astype(jnp.float32)          # (bm, bk) codes
+        a = (a - zp_ref[0].astype(jnp.float32)) * scale_ref[0]
+        acc_ref[...] += jnp.dot(a, w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(e == num_e - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "interpret",
+                                             "out_dtype"))
+def event_matmul_int8_pallas(a_vals: jax.Array, a_idx: jax.Array,
+                             counts: jax.Array, scale: jax.Array,
+                             zero_point: jax.Array, w: jax.Array, *,
+                             blk_n: int = 128, interpret: bool = False,
+                             out_dtype=jnp.float32) -> jax.Array:
+    """y[g, bm, n] = sum_e dequant(a_vals[g, e]) @ W[a_idx[g, e]].
+
+    ``a_vals`` are int8 codes; ``scale``/``zero_point`` the stream's
+    QParams (scalars — reshaped to (1,) scalar-prefetch operands).
+    """
+    g, e, bm, bk = a_vals.shape
+    k, n = w.shape
+    assert k % bk == 0 and n % blk_n == 0, (k, n, bk, blk_n)
+
+    grid = (g, n // blk_n, e)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda gi, ni, ei, idx, cnt, sc, zp: (gi, ei, 0, 0)),
+            pl.BlockSpec((bk, blk_n),
+                         lambda gi, ni, ei, idx, cnt, sc, zp:
+                         (idx[gi, ei], ni)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, blk_n),
+                               lambda gi, ni, ei, idx, cnt, sc, zp:
+                               (gi, 0, ni)),
+        scratch_shapes=[pltpu.VMEM((bm, blk_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        event_matmul_int8_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((g, bm, n), out_dtype),
+        interpret=interpret,
+        name="mnf_event_matmul_int8",
+    )(a_idx, counts, scale.reshape(1).astype(jnp.float32),
+      zero_point.reshape(1).astype(jnp.int32), a_vals, w)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("blk_n", "interpret", "out_dtype"))

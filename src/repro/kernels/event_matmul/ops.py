@@ -17,20 +17,62 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events as ev
-from repro.kernels.event_matmul.kernel import event_matmul_pallas
+from repro.kernels.event_matmul.kernel import (event_matmul_int8_pallas,
+                                               event_matmul_pallas)
 
-__all__ = ["event_matmul", "event_matmul_from_events", "event_matmul_cfg"]
+__all__ = ["event_matmul", "event_matmul_from_events", "event_matmul_cfg",
+           "event_matmul_int8"]
 
 
 def event_matmul_from_events(bev: ev.BlockEvents, w: jax.Array, *,
                              blk_n: int = 128, interpret: bool = False,
-                             out_dtype=jnp.float32) -> jax.Array:
-    """Multiply phase on pre-encoded events.  Returns (G*bm, N)."""
+                             out_dtype=jnp.float32, qparams=None) -> jax.Array:
+    """Multiply phase on pre-encoded events.  Returns (G*bm, N).
+
+    With ``qparams`` (a ``core.quantize.QParams``) the event values are
+    int8 codes: the int8 kernel dequantizes each tile at load and
+    accumulates in f32 (DESIGN.md §12).
+    """
     g, e, bm, bk = bev.values.shape
-    y = event_matmul_pallas(bev.values, bev.block_idx, bev.counts, w,
-                            blk_n=blk_n, interpret=interpret,
-                            out_dtype=out_dtype)
+    if qparams is not None:
+        y = event_matmul_int8_pallas(bev.values, bev.block_idx, bev.counts,
+                                     qparams.scale, qparams.zero_point, w,
+                                     blk_n=blk_n, interpret=interpret,
+                                     out_dtype=out_dtype)
+    else:
+        y = event_matmul_pallas(bev.values, bev.block_idx, bev.counts, w,
+                                blk_n=blk_n, interpret=interpret,
+                                out_dtype=out_dtype)
     return y.reshape(g * bm, w.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "blk_m", "blk_k", "blk_n", "capacity", "interpret"))
+def event_matmul_int8(q: jax.Array, w: jax.Array, qparams, *, blk_m: int = 8,
+                      blk_k: int = 128, blk_n: int = 128,
+                      capacity: int | None = None,
+                      interpret: bool = False) -> jax.Array:
+    """y = dequant(q) @ W on int8 codes q: (M, K) — encode + int8 kernel.
+
+    The dense entry of the int8 lowering (benches, tests): encodes the
+    codes at threshold 0 (a tile is live iff it holds a non-zero code —
+    the same liveness the fake-quant twin's encode sees) and runs the
+    dequantize-at-load kernel.  Matches ``ref.event_matmul_int8_ref``
+    bit-for-bit up to f32 accumulation order.
+    """
+    m, k = q.shape
+    k2, n = w.shape
+    assert k == k2, (q.shape, w.shape)
+    assert q.dtype == jnp.int8, q.dtype
+    qp2 = ev.pad_to_block_multiple(q, blk_m, 0)
+    qp2 = ev.pad_to_block_multiple(qp2, blk_k, 1)
+    wp = ev.pad_to_block_multiple(w, blk_k, 0)
+    wp = ev.pad_to_block_multiple(wp, blk_n, 1)
+    bev = ev.encode_block_events(qp2, blk_m=blk_m, blk_k=blk_k,
+                                 capacity=capacity, threshold=0.0)
+    y = event_matmul_from_events(bev, wp, blk_n=blk_n, interpret=interpret,
+                                 qparams=qparams)
+    return y[:m, :n]
 
 
 @functools.partial(jax.jit, static_argnames=(

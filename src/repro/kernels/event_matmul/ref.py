@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["event_matmul_ref", "mask_dead_blocks"]
+__all__ = ["event_matmul_int8_ref", "event_matmul_ref", "mask_dead_blocks"]
 
 
 def mask_dead_blocks(a: jax.Array, *, blk_m: int, blk_k: int,
@@ -27,4 +27,19 @@ def event_matmul_ref(a: jax.Array, w: jax.Array, *, blk_m: int, blk_k: int,
     """Dense oracle of the block-event multiply phase: (M, K) @ (K, N)."""
     masked = mask_dead_blocks(a, blk_m=blk_m, blk_k=blk_k, threshold=threshold)
     return jnp.dot(masked.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def event_matmul_int8_ref(q: jax.Array, w: jax.Array, qparams, *, blk_m: int,
+                          blk_k: int) -> jax.Array:
+    """Dense oracle of the int8-value lowering (DESIGN.md §12).
+
+    Semantics: a tile is live iff it holds a non-zero int8 code (threshold
+    0 — a code of 0 dequantizes to exactly 0 under the symmetric QParams
+    the fire phase emits), live tiles dequantize to f32, then dense matmul.
+    """
+    from repro.core.quantize import dequantize
+
+    masked = mask_dead_blocks(q, blk_m=blk_m, blk_k=blk_k, threshold=0.0)
+    return jnp.dot(dequantize(masked, qparams), w.astype(jnp.float32),
                    preferred_element_type=jnp.float32)

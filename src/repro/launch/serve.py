@@ -42,15 +42,29 @@ def _cnn_spec(name: str, size: int):
             "vgg16_ds": VGG16_DS, "mini": MINI}[name].scaled(size)
 
 
+def _mlp_spec(name: str):
+    from repro.models.mlp import LENET_300_100, MLP_MINI
+    return {"lenet": LENET_300_100, "mini": MLP_MINI}[name]
+
+
 def serve_cnn(args) -> None:
-    """Continuously-batched CNN serving through the AOT-warmed replica."""
+    """Continuously-batched CNN/MLP serving through the AOT-warmed replica.
+
+    ``--mlp`` serves an FC network through the identical bucketed tier —
+    flat ``(in_features,)`` request vectors instead of images; every
+    boundary is FC→FC, so its report must state zero densify points
+    (DESIGN.md §12)."""
     import numpy as np
 
     from repro import engine, serving
     from repro.core.fire import FireConfig
     from repro.models.cnn import init_cnn_params
+    from repro.models.mlp import init_mlp_params
 
-    spec = _cnn_spec(args.cnn, args.cnn_size)
+    if args.mlp:
+        spec = _mlp_spec(args.mlp)
+    else:
+        spec = _cnn_spec(args.cnn, args.cnn_size)
     buckets = tuple(int(b) for b in args.buckets.split(","))
     if args.route == "adaptive":
         # Adaptive routing consults the measured crossover table (written
@@ -63,7 +77,8 @@ def serve_cnn(args) -> None:
         threshold=args.mnf_threshold, route=args.route,
         occupancy_hint=args.occupancy_hint)
     key = jax.random.PRNGKey(0)
-    params = init_cnn_params(key, spec, weight_sparsity=args.weight_sparsity)
+    init = init_mlp_params if args.mlp else init_cnn_params
+    params = init(key, spec, weight_sparsity=args.weight_sparsity)
 
     eng = serving.ServeEngine(
         spec, params,
@@ -77,9 +92,11 @@ def serve_cnn(args) -> None:
     # must measure the pipeline, not host-side jax.random throughput.
     rng = np.random.default_rng(0)
     n_requests = args.rate * args.ticks
+    req_shape = (spec.in_features,) if args.mlp else \
+        (spec.input_size, spec.input_size, spec.in_ch)
     images = np.maximum(
-        rng.standard_normal((n_requests, spec.input_size, spec.input_size,
-                             spec.in_ch), dtype=np.float32), 0.0)
+        rng.standard_normal((n_requests,) + req_shape, dtype=np.float32),
+        0.0)
 
     warm_recompiles = eng.recompiles
     it = iter(images)
@@ -100,8 +117,16 @@ def serve_cnn(args) -> None:
         failures.append(f"eligible boundary reported fallback_decode: "
                         f"{report}")
 
+    # An MLP boundary report with any densify point is a serving bug: every
+    # FC→FC boundary is structurally eligible (DESIGN.md §12).
+    if args.mlp and eng.plans[buckets[0]].boundaries.get("densify", 0):
+        failures.append(f"MLP replica reports densify points: "
+                        f"{eng.plans[buckets[0]].boundaries}")
+
     print(json.dumps(dict(
-        net=spec.name, input_size=spec.input_size, buckets=list(buckets),
+        net=spec.name,
+        input_size=spec.in_features if args.mlp else spec.input_size,
+        buckets=list(buckets),
         mnf=not args.dense, engine=dataclasses.asdict(eng.engine_cfg),
         boundaries=report, **stats)))
     if failures:
@@ -179,13 +204,56 @@ def serve_smoke(args) -> None:
     if report2["routes"] != report["routes"]:
         failures.append(f"snapshot-restored replica reports different "
                         f"routes: {report2['routes']} != {report['routes']}")
-    print(json.dumps(dict(smoke="serve", boundaries=report, **eng.stats())))
+
+    # MLP tier: the FC family through the identical bucketed replica —
+    # flat request vectors, every boundary FC→FC.  Zero densify points is
+    # structural (DESIGN.md §12): any fallback_decode or densify count on
+    # an MLP replica is a serving bug, and padded-bucket logits must stay
+    # bitwise the unpadded chained forward's, same as the CNN tier.
+    from repro.models.mlp import (MLP_MINI, init_mlp_params,
+                                  make_mlp_pipeline)
+    mspec = MLP_MINI
+    mparams = init_mlp_params(jax.random.PRNGKey(0), mspec,
+                              weight_sparsity=0.5)
+    meng = serving.ServeEngine(
+        mspec, mparams, serving.ServeEngineConfig(buckets=buckets))
+    mwarm = meng.recompiles
+    vecs = np.maximum(rng.standard_normal((7, mspec.in_features),
+                                          dtype=np.float32), 0.0)
+    it = iter(vecs)
+    for n in (1, 2, 4):
+        for _ in range(n):
+            meng.submit(next(it))
+        meng.run_tick()
+    mreport = meng.boundary_report()
+    if len(meng.completed) != 7:
+        failures.append(f"MLP tier served {len(meng.completed)}/7 requests")
+    if meng.recompiles != mwarm:
+        failures.append(f"MLP tier: {meng.recompiles - mwarm} steady-state "
+                        f"recompiles")
+    if mreport["fallback_decodes"]:
+        failures.append(f"MLP tier: eligible FC boundary reported "
+                        f"fallback_decode: {mreport}")
+    if mreport["boundaries"].get("densify", 0) or \
+            mreport["boundaries"].get("retile", 0):
+        failures.append(f"MLP tier: FC→FC chain reports densify/retile "
+                        f"points: {mreport['boundaries']}")
+    mref = np.asarray(make_mlp_pipeline(mspec, donate=False)(
+        mparams, jnp.asarray(vecs)))
+    mgot = np.stack([r.result for r in meng.completed])
+    if not np.array_equal(mref, mgot):
+        failures.append("MLP tier: padded-bucket logits not bitwise-equal "
+                        "to the unpadded chained forward")
+
+    print(json.dumps(dict(smoke="serve", boundaries=report,
+                          mlp_boundaries=mreport, **eng.stats())))
     if failures:
         print("serve smoke FAILED:\n  " + "\n  ".join(failures),
               file=sys.stderr)
         raise SystemExit(1)
     print("serve smoke OK: no steady-state recompiles, no fallback_decode, "
-          "padding bitwise-exact, snapshot-restart routes identical")
+          "padding bitwise-exact, snapshot-restart routes identical, MLP "
+          "tier densify-free")
 
 
 def main():
@@ -211,6 +279,12 @@ def main():
                          "the fused stride-2 strip path)")
     ap.add_argument("--cnn-size", type=int, default=64,
                     help="CNN input resolution (224 = paper scale)")
+    ap.add_argument("--mlp", choices=("lenet", "mini"),
+                    help="serve an FC network (lenet = LeNet-300-100, the "
+                         "paper's MNIST-class workload) through the same "
+                         "bucketed serving replica — flat request vectors, "
+                         "every FC→FC boundary event-chained, zero densify "
+                         "points (DESIGN.md §12)")
     ap.add_argument("--buckets", default="1,8,32,128",
                     help="CNN mode: compiled batch bucket sizes, ascending")
     ap.add_argument("--rate", type=int, default=8,
@@ -250,11 +324,13 @@ def main():
     if args.smoke:
         serve_smoke(args)
         return
-    if args.cnn:
+    if args.cnn and args.mlp:
+        ap.error("--cnn and --mlp are mutually exclusive")
+    if args.cnn or args.mlp:
         if args.dense and (args.mnf or args.mnf_pallas
                            or args.mnf_threshold != 0.0):
             ap.error("--dense conflicts with --mnf/--mnf-pallas/"
-                     "--mnf-threshold (CNN mode serves MNF by default)")
+                     "--mnf-threshold (CNN/MLP mode serves MNF by default)")
         serve_cnn(args)
         return
 

@@ -239,11 +239,13 @@ def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
                         engine_cfg: EngineConfig | None = None,
                         fire_cfg=None, donate: bool = True,
                         mesh: Mesh | None = None) -> CNNCellPlan:
-    """Compile the event-resident CNN pipeline for batched serving.
+    """Compile the event-resident CNN/MLP pipeline for batched serving.
 
     ``spec`` is a ``models.cnn.CNNSpec`` (already ``.scaled(...)`` to the
-    serving resolution).  One jit covers conv→fire→…→FC; the MNF path keeps
-    activations event-resident between conv layers (DESIGN.md §5).
+    serving resolution) or a ``models.mlp.MLPSpec`` — the FC family rides
+    the same plan with a flat ``(batch, in_features)`` input buffer.  One
+    jit covers conv→fire→…→FC; the MNF path keeps activations
+    event-resident between conv layers (DESIGN.md §5).
 
     With a ``mesh``, the pipeline goes **batch-parallel**: the forward is
     wrapped in a ``shard_map`` over the mesh's data axes — weights
@@ -257,11 +259,14 @@ def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
     """
     from repro.core.fire import FireConfig
     from repro.models import cnn as cnn_mod
+    from repro.models import mlp as mlp_mod
 
     fire_cfg = fire_cfg or FireConfig()
     ecfg = (engine_cfg or EngineConfig(backend="auto")).resolved()
-    fwd = cnn_mod.make_cnn_forward(spec, mnf=mnf, fire_cfg=fire_cfg,
-                                   engine_cfg=ecfg)
+    is_mlp = isinstance(spec, mlp_mod.MLPSpec)
+    make_fwd = mlp_mod.make_mlp_forward if is_mlp \
+        else cnn_mod.make_cnn_forward
+    fwd = make_fwd(spec, mnf=mnf, fire_cfg=fire_cfg, engine_cfg=ecfg)
     data = data_axis_size(mesh) if mesh is not None else 1
     shards = data if (data > 1 and batch % data == 0) else 1
     in_shard = None
@@ -272,13 +277,21 @@ def make_cnn_serve_step(spec, batch: int, *, mnf: bool = True,
     elif mesh is not None:
         in_shard = NamedSharding(mesh, P())
     fn = jax.jit(fwd, donate_argnums=(1,) if donate else ())
-    pshapes = jax.eval_shape(
-        lambda k: cnn_mod.init_cnn_params(k, spec),
-        jax.ShapeDtypeStruct((2,), jnp.uint32))
-    x_spec = jax.ShapeDtypeStruct(
-        (batch, spec.input_size, spec.input_size, spec.in_ch), jnp.float32)
-    boundaries = cnn_mod.chain_boundary_summary(
-        spec, batch=batch, fire_cfg=fire_cfg, engine_cfg=ecfg) if mnf else {}
+    init = mlp_mod.init_mlp_params if is_mlp else cnn_mod.init_cnn_params
+    pshapes = jax.eval_shape(lambda k: init(k, spec),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if is_mlp:
+        x_spec = jax.ShapeDtypeStruct((batch, spec.in_features), jnp.float32)
+        boundaries = mlp_mod.mlp_boundary_summary(
+            spec, batch=batch, fire_cfg=fire_cfg,
+            engine_cfg=ecfg) if mnf else {}
+    else:
+        x_spec = jax.ShapeDtypeStruct(
+            (batch, spec.input_size, spec.input_size, spec.in_ch),
+            jnp.float32)
+        boundaries = cnn_mod.chain_boundary_summary(
+            spec, batch=batch, fire_cfg=fire_cfg,
+            engine_cfg=ecfg) if mnf else {}
     return CNNCellPlan(spec=spec, batch=batch, fn=fn,
                        arg_specs=(pshapes, x_spec),
                        donate=(1,) if donate else (), engine=ecfg,

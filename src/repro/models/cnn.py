@@ -14,10 +14,11 @@ Two execution paths over identical params, both dispatched through
              domain** too (``engine.maxpool2d`` — a segment max over the
              stream's events, bit-identical to the dense pool, DESIGN.md
              §7), so conv→pool→conv boundaries carry no dense twin and no
-             re-encode: the chain has zero densify points between the
-             first conv and the FC head.  FC layers chain ``EventStream``s
-             as before (the FC head flattens the pooled twin, kept only
-             there).
+             re-encode.  The conv→FC seam re-tiles the conv stream to the
+             flattened (B, H·W·C) view by static address plan
+             (``EventStream.retile_fc``, DESIGN.md §12) and FC layers
+             chain ``EventStream``s onward — the whole forward has zero
+             densify points, input encode to logits.
 
 ``make_cnn_pipeline`` wraps the whole forward in a **single jitted
 function** with a donated input buffer — one jit per network, no per-layer
@@ -47,7 +48,7 @@ __all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNSpec", "ALEXNET", "VGG16",
            "ALEXNET_DS", "ALEXNET_FF", "VGG16_DS", "MINI", "MINI_S4",
            "conv_downsampled", "init_cnn_params", "cnn_forward",
            "make_cnn_forward", "make_cnn_pipeline", "run_with_stats",
-           "layer_dense_macs", "chain_boundary_summary"]
+           "layer_dense_macs", "chain_boundary_summary", "fc_in_events"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,20 +258,22 @@ def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
 
     Shape-derived (no tracing): how many compute layers of each kind, how
     many pool boundaries ride the event-native segment max
-    (``pool_events``), and how many densify points remain on the chain
-    (``densify`` — dense-pool fallbacks; 0 when every pool is eligible,
-    the DESIGN.md §7 invariant serving and benchmarks report).
-    ``routes`` lists, in chain order, the routing decision of every
-    boundary that consumes an EventStream — the same
-    ``engine.route_conv`` / ``engine.route_pool`` calls the dispatch makes
-    (DESIGN.md §11), so serving's boundary report can state each compiled
-    boundary's route without tracing.
+    (``pool_events``), how many conv→FC seams ride the re-tiler
+    (``retile``), and how many densify points remain on the chain
+    (``densify`` — dense-pool fallbacks plus re-tile-ineligible FC seams;
+    0 when every boundary is eligible, the DESIGN.md §7/§12 invariant
+    serving and benchmarks report).  ``routes`` lists, in chain order, the
+    routing decision of every boundary that consumes an EventStream — the
+    same ``engine.route_conv`` / ``engine.route_pool`` /
+    ``engine.route_linear`` calls the dispatch makes (DESIGN.md §11), so
+    serving's boundary report can state each compiled boundary's route
+    without tracing.
     """
     cfg = _layer_cfg(engine_cfg, mnf=True, fire_cfg=fire_cfg)
     conv_base = cfg.replace(blk_m=1, blk_k=min(8, cfg.blk_k))
     shapes = _trace_shapes(spec)
     out = dict(conv=0, fc=0, pool=0, pool_events=0, densify=0,
-               input_encode=0, routes=[])
+               input_encode=0, retile=0, routes=[])
     # Mirrors _forward's chained dataflow: a pool sees a *conv stream* only
     # when fed by a conv or by a pool that itself chained; a conv with a
     # dense input (the chain head) strip-encodes it when the fused kernel
@@ -279,6 +282,7 @@ def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
     # the stream currently in flight — what _next_conv_blk_m made the
     # producer emit.
     conv_stream_in = False
+    fc_stream_in = False
     blk_m = 1
     for i, layer in enumerate(spec.layers):
         h, w, c = shapes[i]
@@ -308,7 +312,31 @@ def chain_boundary_summary(spec: CNNSpec, *, batch: int = 1,
             conv_stream_in = True
         elif isinstance(layer, FCSpec):
             out["fc"] += 1
+            if conv_stream_in or fc_stream_in:
+                kf = h * w * c
+                reason = None
+                if conv_stream_in:
+                    reason = engine.retile_ineligible_reason(
+                        (batch, h, w, c), blk_m,
+                        min(conv_base.blk_k, max(c, 1)))
+                dec = engine.route_linear(batch, kf, layer.out, cfg,
+                                          eligible=reason is None)
+                rec = dict(op="linear", route=dec.route,
+                           occupancy=dec.occupancy,
+                           est_event_cost=dec.est_event_cost,
+                           est_dense_cost=dec.est_dense_cost,
+                           source=dec.source,
+                           shape_class=engine.linear_shape_class(
+                               batch, kf, layer.out))
+                if conv_stream_in and reason is None:
+                    rec["retile"] = True
+                    out["retile"] += 1
+                if reason is not None:
+                    rec["reason"] = reason
+                    out["densify"] += 1
+                out["routes"].append(rec)
             conv_stream_in = False
+            fc_stream_in = layer is not spec.layers[-1]
         elif isinstance(layer, PoolSpec):
             out["pool"] += 1
             if conv_stream_in and engine.pool_ineligible_reason(
@@ -339,7 +367,9 @@ def _layer_cfg(base: engine.EngineConfig | None, *, mnf: bool,
     if not mnf:
         cfg = cfg.replace(backend="dense")
     return cfg.replace(threshold=fire_cfg.threshold,
-                       magnitude=fire_cfg.magnitude)
+                       magnitude=fire_cfg.magnitude,
+                       int8_events=cfg.int8_events
+                       or fire_cfg.quantize_to_int8)
 
 
 def _dense(x) -> jax.Array:
@@ -397,14 +427,31 @@ def _next_boundary_route(nxt, out_shape: tuple, cfg: engine.EngineConfig,
                          blk_m: int):
     """The routing decision the *next* boundary will take on the stream a
     layer is about to emit — the same ``engine.route_conv`` /
-    ``engine.route_pool`` call the dispatch makes, with identical inputs,
-    so the planner's keep-twin choices and the dispatcher's routes can
-    never disagree (DESIGN.md §11)."""
+    ``engine.route_pool`` / ``engine.route_linear`` call the dispatch
+    makes, with identical inputs, so the planner's keep-twin choices and
+    the dispatcher's routes can never disagree (DESIGN.md §11)."""
     if isinstance(nxt, ConvSpec):
         return engine.route_conv(
             out_shape, (nxt.k, nxt.k, out_shape[3], nxt.out_ch), cfg,
             stride=nxt.stride, padding=nxt.padding, blk_m=blk_m)
+    if isinstance(nxt, FCSpec):
+        b, oh, ow, c = out_shape
+        return engine.route_linear(b, oh * ow * c, nxt.out, cfg)
     return engine.route_pool(out_shape, nxt.k, nxt.stride, cfg, blk_m=blk_m)
+
+
+def _fc_chains(nxt, out_shape: tuple, cfg: engine.EngineConfig,
+               blk_m: int) -> bool:
+    """Whether a conv/pool stream emitted at ``blk_m`` granularity chains
+    into a next-layer FC through the re-tiler — the same
+    ``retile_ineligible_reason`` rule ``engine.linear`` applies at
+    dispatch, so the planner drops the twin exactly when the seam will
+    stay events-only (DESIGN.md §12)."""
+    if not isinstance(nxt, FCSpec):
+        return False
+    blk_k = min(cfg.blk_k, max(out_shape[-1], 1))
+    return engine.retile_ineligible_reason(tuple(out_shape), blk_m,
+                                           blk_k) is None
 
 
 def _pixel_events(x):
@@ -418,6 +465,23 @@ def _pixel_events(x):
         return x.per_row_scalar_events().reshape(b, h, w), (b, h, w, c)
     nz = jnp.sum(jnp.abs(x) > 0, axis=-1, dtype=jnp.float32)
     return nz, x.shape
+
+
+def fc_in_events(x, threshold: float = 0.0) -> jax.Array:
+    """Events entering an FC boundary — the one counting rule CNN and MLP
+    stats share (Algorithm 2 charges ``in_events * out`` MACs).
+
+    Stream inputs count their compacted non-zero event values (twin-free);
+    dense inputs count activations at the *configured* fire threshold,
+    matching the chained stream's semantics (its events are the
+    supra-threshold survivors).  Counting ``|x| > 0`` on the dense side
+    would also count int8 dequantization artifacts below the threshold and
+    diverge from the chained path for threshold > 0; int8 *streams* count
+    quantized events, the one documented divergence (DESIGN.md §12).
+    """
+    if isinstance(x, engine.EventStream):
+        return x.num_scalar_events
+    return jnp.sum(jnp.abs(x) > threshold, dtype=jnp.float32)
 
 
 def _density(x) -> jax.Array:
@@ -493,17 +557,20 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
             acc = engine.conv2d(x, wgt, cfg=ccfg, stride=layer.stride,
                                 padding=layer.padding)
             if chain:
-                # Drop the dense twin at conv→conv boundaries AND at
-                # conv→pool boundaries the event-native pool will consume
-                # (events-only — instrumentation reads event values, never
-                # the twin); keep it only where the FC head (or an
-                # ineligible pool) genuinely reads it densely.
+                # Drop the dense twin at conv→conv boundaries, at
+                # conv→pool boundaries the event-native pool will consume,
+                # AND at conv→FC seams the re-tiler serves (events-only —
+                # instrumentation reads event values, never the twin);
+                # keep it only where an ineligible consumer genuinely
+                # reads it densely.
                 pool_chains = (isinstance(nxt, PoolSpec)
                                and engine.pool_ineligible_reason(
                                    tuple(acc.shape), nxt.k, nxt.stride,
                                    conv_base) is None)
-                keep = not (isinstance(nxt, ConvSpec) or pool_chains)
                 bm_next = _next_conv_blk_m(nxt, tuple(acc.shape))
+                keep = not (isinstance(nxt, ConvSpec) or pool_chains
+                            or _fc_chains(nxt, tuple(acc.shape), conv_base,
+                                          bm_next))
                 if not keep and conv_base.route != "auto":
                     # Adaptive/forced routing may send the next boundary
                     # dense; keep the twin so its ``dense_nhwc`` is a free
@@ -535,7 +602,9 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
                 # window-eligible next pool, pixels otherwise.
                 pcfg = conv_base.for_pool(c).replace(
                     blk_m=_next_conv_blk_m(nxt, pooled_shape))
-                keep_pool = not isinstance(nxt, ConvSpec)
+                keep_pool = not (isinstance(nxt, ConvSpec)
+                                 or _fc_chains(nxt, pooled_shape, conv_base,
+                                               pcfg.blk_m))
                 if not keep_pool and conv_base.route != "auto":
                     keep_pool = not _next_boundary_route(
                         nxt, pooled_shape, conv_base,
@@ -555,27 +624,30 @@ def _forward(params, x, spec: CNNSpec, *, mnf: bool, fire_cfg: FireConfig,
                 else:
                     x = pooled
         elif isinstance(layer, FCSpec):
+            # Conv-derived inputs (a chained conv stream, or the round-trip
+            # twin's dense NHWC map) dispatch under the *re-tiled* geometry:
+            # blk_m = 1 and the conv chain's channel-clamped blk_k, so the
+            # twin's encode of the flattened map produces the exact
+            # BlockEvents the re-tiler emits — bitwise equality across the
+            # conv→FC seam, not just allclose (DESIGN.md §12).  FC→FC
+            # boundaries keep the plain cfg (the fire emitted that
+            # geometry).
             if isinstance(x, engine.EventStream) \
                     and x.logical_shape is not None:
-                # A conv stream cannot re-tile to the FC's (B, H·W·C) view;
-                # both workloads pool before FC so the twin is cached.
-                x = x.dense_nhwc()
+                fcfg = cfg.replace(threshold=0.0, blk_m=1, blk_k=x.blk_k)
+            elif not isinstance(x, engine.EventStream) and x.ndim == 4:
+                fcfg = cfg.replace(
+                    threshold=0.0, blk_m=1,
+                    blk_k=min(conv_base.blk_k, max(x.shape[-1], 1)))
+            else:
+                fcfg = cfg.replace(threshold=0.0)
             flat = x if isinstance(x, engine.EventStream) \
                 else x.reshape(x.shape[0], -1)
             if stats is not None:
-                # Dense inputs count events at the *configured* fire
-                # threshold, matching the chained stream's semantics (its
-                # events are the supra-threshold survivors); counting
-                # |flat| > 0 here would also count dequantization
-                # artifacts below the threshold and diverge from the
-                # chained path for threshold > 0.
-                in_ev = flat.num_scalar_events \
-                    if isinstance(flat, engine.EventStream) \
-                    else jnp.sum(jnp.abs(flat) > fire_cfg.threshold,
-                                 dtype=jnp.float32)
+                in_ev = fc_in_events(flat, fire_cfg.threshold)
                 stats.append(dict(event_macs=in_ev * layer.out,  # Algorithm 2
                                   in_events=in_ev))
-            acc = engine.linear(flat, wgt, cfg=cfg.replace(threshold=0.0))
+            acc = engine.linear(flat, wgt, cfg=fcfg)
             last = layer is spec.layers[-1]
             if last:
                 x = acc
@@ -598,13 +670,14 @@ def cnn_forward(params, x: jax.Array, spec: CNNSpec, *, mnf: bool = True,
 
     All compute dispatches through ``repro.engine``; ``engine_cfg`` picks
     the backend (default: pure-jnp block events).  ``chain`` selects the
-    event-resident path (default: on for MNF without int8 requantization —
-    chaining preserves fire semantics only for the plain-threshold fire
-    decision); ``chain=False`` forces the per-layer dense round-trip twin.
+    event-resident path (default: on for MNF; int8 requantization chains
+    too — fire emits int8 event values and the round-trip twin is the
+    fake-quant forward, DESIGN.md §12); ``chain=False`` forces the
+    per-layer dense round-trip twin.
     """
     cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
     if chain is None:
-        chain = mnf and not fire_cfg.quantize_to_int8
+        chain = mnf
     return _forward(params, x, spec, mnf=mnf, fire_cfg=fire_cfg, cfg=cfg,
                     chain=chain and mnf)
 
@@ -623,7 +696,7 @@ def make_cnn_forward(spec: CNNSpec, *, mnf: bool = True,
     """
     cfg = _layer_cfg(engine_cfg, mnf=mnf, fire_cfg=fire_cfg)
     if chain is None:
-        chain = mnf and not fire_cfg.quantize_to_int8
+        chain = mnf
     chain = chain and mnf
 
     def fwd(params, x):
@@ -674,12 +747,11 @@ def _static_layer_stats(spec: CNNSpec, batch: int):
 def _stats_pipeline(spec: CNNSpec, fire_cfg: FireConfig,
                     cfg: engine.EngineConfig):
     """Cached single-jit instrumented forward for ``run_with_stats``."""
-    chain = not fire_cfg.quantize_to_int8
 
     def fwd(params, x):
         stats: list = []
         logits = _forward(params, x, spec, mnf=True, fire_cfg=fire_cfg,
-                          cfg=cfg, chain=chain, stats=stats)
+                          cfg=cfg, chain=True, stats=stats)
         return logits, tuple(stats)
 
     return jax.jit(fwd)

@@ -188,10 +188,13 @@ class ServeEngine:
         executable must report the same list it was compiled with (the
         serve smoke checks restart drift)."""
         from repro.models.cnn import make_cnn_forward
+        from repro.models.mlp import MLPSpec, make_mlp_forward
         bucket = self.cfg.buckets[0] if bucket is None else bucket
         plan = self.plans[bucket]
-        fwd = make_cnn_forward(self.spec, mnf=self.cfg.mnf,
-                               engine_cfg=self.engine_cfg)
+        make_fwd = make_mlp_forward if isinstance(self.spec, MLPSpec) \
+            else make_cnn_forward
+        fwd = make_fwd(self.spec, mnf=self.cfg.mnf,
+                       engine_cfg=self.engine_cfg)
         with mnf_engine.trace_dispatch() as recs:
             jax.eval_shape(fwd, plan.arg_specs[0], plan.arg_specs[1])
         routes = [dict(op=r.get("op"), route=r.get("route"),

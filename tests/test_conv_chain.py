@@ -8,8 +8,8 @@ import pytest
 from repro import engine
 from repro.core.mnf_conv import dense_conv2d
 from repro.models.cnn import (ALEXNET, VGG16, CNNSpec, ConvSpec, FCSpec,
-                              PoolSpec, cnn_forward, init_cnn_params,
-                              make_cnn_pipeline)
+                              PoolSpec, chain_boundary_summary, cnn_forward,
+                              init_cnn_params, make_cnn_pipeline)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -89,12 +89,16 @@ def test_event_resident_forward_bitwise_and_boundaries(spec, size):
     assert sum(1 for r in recs if r.get("fallback_decode")) == 0
     assert sum(1 for r in recs if r.get("pool_events")
                and r["op"] == "maxpool2d") == n_pool
-    # Every conv except the first (dense input image) consumes events.
+    # Every conv consumes events except a chain head whose geometry cannot
+    # strip-encode the dense input image (input_encode counts the heads
+    # that can — AlexNet's stride-4 conv1 at 64 px cannot, VGG16@32 can).
+    n_enc = chain_boundary_summary(s, batch=2)["input_encode"]
     assert sum(1 for r in recs if r.get("chained")
-               and r["op"] == "conv2d") == n_conv - 1
-    # Every FC except the first (flattened pooled map) consumes events.
+               and r["op"] == "conv2d") == n_conv - 1 + n_enc
+    # Every FC consumes events — the first through the conv→FC re-tiler
+    # (DESIGN.md §12), the rest as chained fire streams.
     assert sum(1 for r in recs if r.get("chained")
-               and r["op"] == "linear") == n_fc - 1
+               and r["op"] == "linear") == n_fc
 
     yr = cnn_forward(params, x, s, mnf=True, chain=False)
     assert bool(jnp.all(ym == yr)), "chained != round-trip bitwise"

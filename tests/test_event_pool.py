@@ -183,15 +183,17 @@ def test_chain_boundary_summary_counts_pools():
     s = chain_boundary_summary(MINI, batch=2)
     routes = s.pop("routes")
     assert s == dict(conv=2, fc=1, pool=2, pool_events=2, densify=0,
-                     input_encode=1)
+                     input_encode=1, retile=1)
     # One routing decision per stream-consuming boundary — conv 1 consumes
     # the strip-encoded input image (input_encode), conv 2 consumes a
-    # stream, both pools do; default "auto" mode keeps every boundary on
-    # its geometric event route.
+    # stream, both pools do, and the FC head consumes the re-tiled pool
+    # stream; default "auto" mode keeps every boundary on its geometric
+    # event route.
     assert [r["op"] for r in routes] == ["conv2d", "maxpool2d", "conv2d",
-                                        "maxpool2d"]
-    assert all(r["route"] in ("strip", "pixel", "window") for r in routes), \
-        routes
+                                        "maxpool2d", "linear"]
+    assert all(r["route"] in ("strip", "pixel", "window", "event")
+               for r in routes), routes
+    assert routes[-1]["retile"] is True
     assert all(r["source"] == "geometry" for r in routes)
     # magnitude fire (the LM generalization) disables the identity-0
     # segment max: every pool becomes a densify point again

@@ -17,6 +17,12 @@ the sampled space, on both the block and pallas backends:
   * chain: a conv→pool→conv(stride 1/2/4)→FC network's chained forward is
     bit-identical to the per-layer round-trip twin, whatever mix of
     strip/pixel/pool boundaries the sampled geometry lands on.
+  * conv→FC seam: an eligible (B, H, W, C) stream re-tiles to the
+    flattened FC view by address plan alone — ``linear`` on the stream is
+    bitwise ``linear`` on the dense flatten at matched geometry, pixel and
+    strip granularity alike (DESIGN.md §12).
+  * int8 chain: with int8 event values the chained MLP forward is bitwise
+    the fake-quant round-trip twin, across sampled widths and thresholds.
 
 Zero-event streams (sparsity 1.0) are in-distribution on purpose: every
 contract must hold when nothing fires.
@@ -33,6 +39,7 @@ from repro.core.fire import FireConfig, fire
 from repro.core.mnf_conv import dense_conv2d
 from repro.models.cnn import (CNNSpec, ConvSpec, FCSpec, PoolSpec,
                               cnn_forward, init_cnn_params)
+from repro.models.mlp import MLPSpec, init_mlp_params, mlp_forward
 
 KEY = jax.random.PRNGKey(0)
 
@@ -159,3 +166,64 @@ def test_chained_conv_pool_conv_bitwise(backend, size, ci, k1, k2, s2,
     yd = cnn_forward(params, x, spec, mnf=False)
     np.testing.assert_allclose(np.asarray(ym), np.asarray(yd), atol=5e-3,
                                rtol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# conv→FC seam: re-tiled stream linear == dense flatten linear, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), h=st.integers(1, 6), wmul=st.integers(1, 3),
+       cmul=st.integers(1, 3), strips=st.booleans(),
+       threshold=st.sampled_from([0.0, 0.25]),
+       sparsity=st.sampled_from([0.0, 0.5, 1.0]))
+def test_conv_to_fc_retile_matches_dense_flatten(backend, b, h, wmul, cmul,
+                                                 strips, threshold, sparsity):
+    w0, c = 8 * wmul, 4 * cmul                 # W % STRIP_W, C % blk_k == 0
+    x = _input(_seed(b, h, w0, c, strips, threshold, sparsity),
+               (b, h, w0, c), sparsity)
+    cfg = engine.EngineConfig(backend=backend, blk_k=4, threshold=threshold)
+    stream = engine.fire_conv(x, cfg, blk_m=engine.STRIP_W if strips else 1,
+                              keep_dense=False)
+    wgt = jnp.asarray(np.random.default_rng(_seed(h, w0, c)).normal(
+        size=(h * w0 * c, 8)).astype(np.float32))
+    with engine.trace_dispatch() as recs:
+        y = engine.linear(stream, wgt, cfg=cfg)
+    rec = next(r for r in recs if r.get("op") == "linear")
+    assert rec.get("chained") and rec.get("retile") is True, recs
+    assert not any(r.get("fallback_decode") or r.get("decode")
+                   for r in recs), recs
+    # The dense twin at the seam's geometry (threshold 0: fire already
+    # thresholded, the boundary encode is lossless — DESIGN.md §5/§12).
+    flat = fire(x, FireConfig(threshold=threshold)).reshape(b, h * w0 * c)
+    fcfg = cfg.replace(threshold=0.0, blk_m=1, blk_k=stream.blk_k)
+    assert bool(jnp.all(y == engine.linear(flat, wgt, cfg=fcfg))), \
+        "conv→FC re-tile != dense flatten"
+
+
+# ---------------------------------------------------------------------------
+# int8 chain: chained MLP == fake-quant round-trip twin, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@settings(max_examples=8, deadline=None)
+@given(batch=st.integers(1, 4), in_f=st.sampled_from([16, 48, 96]),
+       w1=st.sampled_from([8, 24]), w2=st.sampled_from([8, 12]),
+       threshold=st.sampled_from([0.0, 0.1]),
+       sparsity=st.sampled_from([0.3, 0.8, 1.0]))
+def test_int8_mlp_chain_matches_fake_quant_twin(backend, batch, in_f, w1, w2,
+                                                threshold, sparsity):
+    spec = MLPSpec("prop_mlp", in_f, (w1, w2, 6))
+    params = init_mlp_params(KEY, spec, weight_sparsity=0.5)
+    x = jax.nn.relu(_input(_seed(batch, in_f, w1, w2, sparsity),
+                           (batch, in_f), sparsity))
+    fire_cfg = FireConfig(threshold=threshold, quantize_to_int8=True)
+    cfg = engine.EngineConfig(backend=backend)
+    with engine.trace_dispatch() as recs:
+        ym = mlp_forward(params, x, spec, mnf=True, chain=True,
+                         fire_cfg=fire_cfg, engine_cfg=cfg)
+    assert not any(r.get("fallback_decode") for r in recs), recs
+    yr = mlp_forward(params, x, spec, mnf=True, chain=False,
+                     fire_cfg=fire_cfg, engine_cfg=cfg)
+    assert bool(jnp.all(ym == yr)), "int8 chain != fake-quant twin"

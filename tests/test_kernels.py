@@ -5,8 +5,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import (event_matmul, event_matmul_ref, fire_and_encode,
-                           fire_compact, fire_compact_ref, wkv6, wkv6_ref)
+from repro.kernels import (event_matmul, event_matmul_int8,
+                           event_matmul_int8_ref, event_matmul_ref,
+                           fire_and_encode, fire_compact, fire_compact_ref,
+                           wkv6, wkv6_ref)
 
 
 @pytest.mark.parametrize("m,k,n,blk_m,blk_k,blk_n", [
@@ -40,6 +42,36 @@ def test_event_matmul_dtypes(rng, dtype):
     ref = jnp.asarray(a, jnp.float32) @ jnp.asarray(w, jnp.float32)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
                                atol=1.5 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@pytest.mark.parametrize("m,k,n,blk_m,blk_k", [
+    (8, 128, 64, 8, 128),
+    (16, 64, 24, 8, 16),
+    (5, 33, 10, 8, 16),              # ragged M and K
+])
+@pytest.mark.parametrize("sparsity", [0.0, 0.6, 1.0])
+def test_event_matmul_int8_vs_ref(rng, m, k, n, blk_m, blk_k, sparsity):
+    """The int8-value lowering (DESIGN.md §12): codes dequantize at tile
+    load, accumulation is f32 — the kernel must match the dense oracle
+    (dequant live tiles, then matmul) up to f32 accumulation order, with
+    all-zero streams in-distribution."""
+    from repro.core.quantize import calibrate, quantize
+
+    a = (rng.normal(size=(m, k)) * (rng.random((m, k)) > sparsity))
+    a = jnp.asarray(a.astype(np.float32))
+    qp = calibrate(a)
+    q = quantize(a, qp)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    y = event_matmul_int8(q, w, qp, blk_m=blk_m, blk_k=blk_k, blk_n=32,
+                          interpret=True)
+    import repro.core.events as ev
+    qpad = ev.pad_to_block_multiple(ev.pad_to_block_multiple(q, blk_m, 0),
+                                    blk_k, 1)
+    wp = ev.pad_to_block_multiple(w, blk_k, 0)
+    ref = event_matmul_int8_ref(qpad, wp, qp, blk_m=blk_m,
+                                blk_k=blk_k)[:m, :n]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-3,
+                               rtol=1e-3)
 
 
 def test_event_matmul_threshold_drops_tiles(rng):

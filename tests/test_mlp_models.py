@@ -1,0 +1,144 @@
+"""Event-native MLP models (DESIGN.md §12): the FC/MNIST-class family.
+
+Pins the module's three contracts:
+
+  * the chained forward (fire→EventStream→linear at every hidden boundary)
+    is bitwise the per-layer round-trip twin within a backend — f32, and
+    int8 against the fake-quant twin;
+  * the boundary accounting is structurally densify- and re-tile-free
+    (every boundary is FC→FC, already in the flattened view);
+  * ``fc_in_events`` is the one counting rule CNN and MLP share: the
+    chained stream's twin-free event count equals the dense twin's count at
+    the configured threshold — including threshold > 0, where counting
+    plain non-zeros on the dense side would diverge.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.fire import FireConfig, fire
+from repro.models.cnn import fc_in_events
+from repro.models.mlp import (LENET_300_100, MLP_MINI, init_mlp_params,
+                              make_mlp_pipeline, mlp_boundary_summary,
+                              mlp_forward, mlp_layer_dense_macs,
+                              run_mlp_with_stats)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _x(seed: int, shape, sparsity=0.5) -> jax.Array:
+    r = np.random.default_rng(seed)
+    x = np.abs(r.normal(size=shape)) * (r.random(shape) > sparsity)
+    return jnp.asarray(x.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# chained == round-trip twin, bitwise (f32 and int8), both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@pytest.mark.parametrize("int8", [False, True])
+def test_mlp_chain_bitwise_vs_roundtrip(backend, int8):
+    spec = MLP_MINI
+    params = init_mlp_params(KEY, spec, weight_sparsity=0.5)
+    x = _x(1, (4, spec.in_features), 0.4)
+    fire_cfg = FireConfig(threshold=0.05, quantize_to_int8=int8)
+    cfg = engine.EngineConfig(backend=backend)
+    with engine.trace_dispatch() as recs:
+        ym = mlp_forward(params, x, spec, mnf=True, chain=True,
+                         fire_cfg=fire_cfg, engine_cfg=cfg)
+    # Only stream-consuming boundaries dispatch through the event seam:
+    # the head takes the dense input, the two hidden boundaries chain.
+    fc = [r for r in recs if r.get("op") == "linear"]
+    assert len(fc) == len(spec.widths) - 1
+    assert all(r.get("chained") for r in fc), fc
+    assert not any(r.get("fallback_decode") or r.get("decode")
+                   for r in recs), recs
+    yr = mlp_forward(params, x, spec, mnf=True, chain=False,
+                     fire_cfg=fire_cfg, engine_cfg=cfg)
+    assert bool(jnp.all(ym == yr)), \
+        "chained != round-trip twin (int8=%s)" % int8
+    if not int8:
+        yd = mlp_forward(params, x, spec, mnf=False, fire_cfg=fire_cfg)
+        np.testing.assert_allclose(np.asarray(ym), np.asarray(yd),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_mlp_lenet_chain_bitwise():
+    """The paper's LeNet-300-100 workload, pruned to 50% weights."""
+    spec = LENET_300_100
+    params = init_mlp_params(KEY, spec, weight_sparsity=0.5)
+    x = _x(2, (2, spec.in_features), 0.6)
+    cfg = engine.EngineConfig(backend="block")
+    ym = mlp_forward(params, x, spec, mnf=True, chain=True, engine_cfg=cfg)
+    yr = mlp_forward(params, x, spec, mnf=True, chain=False, engine_cfg=cfg)
+    assert bool(jnp.all(ym == yr))
+
+
+def test_mlp_pipeline_matches_forward():
+    spec = MLP_MINI
+    params = init_mlp_params(KEY, spec)
+    x = _x(3, (2, spec.in_features))
+    fn = make_mlp_pipeline(spec, donate=False)
+    assert bool(jnp.all(fn(params, x)
+                        == mlp_forward(params, x, spec, mnf=True)))
+
+
+# ---------------------------------------------------------------------------
+# boundary accounting: structurally densify- and re-tile-free
+# ---------------------------------------------------------------------------
+
+def test_mlp_boundary_summary_schema():
+    out = mlp_boundary_summary(MLP_MINI, batch=4)
+    assert out["conv"] == 0 and out["pool"] == 0 and out["pool_events"] == 0
+    assert out["fc"] == len(MLP_MINI.widths)
+    assert out["densify"] == 0 and out["retile"] == 0
+    assert out["input_encode"] == 0
+    # One route decision per stream-consuming boundary (all but the head).
+    assert len(out["routes"]) == len(MLP_MINI.widths) - 1
+    for r in out["routes"]:
+        assert r["op"] == "linear" and r["route"] in ("event", "dense")
+        assert r["shape_class"].startswith("n")
+
+
+def test_mlp_stats_event_macs_bounded():
+    spec = MLP_MINI
+    params = init_mlp_params(KEY, spec, weight_sparsity=0.5)
+    x = _x(4, (4, spec.in_features), 0.7)
+    _, stats = run_mlp_with_stats(params, x, spec)
+    assert [s["dense_macs"] for s in stats] == \
+        [4.0 * m for m in mlp_layer_dense_macs(spec)]
+    for s in stats:
+        assert s["kind"] == "fc" and s["event_macs"] <= s["dense_macs"]
+    # Layer 1 charges exactly the input's non-zeros (Algorithm 2).
+    assert stats[0]["in_events"] == float(jnp.sum(jnp.abs(x) > 0))
+
+
+# ---------------------------------------------------------------------------
+# fc_in_events: dense twin == chained stream, at threshold > 0
+# ---------------------------------------------------------------------------
+
+def test_fc_in_events_parity_fc_boundary():
+    t = 0.2
+    acc = jnp.asarray(np.random.default_rng(5).normal(
+        size=(4, 64)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", threshold=t)
+    stream = engine.fire(acc, cfg, keep_dense=False)
+    dense = fire(acc, FireConfig(threshold=t))
+    assert float(fc_in_events(stream)) == float(fc_in_events(dense, t))
+    # The rule counts supra-threshold survivors, not raw non-zeros: at
+    # threshold > 0 those differ, which is exactly the regression pinned.
+    assert float(fc_in_events(dense, t)) < float(jnp.sum(jnp.abs(acc) > 0))
+
+
+def test_fc_in_events_parity_conv_fc_seam():
+    t = 0.15
+    b, h, w, c = 2, 3, 8, 8
+    x = jnp.asarray(np.random.default_rng(6).normal(
+        size=(b, h, w, c)).astype(np.float32))
+    cfg = engine.EngineConfig(backend="block", blk_k=4, threshold=t)
+    s = engine.fire_conv(x, cfg, blk_m=1, keep_dense=False).retile_fc()
+    dense = fire(x, FireConfig(threshold=t)).reshape(b, h * w * c)
+    assert float(fc_in_events(s)) == float(fc_in_events(dense, t))

@@ -1,0 +1,155 @@
+"""Conv→FC re-tiler exactness contract (DESIGN.md §12).
+
+The re-tile is pure address arithmetic: for an eligible conv stream it must
+equal *encoding the flattened dense twin* at the FC geometry — array for
+array (values, block_idx, counts), not merely after a decode.  Pinned here
+for pixel- and strip-granular streams, f32 and int8 event values (values
+travel by gather only, so the contract is dtype-blind), and zero-event
+streams.  Ineligible geometry is a *named* refusal: the three
+``retile_ineligible_reason`` messages are pinned verbatim, and the engine's
+``linear`` must surface the same string on its visible dense fallback.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.events import (STRIP_W, encode_block_events,
+                               retile_block_events,
+                               retile_ineligible_reason)
+from repro.core.quantize import calibrate, quantize
+from repro.engine import EventStream
+
+
+def _nhwc(seed: int, shape, sparsity=0.5) -> jax.Array:
+    r = np.random.default_rng(seed)
+    x = r.normal(size=shape) * (r.random(shape) > sparsity)
+    return jnp.asarray(x.astype(np.float32))
+
+
+def _assert_same_events(got, want):
+    assert got.num_k_blocks == want.num_k_blocks
+    for name in ("values", "block_idx", "counts"):
+        g, w = getattr(got, name), getattr(want, name)
+        assert g.shape == w.shape and g.dtype == w.dtype, \
+            (name, g.shape, g.dtype, w.shape, w.dtype)
+        assert bool(jnp.all(g == w)), name
+
+
+# ---------------------------------------------------------------------------
+# re-tile == encode(flatten), array for array
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("blk_m", [1, STRIP_W])
+@pytest.mark.parametrize("shape,blk_k", [
+    ((2, 3, 8, 8), 4),
+    ((1, 2, 16, 6), 3),      # C not a power of two
+    ((1, 1, 8, 4), 4),       # single K-block per pixel
+    ((3, 5, 24, 8), 8),      # one K-block == full channel depth
+])
+@pytest.mark.parametrize("sparsity", [0.0, 0.6, 1.0])
+def test_retile_equals_flat_encode(blk_m, shape, blk_k, sparsity):
+    b, h, w, c = shape
+    x = _nhwc(hash((shape, blk_m, blk_k, sparsity)) % (2 ** 31), shape,
+              sparsity)
+    s = EventStream.encode_nhwc(x, blk_k=blk_k, blk_m=blk_m)
+    rt = s.retile_fc()
+    flat = x.reshape(b, h * w * c)
+    ref = EventStream.encode(flat, blk_m=1, blk_k=rt.blk_k,
+                             capacity=rt.events.capacity)
+    _assert_same_events(rt.events, ref.events)
+    assert rt.shape == (b, h * w * c) and rt.blk_m == 1
+    assert rt.logical_shape is None                 # no longer a conv stream
+    assert bool(jnp.all(rt.dense() == flat))        # twin rode along, bitwise
+
+
+@pytest.mark.parametrize("blk_m", [1, STRIP_W])
+def test_retile_int8_values_gather_only(blk_m):
+    """int8 codes ride the same address plan untouched — no FP arithmetic
+    touches the values, so the re-tiled stream is bitwise the encode of the
+    flattened code matrix (and stays int8)."""
+    b, h, w, c = 2, 3, 8, 8
+    x = _nhwc(7, (b, h, w, c), 0.5)
+    qp = calibrate(x)
+    q = quantize(x, qp)                              # (B, H, W, C) int8
+    a = q.reshape(b * h * w, c)
+    bev = encode_block_events(a, blk_m=blk_m, blk_k=4)
+    rt = retile_block_events(bev, (b, h, w, c), blk_m)
+    ref = encode_block_events(q.reshape(b, h * w * c), blk_m=1, blk_k=4,
+                              capacity=rt.capacity)
+    assert rt.values.dtype == jnp.int8
+    _assert_same_events(rt, ref)
+
+
+def test_retile_fc_carries_qparams():
+    """An int8 conv EventStream re-tiles with its QParams (and the
+    dequantized twin) intact — the FC consumer dequantizes at load."""
+    b, h, w, c = 1, 2, 8, 8
+    x = jax.nn.relu(_nhwc(11, (b, h, w, c), 0.4))
+    cfg = engine.EngineConfig(backend="block", blk_k=4, int8_events=True)
+    s = engine.fire_conv(x, cfg, blk_m=1)
+    assert s.qparams is not None
+    rt = s.retile_fc()
+    assert rt.qparams is s.qparams
+    assert rt.events.values.dtype == jnp.int8
+    assert bool(jnp.all(rt.dense() == s.dense().reshape(b, h * w * c)))
+
+
+# ---------------------------------------------------------------------------
+# ineligible geometry: the three named refusals, verbatim
+# ---------------------------------------------------------------------------
+
+def test_retile_ineligible_reasons_verbatim():
+    assert retile_ineligible_reason((1, 2, 8, 8), 1, 4) is None
+    assert retile_ineligible_reason((1, 2, 8, 8), STRIP_W, 4) is None
+    assert retile_ineligible_reason(None, 1, 4) == (
+        "stream has no NHWC logical shape (not a conv stream; "
+        "nothing to re-tile)")
+    assert retile_ineligible_reason((1, 2, 8, 6), 1, 4) == (
+        "channel depth 6 not a multiple of blk_k=4 (the conv encoding's "
+        "K-padding columns would interleave into the flattened FC row)")
+    assert retile_ineligible_reason((1, 2, 8, 8), 4, 4) == (
+        "row granularity blk_m=4 is neither pixel (1) nor strip "
+        "(STRIP_W=8)")
+
+
+def test_linear_ineligible_conv_stream_reports_named_reason():
+    """A conv stream whose geometry cannot re-tile decodes *visibly*: the
+    dispatch record is fallback_decode with the verbatim refusal message —
+    never a silent densify."""
+    b, h, w, c = 1, 2, 8, 6                          # C=6 % blk_k=4 != 0
+    x = jax.nn.relu(_nhwc(3, (b, h, w, c), 0.3))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=1)
+    wgt = jnp.asarray(np.random.default_rng(0).normal(
+        size=(h * w * c, 5)).astype(np.float32))
+    with engine.trace_dispatch() as recs:
+        y = engine.linear(s, wgt, cfg=cfg)
+    rec = next(r for r in recs if r.get("op") == "linear")
+    assert rec.get("fallback_decode") and not rec.get("retile")
+    assert rec["reason"] == (
+        "channel depth 6 not a multiple of blk_k=4 (the conv encoding's "
+        "K-padding columns would interleave into the flattened FC row)")
+    ref = s.dense_nhwc().reshape(b, h * w * c) @ wgt
+    assert bool(jnp.all(y == ref))                   # correct, just visible
+
+
+def test_linear_eligible_conv_stream_chains_through_retile():
+    """The eligible seam never decodes: one chained linear record with
+    retile=True, bitwise the flattened dense matmul."""
+    b, h, w, c = 2, 3, 8, 8
+    x = jax.nn.relu(_nhwc(5, (b, h, w, c), 0.3))
+    cfg = engine.EngineConfig(backend="block", blk_k=4)
+    s = engine.fire_conv(x, cfg, blk_m=STRIP_W, keep_dense=False)
+    wgt = jnp.asarray(np.random.default_rng(1).normal(
+        size=(h * w * c, 7)).astype(np.float32))
+    with engine.trace_dispatch() as recs:
+        y = engine.linear(s, wgt, cfg=cfg)
+    rec = next(r for r in recs if r.get("op") == "linear")
+    assert rec.get("chained") and rec.get("retile") is True
+    assert not any(r.get("fallback_decode") or r.get("decode") for r in recs)
+    xd = jax.nn.relu(x).reshape(b, h * w * c)
+    assert bool(jnp.all(y == engine.linear(xd, wgt, cfg=cfg)))
