@@ -805,6 +805,180 @@ def serve_rows(out_path: str = "BENCH_engine.json", *, smoke=False, reps=3):
     return entries
 
 
+def _lm_decode_gate():
+    """Mini recurrent net (CI-fatal): the reduced rwkv6 + hymba decode
+    steps run with MNF on — every eligible recurrent boundary must chain,
+    none may fall back (the silent-degrade bug class on the new seam)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models.ssm import (mamba_init, mamba_step, rwkv6_block_apply,
+                                  rwkv6_block_decode, rwkv6_block_init)
+    rng = np.random.default_rng(0)
+    recs_all = []
+    # rwkv6 token step
+    cfg = get_config("rwkv6-7b").reduced()
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    p, _ = rwkv6_block_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 4, cfg.d_model)).astype(np.float32))
+    _, st = rwkv6_block_apply(p, x, cfg)
+    tok = jnp.asarray(rng.normal(size=(2, 1, cfg.d_model)).astype(np.float32))
+    with engine.trace_dispatch() as recs:
+        rwkv6_block_decode(p, tok, cfg, st)
+    recs_all.extend(recs)
+    # hymba mamba token step
+    mcfg = get_config("hymba-1.5b").reduced()
+    mcfg = dataclasses.replace(mcfg, compute_dtype="float32",
+                               ssm=dataclasses.replace(mcfg.ssm, expand=1))
+    mp, _ = mamba_init(jax.random.PRNGKey(1), mcfg, d_inner=mcfg.d_model)
+    conv = jnp.zeros((2, mcfg.ssm.conv_dim - 1, mcfg.d_model), jnp.float32)
+    h = jnp.zeros((2, mcfg.d_model, mcfg.ssm.state_dim), jnp.float32)
+    xt = jnp.asarray(rng.normal(size=(2, 1, mcfg.d_model)).astype(np.float32))
+    with engine.trace_dispatch() as recs:
+        mamba_step(mp, xt, mcfg, (conv, h), with_events=True)
+    recs_all.extend(recs)
+    rec_recs = [r for r in recs_all if r.get("op") == "recurrent_step"]
+    bad = [r for r in rec_recs if r.get("fallback_decode")]
+    if bad:
+        raise RuntimeError(
+            f"lm_decode: an eligible recurrent boundary reported "
+            f"fallback_decode — the token-step state update must consume "
+            f"the fired event stream: {bad}")
+    if not any(r.get("chained") for r in rec_recs):
+        raise RuntimeError(
+            f"lm_decode: no chained recurrent_step record — the gated "
+            f"decode path did not dispatch at all: {rec_recs}")
+
+
+def lm_decode_rows(out_path: str = "BENCH_engine.json", *, smoke=False,
+                   reps=3):
+    """Fire-gated recurrent decode (lm_decode entries, DESIGN.md §13).
+
+    Per (kind, backend, threshold) sweep point: fired events/token of the
+    delta-fired drive, gated vs dense-step steady-state wall time, output
+    drift of the gated step against the ungated dense step (the
+    threshold/quality trade the sweep exposes), and the exactness flags —
+    ``bit_exact`` at threshold 0 is the block backend's cross-formulation
+    contract (gated == dense step bitwise); the pallas kernel's contract is
+    within-backend (``bit_within_backend``: gated == the same kernel on an
+    all-live drive — interpret mode contracts mul-add chains into FMAs, a
+    1-ulp formulation difference vs the jnp tree).  Also runs the mini
+    recurrent net structural gate: CI-fatal on any eligible-boundary
+    fallback_decode.
+    """
+    import dataclasses
+
+    from repro.engine.stream import EventStream
+    from repro.kernels.mamba_scan.step import mamba_step_ref
+    from repro.kernels.wkv6.step import wkv6_step_ref
+
+    _lm_decode_gate()
+    rng = np.random.default_rng(0)
+    if smoke:
+        geoms = dict(wkv6=(8, 16), mamba=(4, 32, 8))
+        thresholds = (0.0, 0.3)
+        backends = ("block", "pallas")
+    else:
+        geoms = dict(wkv6=(32, 64), mamba=(8, 128, 16))
+        thresholds = (0.0, 0.1, 0.3, 1.0)
+        backends = ("block", "pallas")
+    entries = []
+    for kind in ("wkv6", "mamba"):
+        if kind == "wkv6":
+            g, d = geoms[kind]
+            drive = jnp.asarray(rng.normal(size=(g, d)).astype(np.float32))
+            state = jnp.asarray(
+                rng.normal(size=(g, d, d)).astype(np.float32))
+            ops = dict(
+                r=jnp.asarray(rng.normal(size=(g, d)).astype(np.float32)),
+                v=jnp.asarray(rng.normal(size=(g, d)).astype(np.float32)),
+                w=jnp.asarray(
+                    rng.uniform(0.3, 0.99, (g, d)).astype(np.float32)),
+                u=jnp.asarray(rng.normal(size=(g, d)).astype(np.float32)))
+            dense_ref = wkv6_step_ref
+            dense_args = lambda dr: (ops["r"], dr, ops["v"], ops["w"],
+                                     ops["u"], state)
+            shape = dict(g=g, d=d)
+        else:
+            b, di, n = geoms[kind]
+            g, d = b, di
+            drive = jnp.asarray(rng.normal(size=(b, di)).astype(np.float32))
+            state = jnp.asarray(
+                rng.normal(size=(b, di, n)).astype(np.float32))
+            ops = dict(
+                da=jnp.asarray(
+                    rng.uniform(0.3, 0.99, (b, di, n)).astype(np.float32)),
+                bmat=jnp.asarray(
+                    rng.normal(size=(b, n)).astype(np.float32)),
+                cmat=jnp.asarray(
+                    rng.normal(size=(b, n)).astype(np.float32)))
+            dense_ref = mamba_step_ref
+            dense_args = lambda dr: (dr, ops["da"], ops["bmat"],
+                                     ops["cmat"], state)
+            shape = dict(b=b, d_inner=di, state_dim=n)
+        # The quality yardstick: the ungated dense step on the raw drive.
+        # Timing is jitted; the exactness flags compare EAGER evaluations —
+        # the contract is formulation-level (event path vs dense step) and
+        # must not be confounded by XLA fusion-order differences between a
+        # jitted and an un-jitted program.
+        o_full = dense_ref(*dense_args(drive))[0]
+        dense_us, dense_compile_us, _ = _timeit(
+            jax.jit(lambda dr: dense_ref(*dense_args(dr))), drive,
+            reps=reps)
+        for backend in backends:
+            for th in thresholds:
+                cfg = engine.EngineConfig(
+                    backend=backend,
+                    threshold=th).for_recurrent(d).resolved()
+                stream = engine.fire_delta(drive, cfg)
+                events = float(stream.num_scalar_events)
+
+                # The served token step jits fire + state update as one
+                # program — time the same thing here.
+                @jax.jit
+                def gated(dr, cfg=cfg):
+                    st = engine.fire_delta(dr, cfg)
+                    return engine.recurrent_step(kind, st, state, cfg,
+                                                 **ops)
+                us, compile_us, _ = _timeit(gated, drive, reps=reps)
+                o, _ = engine.recurrent_step(kind, stream, state, cfg,
+                                             **ops)
+                fired = jnp.where(jnp.abs(drive) > th, drive, 0.0)
+                o_ref = dense_ref(*dense_args(fired))[0]
+                bit = bool(jnp.all(o == o_ref)) if th == 0.0 else None
+                al = dataclasses.replace(
+                    EventStream.encode(stream.dense(), blk_m=1,
+                                       blk_k=stream.blk_k, threshold=-1.0),
+                    signed=True)
+                o_al, _ = engine.recurrent_step(kind, al, state, cfg, **ops)
+                drift = float(jnp.max(jnp.abs(o - o_full)))
+                entries.append(dict(
+                    kind="lm_decode", op=kind, backend=backend,
+                    threshold=th, **shape,
+                    events_per_token=round(events / max(g, 1), 2),
+                    events_total=events,
+                    density=round(events / max(g * d, 1), 4),
+                    us=round(us, 1), compile_us=round(compile_us, 1),
+                    dense_us=round(dense_us, 1),
+                    dense_compile_us=round(dense_compile_us, 1),
+                    speedup_vs_dense=round(dense_us / max(us, 1e-9), 3),
+                    bit_exact=bit,
+                    bit_within_backend=bool(jnp.all(o == o_al)),
+                    max_drift_vs_dense=drift))
+                if th == 0.0 and backend == "block" and not bit:
+                    raise RuntimeError(
+                        f"lm_decode[{kind}/block]: gated step is not "
+                        f"bitwise the dense step at threshold 0 "
+                        f"(DESIGN.md §13 contract)")
+                if not entries[-1]["bit_within_backend"]:
+                    raise RuntimeError(
+                        f"lm_decode[{kind}/{backend}@{th}]: gating changed "
+                        f"the numbers — gated != all-live through the same "
+                        f"kernel (within-backend contract)")
+    _merge_bench(out_path, entries, {"lm_decode"})
+    return entries
+
+
 def _adaptive_case(mk: dict, stream, *, op: str, reps=3):
     """One adaptive-vs-static contest on a shared input stream.
 
@@ -1263,6 +1437,15 @@ def main():
                          "int8 vs f32 steady-state, and the per-layer "
                          "exactness-contract flags; fails on any eligible "
                          "FC boundary reporting fallback_decode")
+    ap.add_argument("--lm-decode", action="store_true",
+                    help="benchmark the fire-gated recurrent decode "
+                         "(lm_decode entries): events/token across a "
+                         "threshold sweep, gated vs dense-step "
+                         "steady-state, output drift, and the exactness "
+                         "flags (block bitwise at threshold 0; pallas "
+                         "bitwise within-backend); fails on any "
+                         "eligible recurrent boundary reporting "
+                         "fallback_decode in the mini recurrent net")
     ap.add_argument("--sweep", action="store_true",
                     help="occupancy sweep 0-1 over conv/pool/linear "
                          "boundaries: per-route microseconds at each point "
@@ -1303,6 +1486,8 @@ def main():
             print(json.dumps(e))
         for e in mlp_rows(args.out, smoke=True, reps=1):
             print(json.dumps(e))
+        for e in lm_decode_rows(args.out, smoke=True, reps=1):
+            print(json.dumps(e))
         for e in serve_rows(args.out, smoke=True, reps=1):
             print(json.dumps(e))
         route_gate(args.out)
@@ -1325,11 +1510,14 @@ def main():
     if args.mlp:
         for e in mlp_rows(args.out):
             print(json.dumps(e))
+    if args.lm_decode:
+        for e in lm_decode_rows(args.out):
+            print(json.dumps(e))
     if args.sweep:
         for e in sweep_rows(args.out):
             print(json.dumps(e))
     if (args.engine or args.cnn_chain or args.conv_fused or args.pool
-            or args.serve or args.mlp or args.sweep):
+            or args.serve or args.mlp or args.sweep or args.lm_decode):
         return
     for name, us, compile_us, derived in rows():
         print(f"{name},{us:.1f},compile={compile_us:.1f},{derived}")

@@ -1,18 +1,37 @@
 """Batched LM serving: prefill + KV-cache decode loop.
 
-    PYTHONPATH=src python examples/serve_lm_decode.py --arch hymba-1.5b
+    python examples/serve_lm_decode.py --arch hymba-1.5b
+
+Runs ``repro.launch.serve`` *in-process* (import + call) instead of
+re-exec'ing a child interpreter: a ``subprocess`` re-exec silently depended
+on PYTHONPATH=src reaching the child's environment — from a clean
+environment (cron, CI, a bare shell) the child could not import ``repro``
+at all.  The launcher now makes itself runnable from anywhere by putting
+the repo's src directory on ``sys.path`` before importing.
 """
-import subprocess
+import os
 import sys
 
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "src")
 
-def main():
-    args = sys.argv[1:]
+
+def main(argv=None):
+    if _SRC not in sys.path:
+        sys.path.insert(0, _SRC)
+    from repro.launch import serve
+
+    args = list(sys.argv[1:] if argv is None else argv)
     if "--arch" not in args:
         args = ["--arch", "qwen2-0.5b"] + args
-    cmd = [sys.executable, "-m", "repro.launch.serve", "--reduced",
-           "--batch", "4", "--prompt-len", "32", "--gen", "16"] + args
-    raise SystemExit(subprocess.call(cmd))
+    argv_full = ["serve_lm_decode", "--reduced", "--batch", "4",
+                 "--prompt-len", "32", "--gen", "16"] + args
+    old_argv = sys.argv
+    sys.argv = argv_full
+    try:
+        serve.main()
+    finally:
+        sys.argv = old_argv
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ __all__ = [
     "decode_block_events",
     "gather_row_groups",
     "gather_row_strips",
+    "live_block_mask",
     "pad_to_block_multiple",
     "pool_window_map",
     "retile_block_events",
@@ -257,6 +258,28 @@ def gather_row_strips(bev: BlockEvents, idx: jax.Array, live: jax.Array,
     ok = jnp.asarray([0 <= r < bm for r in rows], bool)
     vals = jnp.where(ok[None, None, :, None], g.values[:, :, take, :], 0)
     return dataclasses.replace(g, values=vals)
+
+
+def live_block_mask(bev: BlockEvents) -> jax.Array:
+    """Per-K-block liveness of an event set, (G, num_k_blocks) bool.
+
+    Scatter of the compacted slots back onto the block grid.  Padding slots
+    repeat the *last live* block index (the DMA-no-op convention), so they
+    are masked out before the scatter — a dead block stays dead even when a
+    padding slot points at its neighbour.  This is the skip mask the
+    event-gated recurrent step kernels consult per state row-block
+    (DESIGN.md §13): ``decode_block_events(bev) != 0`` implies the mask is
+    live at that block, never the reverse.
+    """
+    g, e = bev.block_idx.shape
+    mask = jnp.zeros((g, bev.num_k_blocks), jnp.int32)
+    if g == 0 or bev.num_k_blocks == 0:
+        return mask > 0
+    slot_live = jnp.arange(e, dtype=jnp.int32)[None, :] < bev.counts[:, None]
+    garr = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32)[:, None], (g, e))
+    mask = mask.at[garr.reshape(-1), bev.block_idx.reshape(-1)].add(
+        slot_live.reshape(-1).astype(jnp.int32))
+    return mask > 0
 
 
 def scalar_event_rows(bev: BlockEvents) -> jax.Array:

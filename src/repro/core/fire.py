@@ -32,12 +32,22 @@ class FireConfig:
                  typically 0).  ``magnitude=True`` fires on |a| > threshold —
                  the LM generalization for non-ReLU nonlinearities.
     magnitude:   see above.
+    signed:      explicit signed-event mode: fire on |a| > threshold and emit
+                 the *signed* value (a negative supra-threshold delta is an
+                 event, not a drop).  Same gating rule as ``magnitude`` —
+                 the separate flag exists because downstream consumers must
+                 know the stream can carry negatives: the pool's segment max
+                 (identity 0) is only bitwise for ReLU-family streams, so it
+                 rejects signed streams by name (engine.pool_ineligible_reason),
+                 while the recurrent decode path *requires* signed fire
+                 (per-token state deltas are two-sided — DESIGN.md §13).
     quantize_to_int8: reproduce the paper's accumulate(fp32/int32) -> int8
                  requantization before firing.
     """
 
     threshold: float = 0.0
     magnitude: bool = False
+    signed: bool = False
     quantize_to_int8: bool = False
 
 
@@ -49,7 +59,7 @@ def fire(acc: jax.Array, cfg: FireConfig = FireConfig(),
     is a separate step (``fire_to_block_events`` /
     ``events.encode_scalar_events``) so callers can choose granularity.
     """
-    if cfg.magnitude:
+    if cfg.magnitude or cfg.signed:
         live = jnp.abs(acc) > cfg.threshold
         fired = jnp.where(live, acc, 0)
     else:

@@ -26,10 +26,13 @@ from repro.core.events import (STRIP_CO_MIN, STRIP_STRIDES, STRIP_W,
                                retile_ineligible_reason, strip_eligible,
                                strip_ineligible_reason)
 from repro.costmodel.crossover import linear_shape_class
-from repro.engine.api import (conv2d, describe, fire, fire_conv, linear,
-                              matmul, maxpool2d, pool_ineligible_reason,
-                              route_conv, route_linear, route_pool, sparsify)
-from repro.engine.config import BACKENDS, EngineConfig
+from repro.engine.api import (conv2d, describe, fire, fire_conv, fire_delta,
+                              linear, matmul, maxpool2d,
+                              pool_ineligible_reason,
+                              recurrent_ineligible_reason, recurrent_step,
+                              route_conv, route_linear, route_pool,
+                              route_recurrent, sparsify)
+from repro.engine.config import BACKENDS, RECURRENT_BLK_K, EngineConfig
 from repro.engine.registry import (dispatch, get_backend, list_backends,
                                    register_backend, registered_ops)
 from repro.engine.stream import EventStream
@@ -38,14 +41,15 @@ from repro.engine.trace import trace_dispatch
 import repro.engine.backends  # noqa: F401  (registers built-in backends)
 
 __all__ = [
-    "BACKENDS", "EngineConfig", "EventStream",
+    "BACKENDS", "RECURRENT_BLK_K", "EngineConfig", "EventStream",
     "STRIP_CO_MIN", "STRIP_STRIDES", "STRIP_W", "strip_eligible",
     "strip_ineligible_reason", "pool_window_ineligible_reason",
     "retile_ineligible_reason", "linear_shape_class",
     "register_backend", "get_backend", "dispatch", "list_backends",
     "registered_ops",
     "matmul", "linear", "conv2d", "maxpool2d", "pool_ineligible_reason",
-    "route_conv", "route_pool", "route_linear",
-    "fire", "fire_conv", "sparsify", "describe",
+    "route_conv", "route_pool", "route_linear", "route_recurrent",
+    "recurrent_ineligible_reason", "recurrent_step",
+    "fire", "fire_conv", "fire_delta", "sparsify", "describe",
     "trace_dispatch",
 ]

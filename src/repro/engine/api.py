@@ -22,7 +22,9 @@ from repro.engine.stream import EventStream
 
 __all__ = ["matmul", "linear", "conv2d", "maxpool2d",
            "pool_ineligible_reason", "route_conv", "route_pool",
-           "route_linear", "fire", "fire_conv", "sparsify", "describe"]
+           "route_linear", "route_recurrent", "recurrent_ineligible_reason",
+           "recurrent_step", "fire", "fire_conv", "fire_delta", "sparsify",
+           "describe"]
 
 _DEFAULT = EngineConfig()
 
@@ -138,6 +140,32 @@ def route_linear(m: int, k: int, n: int, cfg: EngineConfig, *,
         event_route=event_route, dense_macs=float(m * k * n),
         avg_touched=1.0, c_out=n, backend=name,
         shape_class=xover.linear_shape_class(m, k, n))
+    if dec.is_event and dec.route != event_route:
+        dec = _with_route(dec, event_route or "dense")
+    return dec
+
+
+def route_recurrent(kind: str, g: int, d: int, n: int, cfg: EngineConfig, *,
+                    eligible: bool = True) -> "xover.RouteDecision":
+    """Routing decision for a fire-gated recurrent decode step.
+
+    ``kind`` is "wkv6" or "mamba"; ``g`` the flattened row count (B·H for
+    wkv6, B for mamba), ``d`` the drive width (head_dim / d_inner), ``n``
+    the state's trailing width (head_dim / d_state).  The dense step's work
+    is the decay + increment over the full (G, D, N) state — 2·G·D·N MACs —
+    and the event path scales the increment half by occupancy.
+    ``eligible=False`` (see :func:`recurrent_ineligible_reason`) forces the
+    visible dense fallback whatever the mode.
+    """
+    name = cfg.resolve_backend()
+    event_route = "event" if (
+        eligible and name in list_backends(f"recurrent_step_{kind}")) \
+        else None
+    dec = xover.decide_route(
+        cfg.route, "recurrent", occupancy=cfg.occupancy_hint,
+        event_route=event_route, dense_macs=float(2 * g * d * n),
+        avg_touched=1.0, c_out=n, backend=name,
+        shape_class=f"{kind}d{d}")
     if dec.is_event and dec.route != event_route:
         dec = _with_route(dec, event_route or "dense")
     return dec
@@ -353,6 +381,10 @@ def pool_ineligible_reason(x, k: int, stride: int | None = None,
     if cfg.magnitude:
         return ("magnitude fire can emit negative events; the segment max "
                 "runs with identity 0 and needs a ReLU-family stream")
+    if isinstance(x, EventStream) and x.signed:
+        return ("stream carries signed event values (signed/magnitude "
+                "fire); the segment max runs with identity 0 and needs a "
+                "ReLU-family stream")
     name = cfg.resolve_backend()
     if name not in list_backends("maxpool2d_events"):
         return f"backend {name!r} has no maxpool2d_events op"
@@ -461,6 +493,138 @@ def maxpool2d(x, k: int, stride: int | None = None,
     return dispatch("maxpool2d", cfg)(x, k, stride, cfg)
 
 
+# ---------------------------------------------------------------------------
+# Fire-gated recurrent decode (DESIGN.md §13): the per-token state-update
+# *increment drive* (wkv6's key vector, Mamba's Δt·x gate) is thresholded
+# by signed fire and the state update skips dead channel-blocks — the decay
+# applies everywhere (it is input-independent).  At threshold 0 the gated
+# step is float-equal to the dense step (the decode-time twin of the CNN
+# chain's threshold-0 invariant).
+# ---------------------------------------------------------------------------
+
+def recurrent_ineligible_reason(stream, kind: str = "wkv6",
+                                cfg: EngineConfig = _DEFAULT) -> str | None:
+    """Why ``recurrent_step`` cannot consume ``stream`` in the event domain
+    (None = can).
+
+    The recurrent step wants a per-token row stream: one row per flattened
+    (batch × head), ``blk_m == 1``, *signed* event values (per-token deltas
+    are two-sided — an unsigned/ReLU-fired stream already dropped every
+    negative delta, silently corrupting the state), f32 values (state
+    updates accumulate in f32), and a resolved backend registering the
+    ``recurrent_step_{kind}`` op.
+    """
+    if stream.logical_shape is not None and len(stream.logical_shape) == 4:
+        return ("conv stream (NHWC logical_shape) — the recurrent step "
+                "consumes per-token (G, D) row streams")
+    if stream.blk_m != 1:
+        return (f"recurrent drives are one row per (batch x head): blk_m "
+                f"must be 1, stream has blk_m={stream.blk_m}")
+    if not stream.signed:
+        return ("recurrent deltas are signed; this stream was fired "
+                "unsigned (ReLU fire), so negative deltas were already "
+                "dropped")
+    if stream.qparams is not None:
+        return ("int8 event values are not supported by the recurrent "
+                "step (state updates accumulate in f32)")
+    name = cfg.resolve_backend()
+    if name not in list_backends(f"recurrent_step_{kind}"):
+        return f"backend {name!r} has no recurrent_step_{kind} op"
+    return None
+
+
+def fire_delta(drive: jax.Array, cfg: EngineConfig = _DEFAULT, *,
+               keep_dense: bool = True) -> EventStream:
+    """Signed fire over a per-token increment drive (G, D) -> row stream.
+
+    The recurrent twin of :func:`fire`: gates on |Δ| > threshold and emits
+    the *signed* value — a negative supra-threshold delta is an event, not
+    a drop — at the recurrent tile geometry (``EngineConfig.for_recurrent``:
+    blk_m == 1, narrow K blocks).  The emitted stream is flagged ``signed``
+    so ReLU-family consumers (the pool's segment max) reject it by name and
+    :func:`recurrent_step` accepts it.
+    """
+    from repro.core.fire import FireConfig
+    from repro.core.fire import fire as jnp_fire
+
+    c = cfg.for_recurrent(drive.shape[-1]).for_width(*drive.shape)
+    if 0 in drive.shape:
+        # Degenerate drive (empty batch / zero-width channel axis): explicit
+        # empty stream, no encode machinery (Pallas consumers must not see
+        # a 0-extent launch).
+        s = EventStream.empty(drive.shape, blk_m=1, blk_k=c.blk_k,
+                              capacity=c.capacity, dtype=drive.dtype,
+                              fired=drive if keep_dense else None)
+        return dataclasses.replace(s, signed=True)
+    fired = jnp_fire(drive, FireConfig(threshold=c.threshold, signed=True))
+    s = EventStream.encode(fired, blk_m=1, blk_k=c.blk_k,
+                           capacity=c.capacity, threshold=0.0,
+                           keep_dense=keep_dense)
+    return dataclasses.replace(s, signed=True)
+
+
+def _recurrent_dense_step(kind: str, drive: jax.Array, state: jax.Array,
+                          ops: dict):
+    """The dense oracle of one recurrent step (the fallback path — same
+    formulation the event backends use, so the route never changes bits at
+    threshold 0 on the block backend)."""
+    if kind == "wkv6":
+        from repro.kernels.wkv6.step import wkv6_step_ref
+        return wkv6_step_ref(ops["r"], drive, ops["v"], ops["w"], ops["u"],
+                             state)
+    from repro.kernels.mamba_scan.step import mamba_step_ref
+    return mamba_step_ref(drive, ops["da"], ops["bmat"], ops["cmat"], state)
+
+
+def recurrent_step(kind: str, stream: EventStream, state: jax.Array,
+                   cfg: EngineConfig = _DEFAULT, **ops):
+    """One fire-gated recurrent decode step (DESIGN.md §13).
+
+    kind:    "wkv6" (ops r, v, w, u; state (G, D, D)) or
+             "mamba" (ops da, bmat, cmat; state (B, DI, N)).
+    stream:  signed row stream of the increment drive (``fire_delta``).
+    Returns (readout, new_state) — for wkv6 the per-row output o (G, D)
+    and S'; for mamba the state readout y (B, DI) (skip/gate terms are the
+    model's) and h'.
+
+    Event-eligible streams (see :func:`recurrent_ineligible_reason`)
+    dispatch to the backend's gated kernel, which skips the state-update
+    increment on dead channel-blocks; ineligible streams fall back to the
+    dense oracle on the stream's dense view — visibly, with the named rule
+    on the trace record.  Zero-extent steps (empty batch, zero-width
+    drive) short-circuit to the oracle before any dispatch — Pallas must
+    not see a 0-extent launch.
+    """
+    assert kind in ("wkv6", "mamba"), kind
+    g, d = stream.shape
+    if g == 0 or d == 0:
+        drive = stream.fired if stream.fired is not None \
+            else jnp.zeros(stream.shape, jnp.float32)
+        return _recurrent_dense_step(kind, drive, state, ops)
+    name = cfg.resolve_backend()
+    reason = recurrent_ineligible_reason(stream, kind, cfg)
+    n = state.shape[-1]
+    dec = route_recurrent(kind, g, d, n, cfg, eligible=reason is None)
+    fields = _route_fields(dec, f"{kind}d{d}")
+    if dec.is_event:
+        trace.record(op="recurrent_step", kind=kind, backend=name,
+                     chained=True, **fields)
+        return get_backend(f"recurrent_step_{kind}", name)(
+            stream, state, ops, cfg)
+    if dec.source == "geometry":
+        # No event path serves this stream (ineligible stream or backend
+        # without the op): visible fallback with the named rule.
+        if reason is not None:
+            fields["reason"] = reason
+        trace.record(op="recurrent_step", kind=kind, backend=name,
+                     fallback_decode=True, **fields)
+    else:
+        # Dense by *choice* (adaptive / forced): not a fallback.
+        trace.record(op="recurrent_step", kind=kind, backend=name,
+                     routed_dense=True, **fields)
+    return _recurrent_dense_step(kind, stream.dense(), state, ops)
+
+
 def _fire_int8(acc2: jax.Array, cfg: EngineConfig, c2: EngineConfig,
                keep_dense: bool, logical_shape: tuple | None = None
                ) -> EventStream:
@@ -478,7 +642,8 @@ def _fire_int8(acc2: jax.Array, cfg: EngineConfig, c2: EngineConfig,
                                      requantize_accumulator)
 
     fired = jnp_fire(acc2, FireConfig(threshold=c2.threshold,
-                                      magnitude=c2.magnitude))
+                                      magnitude=c2.magnitude,
+                                      signed=c2.signed))
     qp = calibrate(fired, symmetric=True, bits=cfg.int8_bits)
     unit = QParams.symmetric(1.0)
     q = requantize_accumulator(fired, unit, unit, qp, bits=cfg.int8_bits)
@@ -487,7 +652,8 @@ def _fire_int8(acc2: jax.Array, cfg: EngineConfig, c2: EngineConfig,
                            keep_dense=False)
     return dataclasses.replace(
         s, fired=dequantize(q, qp) if keep_dense else None, qparams=qp,
-        logical_shape=logical_shape)
+        logical_shape=logical_shape,
+        signed=c2.magnitude or c2.signed)
 
 
 def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
@@ -505,17 +671,20 @@ def fire(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
     # records — a custom fire backend must see the tile sizes the consuming
     # linear will assume.
     c = cfg.for_width(*acc.shape)
+    signed = cfg.magnitude or cfg.signed
     if 0 in acc.shape:
         # Degenerate accumulator: explicit empty stream, no backend dispatch
         # (a Pallas fire backend must not see a 0-extent launch).
-        return EventStream.empty(acc.shape, blk_m=c.blk_m, blk_k=c.blk_k,
-                                 capacity=c.capacity, dtype=acc.dtype,
-                                 fired=acc if keep_dense else None)
+        s = EventStream.empty(acc.shape, blk_m=c.blk_m, blk_k=c.blk_k,
+                              capacity=c.capacity, dtype=acc.dtype,
+                              fired=acc if keep_dense else None)
+        return dataclasses.replace(s, signed=signed)
     if cfg.int8_events:
         return _fire_int8(acc, cfg, c, keep_dense)
     fired, bev = dispatch("fire", cfg)(acc, c)
     stream = EventStream(events=bev, fired=fired if keep_dense else None,
-                         shape=acc.shape, blk_m=c.blk_m, blk_k=c.blk_k)
+                         shape=acc.shape, blk_m=c.blk_m, blk_k=c.blk_k,
+                         signed=signed)
     return stream
 
 
@@ -539,18 +708,20 @@ def fire_conv(acc: jax.Array, cfg: EngineConfig = _DEFAULT, *,
                            "W % STRIP_W == 0")
     acc2 = acc.reshape(b * h * w, c)
     c2 = cfg.replace(blk_m=blk_m).for_width(*acc2.shape)
+    signed = cfg.magnitude or cfg.signed
     if 0 in acc2.shape:
-        return EventStream.empty(acc2.shape, blk_m=c2.blk_m, blk_k=c2.blk_k,
-                                 capacity=c2.capacity, dtype=acc.dtype,
-                                 fired=acc2 if keep_dense else None,
-                                 logical_shape=(b, h, w, c))
+        s = EventStream.empty(acc2.shape, blk_m=c2.blk_m, blk_k=c2.blk_k,
+                              capacity=c2.capacity, dtype=acc.dtype,
+                              fired=acc2 if keep_dense else None,
+                              logical_shape=(b, h, w, c))
+        return dataclasses.replace(s, signed=signed)
     if cfg.int8_events:
         return _fire_int8(acc2, cfg, c2, keep_dense,
                           logical_shape=(b, h, w, c))
     fired, bev = dispatch("fire_conv", cfg)(acc2, c2)
     return EventStream(events=bev, fired=fired if keep_dense else None,
                        shape=acc2.shape, blk_m=c2.blk_m, blk_k=c2.blk_k,
-                       logical_shape=(b, h, w, c))
+                       logical_shape=(b, h, w, c), signed=signed)
 
 
 def sparsify(h: jax.Array, cfg: EngineConfig = _DEFAULT) -> jax.Array:

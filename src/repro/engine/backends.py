@@ -304,13 +304,54 @@ def _maxpool2d_events_window_pallas(stream, k, stride, cfg: EngineConfig):
 
 
 # ---------------------------------------------------------------------------
+# recurrent_step_* — the fire-gated decode state update (DESIGN.md §13):
+# consume a signed row stream of the increment drive, skip dead
+# channel-blocks of the state update.  Block is the pure-jnp twin (bitwise
+# vs the dense step at threshold 0); pallas is the kernel (bitwise
+# within-backend — see kernels/wkv6/step.py).  Oracle backends don't
+# register the op: the API falls back to the dense step, visibly.
+# ---------------------------------------------------------------------------
+
+@register_backend("recurrent_step_wkv6", "block")
+def _recurrent_wkv6_block(stream, state, ops, cfg: EngineConfig):
+    from repro.kernels.wkv6.step import wkv6_step_events_ref
+    return wkv6_step_events_ref(stream.events, ops["r"], ops["v"], ops["w"],
+                                ops["u"], state, blk_k=stream.blk_k)
+
+
+@register_backend("recurrent_step_wkv6", "pallas")
+def _recurrent_wkv6_pallas(stream, state, ops, cfg: EngineConfig):
+    from repro.kernels.wkv6.step import wkv6_step_events_pallas
+    return wkv6_step_events_pallas(stream.events, ops["r"], ops["v"],
+                                   ops["w"], ops["u"], state,
+                                   blk_k=stream.blk_k,
+                                   interpret=cfg.resolve_interpret())
+
+
+@register_backend("recurrent_step_mamba", "block")
+def _recurrent_mamba_block(stream, state, ops, cfg: EngineConfig):
+    from repro.kernels.mamba_scan.step import mamba_step_events_ref
+    return mamba_step_events_ref(stream.events, ops["da"], ops["bmat"],
+                                 ops["cmat"], state, blk_k=stream.blk_k)
+
+
+@register_backend("recurrent_step_mamba", "pallas")
+def _recurrent_mamba_pallas(stream, state, ops, cfg: EngineConfig):
+    from repro.kernels.mamba_scan.step import mamba_step_events_pallas
+    return mamba_step_events_pallas(stream.events, ops["da"], ops["bmat"],
+                                    ops["cmat"], state, blk_k=stream.blk_k,
+                                    interpret=cfg.resolve_interpret())
+
+
+# ---------------------------------------------------------------------------
 # fire (threshold + re-encode for the next layer)
 # ---------------------------------------------------------------------------
 
 def _fire_jnp(acc, cfg: EngineConfig):
     c = cfg.for_width(*acc.shape)
     fired = jnp_fire(acc, FireConfig(threshold=c.threshold,
-                                     magnitude=c.magnitude))
+                                     magnitude=c.magnitude,
+                                     signed=c.signed))
     bev = EventStream.encode(fired, blk_m=c.blk_m, blk_k=c.blk_k,
                              capacity=c.capacity, threshold=0.0,
                              keep_dense=False).events

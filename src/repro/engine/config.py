@@ -13,7 +13,17 @@ import dataclasses
 
 import jax
 
-__all__ = ["BACKENDS", "EngineConfig"]
+__all__ = ["BACKENDS", "RECURRENT_BLK_K", "EngineConfig"]
+
+#: Default K-block width of the fire-gated recurrent decode (DESIGN.md §13).
+#: A per-token drive is a single row (blk_m == 1), so the only useful event
+#: granularity is narrow K blocks over the channel axis: 16 channels per
+#: block gives head_dim-64 wkv6 four independently skippable state
+#: row-blocks (and a Mamba d_inner of 1536 ninety-six) while staying a
+#: whole sublane-multiple payload.  ``for_recurrent`` clamps to
+#: min(cfg.blk_k, RECURRENT_BLK_K, D); pass a smaller ``blk_k`` to sweep
+#: finer granularities.
+RECURRENT_BLK_K = 16
 
 #: Execution backends, in "fidelity order" (see DESIGN.md §4):
 #:   dense  — jnp oracle (no event machinery; the correctness reference)
@@ -35,6 +45,13 @@ class EngineConfig:
     capacity:   static event-list capacity per row group (None = lossless).
     threshold:  fire/encode threshold (0.0 == exact for ReLU networks).
     magnitude:  fire on |a| > threshold (LM generalization) vs a > threshold.
+    signed:     explicit signed-event fire (DESIGN.md §13): same |a| > θ
+                gate as ``magnitude`` but the emitted stream is *flagged*
+                signed, so consumers that assume ReLU-family (non-negative)
+                events reject it by name instead of silently mis-pooling.
+                The recurrent decode path sets it (per-token deltas are
+                two-sided); ``for_recurrent`` is the one adapter that
+                turns it on.
     interpret:  run Pallas kernels in interpret mode; None = auto (interpret
                 everywhere except real TPU devices).
     out_dtype:  accumulator/output dtype of the multiply phase.
@@ -68,6 +85,7 @@ class EngineConfig:
     capacity: int | None = None
     threshold: float = 0.0
     magnitude: bool = False
+    signed: bool = False
     interpret: bool | None = None
     out_dtype: str = "float32"
     route: str = "auto"
@@ -109,6 +127,21 @@ class EngineConfig:
         return cls(backend="pallas" if mnf.use_pallas else "block",
                    blk_m=mnf.blk_m, blk_k=mnf.blk_k,
                    threshold=mnf.threshold, magnitude=mnf.magnitude)
+
+    def for_recurrent(self, k: int) -> "EngineConfig":
+        """The config a fire-gated recurrent decode step runs under.
+
+        A per-token drive is one row per (batch × head) — ``blk_m`` is
+        forced to 1 — and the gating granularity is narrow K blocks over
+        the channel axis (``RECURRENT_BLK_K``, further clamped by the
+        drive width and any explicitly smaller ``blk_k``).  ``signed`` is
+        turned on: recurrent deltas are two-sided, and the emitted stream
+        must say so (DESIGN.md §13).
+        """
+        return dataclasses.replace(
+            self, blk_m=1,
+            blk_k=min(self.blk_k, RECURRENT_BLK_K, max(k, 1)),
+            signed=True)
 
     def for_width(self, m: int, k: int) -> "EngineConfig":
         """Clamp tile sizes to an (M, K) operand (small CPU test shapes)."""

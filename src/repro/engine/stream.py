@@ -53,6 +53,13 @@ class EventStream:
             absent events are exact zeros in both domains); the kept
             ``fired`` twin is always the dequantized f32 map.  ``None``
             for f32 streams.
+    signed: the producing fire rule can emit *negative* event values
+            [static] — set by signed/magnitude fire (DESIGN.md §13).  The
+            ReLU-fire invariant (every event value >= 0) underpins the
+            pool's bitwise segment-max argument, so consumers that rely on
+            it gate on this flag (``engine.pool_ineligible_reason``); the
+            recurrent decode path *requires* it (two-sided per-token
+            deltas).
     """
 
     events: ev.BlockEvents
@@ -63,6 +70,8 @@ class EventStream:
     logical_shape: tuple | None = dataclasses.field(
         default=None, metadata=dict(static=True))
     qparams: _QParams | None = None
+    signed: bool = dataclasses.field(default=False,
+                                     metadata=dict(static=True))
 
     # -- construction -------------------------------------------------------
 
@@ -219,7 +228,7 @@ class EventStream:
             fired = self.fired.reshape(b, h * w * c)
         return EventStream(events=bev, fired=fired, shape=(b, h * w * c),
                            blk_m=1, blk_k=self.blk_k, logical_shape=None,
-                           qparams=self.qparams)
+                           qparams=self.qparams, signed=self.signed)
 
     def dequantize_events(self) -> "EventStream":
         """Dequantize int8 event values in place — still event-domain.

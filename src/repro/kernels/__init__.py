@@ -16,12 +16,18 @@ from repro.kernels.event_matmul import (event_matmul, event_matmul_cfg,
                                         event_matmul_ref)
 from repro.kernels.fire_compact import (fire_and_encode, fire_and_encode_cfg,
                                         fire_compact, fire_compact_ref)
-from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
-from repro.kernels.wkv6 import wkv6, wkv6_ref
+from repro.kernels.mamba_scan import (mamba_scan, mamba_scan_ref,
+                                      mamba_step_events_pallas,
+                                      mamba_step_events_ref, mamba_step_ref)
+from repro.kernels.wkv6 import (wkv6, wkv6_ref, wkv6_step_events_pallas,
+                                wkv6_step_events_ref, wkv6_step_ref)
 
 __all__ = ["event_matmul", "event_matmul_cfg", "event_matmul_from_events",
            "event_matmul_int8", "event_matmul_int8_ref", "event_matmul_ref",
            "fused_conv_plan", "fused_event_conv2d", "fused_event_conv2d_ref",
            "fire_and_encode", "fire_and_encode_cfg", "fire_compact",
            "fire_compact_ref",
-           "mamba_scan", "mamba_scan_ref", "wkv6", "wkv6_ref"]
+           "mamba_scan", "mamba_scan_ref", "wkv6", "wkv6_ref",
+           "wkv6_step_ref", "wkv6_step_events_ref", "wkv6_step_events_pallas",
+           "mamba_step_ref", "mamba_step_events_ref",
+           "mamba_step_events_pallas"]

@@ -1,4 +1,8 @@
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.mamba_scan.step import (mamba_step_events_ref,
+                                           mamba_step_events_pallas,
+                                           mamba_step_ref)
 
-__all__ = ["mamba_scan", "mamba_scan_ref"]
+__all__ = ["mamba_scan", "mamba_scan_ref", "mamba_step_ref",
+           "mamba_step_events_ref", "mamba_step_events_pallas"]

@@ -1,0 +1,151 @@
+"""Single-token Mamba decode step — dense oracle + event-gated variants.
+
+The selective-scan recurrence per batch row, one token:
+
+    h' = h ⊙ dA + g ⊗ B          (decay + rank-1 increment, g = Δt · x)
+    y  = (h' ⊙ C) · 1_N          (state readout)
+
+The state *increment* is driven entirely by the gate vector g = Δt·silu(x):
+a channel d with g_d == 0 contributes nothing to h' beyond the decay.  The
+event-gated step (DESIGN.md §13) therefore consumes a signed-fired
+EventStream of g — dead channel-blocks of the state update skip the
+increment via ``live_block_mask`` — while the decay dA applies to every
+block (it is input-independent and cannot be gated).
+
+``mamba_step_ref`` is the dense oracle (models/ssm.mamba_step delegates to
+it); ``mamba_step_events_ref`` is the jnp twin consuming compacted events;
+``mamba_step_events_pallas`` is the kernel.  All three use the same
+elementwise + jnp.sum formulation so the threshold-0 contract — gated step
+float-equal to the dense step — holds bit for bit on the block backend
+(the Pallas contract is within-backend; see kernels/wkv6/step.py and
+DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import events as ev
+from repro.kernels.wkv6.step import drive_from_events
+
+__all__ = ["mamba_step_ref", "mamba_step_events_ref",
+           "mamba_step_events_pallas"]
+
+
+def mamba_step_ref(gdrive, da, bmat, cmat, h):
+    """Dense single-token step.  gdrive: (B, DI) — the Δt·x increment gate;
+    da: (B, DI, N) decay; bmat, cmat: (B, N); h: (B, DI, N).  All math f32.
+    Returns (y (B, DI), h_new (B, DI, N))."""
+    f32 = jnp.float32
+    gdrive, bmat, cmat = (x.astype(f32) for x in (gdrive, bmat, cmat))
+    da = da.astype(f32)
+    h = h.astype(f32)
+    dbx = gdrive[..., None] * bmat[:, None, :]
+    h_new = h * da + dbx
+    y = jnp.sum(h_new * cmat[:, None, :], axis=-1)
+    return y, h_new
+
+
+def mamba_step_events_ref(bev: ev.BlockEvents, da, bmat, cmat, h, *,
+                          blk_k: int):
+    """jnp twin of the event-gated step: same math as ``mamba_step_ref`` on
+    the event-carried increment gate."""
+    g = drive_from_events(bev, blk_k=blk_k, m=da.shape[0], k=da.shape[1])
+    return mamba_step_ref(g, da, bmat, cmat, h)
+
+
+def mamba_step_kernel(idx_ref, counts_ref, live_ref,      # scalar prefetch
+                      vals_ref, da_ref, b_ref, c_ref, h_ref,
+                      y_ref, hnew_ref, gbuf, *, blk_k: int, nkb: int):
+    """One grid step per batch row.  The fired gate is scattered from the
+    compacted event slots into a VMEM scratch row (stores guarded by
+    ``e < count``); the state update walks DI-blocks and skips the rank-1
+    increment on dead ones via the precomputed live mask — the decay (and
+    the readout over the surviving state) still runs everywhere."""
+    b = pl.program_id(0)
+    e_cap = vals_ref.shape[1]
+    gbuf[...] = jnp.zeros_like(gbuf)
+    cnt = counts_ref[b]
+
+    def slot(e, _):
+        j = idx_ref[b, e]
+
+        @pl.when(e < cnt)
+        def _store():
+            gbuf[0, pl.ds(j * blk_k, blk_k)] = vals_ref[0, e, 0, :]
+        return 0
+
+    jax.lax.fori_loop(0, e_cap, slot, 0)
+
+    f32 = jnp.float32
+    da = da_ref[0].astype(f32)                           # (Dp, N)
+    bm = b_ref[...].astype(f32)                          # (1, N)
+    cm = c_ref[...].astype(f32)                          # (1, N)
+    h = h_ref[0].astype(f32)                             # (Dp, N)
+
+    for j in range(nkb):
+        sl = slice(j * blk_k, (j + 1) * blk_k)
+        dec = h[sl] * da[sl]                             # (blk_k, N)
+
+        @pl.when(live_ref[b, j] > 0)
+        def _upd(sl=sl, dec=dec):
+            hn = dec + gbuf[0, sl][:, None] * bm
+            hnew_ref[0, sl, :] = hn.astype(hnew_ref.dtype)
+            y_ref[0, sl] = jnp.sum(hn * cm, axis=-1).astype(y_ref.dtype)
+
+        @pl.when(live_ref[b, j] == 0)
+        def _decay(sl=sl, dec=dec):
+            hnew_ref[0, sl, :] = dec.astype(hnew_ref.dtype)
+            y_ref[0, sl] = jnp.sum(dec * cm, axis=-1).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
+def _mamba_step_events_call(values, block_idx, counts, live, da, bmat, cmat,
+                            h, *, blk_k: int, interpret: bool):
+    b, dp, n = da.shape
+    nkb = dp // blk_k
+    row = pl.BlockSpec((1, dp), lambda bi, idx, cnt, lv: (bi, 0))
+    nrow = pl.BlockSpec((1, n), lambda bi, idx, cnt, lv: (bi, 0))
+    mat = pl.BlockSpec((1, dp, n), lambda bi, idx, cnt, lv: (bi, 0, 0))
+    e_cap = values.shape[1]
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, e_cap, 1, blk_k),
+                               lambda bi, idx, cnt, lv: (bi, 0, 0, 0)),
+                  mat, nrow, nrow, mat],
+        out_specs=[row, mat],
+        scratch_shapes=[pltpu.VMEM((1, dp), jnp.float32)],
+    )
+    y, hnew = pl.pallas_call(
+        functools.partial(mamba_step_kernel, blk_k=blk_k, nkb=nkb),
+        grid_spec=spec,
+        out_shape=[jax.ShapeDtypeStruct((b, dp), jnp.float32),
+                   jax.ShapeDtypeStruct((b, dp, n), jnp.float32)],
+        interpret=interpret,
+        name="mamba_step_events",
+    )(block_idx, counts, live, values, da, bmat, cmat, h)
+    return y, hnew
+
+
+def mamba_step_events_pallas(bev: ev.BlockEvents, da, bmat, cmat, h, *,
+                             blk_k: int, interpret: bool = False):
+    """Event-gated decode step kernel.  bev: blk_m == 1 events of the fired
+    gate g = Δt·x (B, DI); da: (B, DI, N); bmat, cmat: (B, N);
+    h: (B, DI, N).  Returns (y, h_new)."""
+    b, di, n = da.shape
+    nkb = bev.num_k_blocks
+    dp = nkb * blk_k
+    assert dp >= di and b == bev.block_idx.shape[0], (da.shape, nkb, blk_k)
+    padm = lambda x: jnp.pad(x.astype(jnp.float32),
+                             ((0, 0), (0, dp - di), (0, 0)))
+    live = ev.live_block_mask(bev).astype(jnp.int32)
+    y, hnew = _mamba_step_events_call(
+        bev.values, bev.block_idx, bev.counts, live,
+        padm(da), bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        padm(h), blk_k=blk_k, interpret=interpret)
+    return y[:, :di], hnew[:, :di, :]

@@ -1,4 +1,7 @@
 from repro.kernels.wkv6.ops import wkv6
 from repro.kernels.wkv6.ref import wkv6_ref
+from repro.kernels.wkv6.step import (drive_from_events, wkv6_step_events_ref,
+                                     wkv6_step_events_pallas, wkv6_step_ref)
 
-__all__ = ["wkv6", "wkv6_ref"]
+__all__ = ["wkv6", "wkv6_ref", "wkv6_step_ref", "wkv6_step_events_ref",
+           "wkv6_step_events_pallas", "drive_from_events"]

@@ -1,0 +1,175 @@
+"""Single-token WKV6 decode step — dense oracle + event-gated variants.
+
+The decode recurrence per flattened row g = (batch, head):
+
+    o  = (Σ_d r_d u_d k_d) v + r S          (att bonus + state readout)
+    S' = diag(w) S + k v^T                  (decay + rank-1 increment)
+
+The state *increment* is driven entirely by the key vector k: a channel d
+with k_d == 0 contributes nothing to S' beyond the decay, and nothing to
+the att bonus.  The event-gated step (DESIGN.md §13) therefore consumes a
+signed-fired EventStream of k — dead K-blocks of the state update are
+skipped per ``live_block_mask`` — while the decay applies to every block
+(it is input-independent and cannot be gated).
+
+``wkv6_step_ref`` is the dense oracle (models/ssm.wkv6_step delegates to
+it); ``wkv6_step_events_ref`` is the jnp twin consuming compacted events;
+``wkv6_step_events_pallas`` is the kernel.  Reductions in all three use the
+same formulation (elementwise product + jnp.sum over the contracted axis)
+so the threshold-0 contract — gated step float-equal to the dense step —
+holds bit for bit on both backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import events as ev
+
+__all__ = ["wkv6_step_ref", "wkv6_step_events_ref",
+           "wkv6_step_events_pallas", "drive_from_events"]
+
+
+def wkv6_step_ref(r, k, v, w, u, s):
+    """Dense single-token step, rows flattened.  r,k,v,w,u: (G, D);
+    s: (G, D, D).  All math f32.  Returns (o (G, D), s_new (G, D, D))."""
+    f32 = jnp.float32
+    r, k, v, w, u = (x.astype(f32) for x in (r, k, v, w, u))
+    s = s.astype(f32)
+    att = jnp.sum(r * u * k, axis=-1)                        # (G,)
+    o = att[:, None] * v + jnp.sum(r[:, :, None] * s, axis=1)
+    s_new = w[..., None] * s + k[..., None] * v[:, None, :]
+    return o, s_new
+
+
+def drive_from_events(bev: ev.BlockEvents, *, blk_k: int, m: int,
+                      k: int) -> jax.Array:
+    """Reassemble the fired (M, K) drive from compacted blk_m == 1 events.
+
+    This is event *consumption*, not a stream decode: the block backends
+    below run the same step math the dense oracle runs, just on the drive
+    carried by the events (zeros where no event fired) — the jnp image of
+    what the Pallas kernel's VMEM scatter does.
+    """
+    g = bev.block_idx.shape[0]
+    full = ev.decode_block_events(bev, blk_m=1, blk_k=blk_k, m=g,
+                                  k=bev.num_k_blocks * blk_k)
+    return full[:m, :k]
+
+
+def wkv6_step_events_ref(bev: ev.BlockEvents, r, v, w, u, s, *, blk_k: int):
+    """jnp twin of the event-gated step: same math as ``wkv6_step_ref`` on
+    the event-carried key drive."""
+    k_used = drive_from_events(bev, blk_k=blk_k, m=r.shape[0], k=r.shape[1])
+    return wkv6_step_ref(r, k_used, v, w, u, s)
+
+
+def wkv6_step_kernel(idx_ref, counts_ref, live_ref,       # scalar prefetch
+                     vals_ref, r_ref, v_ref, w_ref, u_ref, s_ref,
+                     o_ref, snew_ref, kbuf, *, blk_k: int, nkb: int, d: int):
+    """One grid step per row g.  The fired key drive is scattered from the
+    compacted event slots into a VMEM scratch row (stores guarded by
+    ``e < count`` — padding slots repeat the last live index and would
+    clobber it); the output reductions run over exactly the logical D
+    channels (single tree, matching the dense step's bits); the state
+    update walks K-blocks and skips dead ones via the precomputed live
+    mask — the decay still applies everywhere."""
+    g = pl.program_id(0)
+    e_cap = vals_ref.shape[1]
+    kbuf[...] = jnp.zeros_like(kbuf)
+    cnt = counts_ref[g]
+
+    def slot(e, _):
+        j = idx_ref[g, e]
+
+        @pl.when(e < cnt)
+        def _store():
+            kbuf[0, pl.ds(j * blk_k, blk_k)] = vals_ref[0, e, 0, :]
+        return 0
+
+    jax.lax.fori_loop(0, e_cap, slot, 0)
+
+    f32 = jnp.float32
+    r = r_ref[...].astype(f32)                               # (1, Dp)
+    v = v_ref[...].astype(f32)
+    w = w_ref[...].astype(f32)
+    u = u_ref[...].astype(f32)
+    kk = kbuf[...]                                           # (1, Dp)
+    s = s_ref[0].astype(f32)                                 # (Dp, Dp)
+
+    # Output: reduce over the logical D channels only (static slices) so
+    # the reduction tree matches the dense step even when Dp > D.
+    rd, ud, kd, vd = r[:, :d], u[:, :d], kk[:, :d], v[:, :d]
+    att = jnp.sum(rd * ud * kd, axis=-1, keepdims=True)      # (1, 1)
+    o = att * vd + jnp.sum(rd[0][:, None] * s[:d, :d], axis=0,
+                           keepdims=True)                    # (1, D)
+    o_ref[...] = jnp.pad(o, ((0, 0), (0, r.shape[1] - d))).astype(o_ref.dtype)
+
+    # State: per-block decay always; the rank-1 increment only where the
+    # block carries events (elementwise — padding rows/cols are zeros and
+    # get sliced off by the wrapper).
+    for j in range(nkb):
+        sl = slice(j * blk_k, (j + 1) * blk_k)
+        dec = w[0, sl][:, None] * s[sl, :]                   # (blk_k, Dp)
+
+        @pl.when(live_ref[g, j] > 0)
+        def _upd(sl=sl, dec=dec):
+            snew_ref[0, sl, :] = (dec + kbuf[0, sl][:, None] * v).astype(
+                snew_ref.dtype)
+
+        @pl.when(live_ref[g, j] == 0)
+        def _decay(sl=sl, dec=dec):
+            snew_ref[0, sl, :] = dec.astype(snew_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("blk_k", "interpret"))
+def _wkv6_step_events_call(values, block_idx, counts, live, r, v, w, u, s,
+                           *, blk_k: int, interpret: bool):
+    g, dp = r.shape
+    nkb = dp // blk_k
+    d = int(s.shape[-1])  # logical D rides in via the unpadded state width
+    row = pl.BlockSpec((1, dp), lambda gi, idx, cnt, lv: (gi, 0))
+    sp = jnp.pad(s.astype(jnp.float32),
+                 ((0, 0), (0, dp - d), (0, dp - d)))
+    state = pl.BlockSpec((1, dp, dp), lambda gi, idx, cnt, lv: (gi, 0, 0))
+    e_cap = values.shape[1]
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, e_cap, 1, blk_k),
+                               lambda gi, idx, cnt, lv: (gi, 0, 0, 0)),
+                  row, row, row, row, state],
+        out_specs=[row, state],
+        scratch_shapes=[pltpu.VMEM((1, dp), jnp.float32)],
+    )
+    o, snew = pl.pallas_call(
+        functools.partial(wkv6_step_kernel, blk_k=blk_k, nkb=nkb, d=d),
+        grid_spec=spec,
+        out_shape=[jax.ShapeDtypeStruct((g, dp), jnp.float32),
+                   jax.ShapeDtypeStruct((g, dp, dp), jnp.float32)],
+        interpret=interpret,
+        name="wkv6_step_events",
+    )(block_idx, counts, live, values, r, v, w, u, sp)
+    return o[:, :d], snew[:, :d, :d]
+
+
+def wkv6_step_events_pallas(bev: ev.BlockEvents, r, v, w, u, s, *,
+                            blk_k: int, interpret: bool = False):
+    """Event-gated decode step kernel.  bev: blk_m == 1 events of the fired
+    key drive (G, D); r,v,w,u: (G, D); s: (G, D, D).  Returns (o, s_new),
+    float-equal to ``wkv6_step_ref`` on the same drive."""
+    g, d = r.shape
+    nkb = bev.num_k_blocks
+    dp = nkb * blk_k
+    assert dp >= d and g == bev.block_idx.shape[0], (r.shape, nkb, blk_k)
+    pad = lambda x: jnp.pad(x.astype(jnp.float32), ((0, 0), (0, dp - d)))
+    live = ev.live_block_mask(bev).astype(jnp.int32)
+    return _wkv6_step_events_call(
+        bev.values, bev.block_idx, bev.counts, live,
+        pad(r), pad(v), pad(w), pad(u), s.astype(jnp.float32),
+        blk_k=blk_k, interpret=interpret)

@@ -374,6 +374,13 @@ def main():
         t_prefill = time.time() - t0
 
         out_tokens = []
+        # Fire-gated recurrent decode (DESIGN.md §13): each decode step
+        # writes the per-layer fired-event count of the state update into
+        # the cache — collect it per token for the events/token report.
+        track_events = (cfg.mnf.enabled and isinstance(cache, dict)
+                        and isinstance(cache.get("scan"), dict)
+                        and "events" in cache["scan"])
+        ev_steps = []
         cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         t0 = time.time()
         for i in range(args.gen):
@@ -384,18 +391,29 @@ def main():
             cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
             cur = cur.astype(jnp.int32)
             out_tokens.append(cur)
+            if track_events:
+                ev_steps.append(cache["scan"]["events"])
         jax.block_until_ready(cur)
         t_decode = time.time() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
-    print(json.dumps(dict(
+    stats = dict(
         arch=cfg.name, batch=args.batch, prompt_len=args.prompt_len,
         generated=args.gen,
         prefill_s=round(t_prefill, 3),
         decode_tok_per_s=round(args.gen * args.batch / t_decode, 1),
         mnf=cfg.mnf.enabled,
         engine=dataclasses.asdict(srv.engine),
-        sample_tokens=[int(t) for t in gen[0][:8]])))
+        sample_tokens=[int(t) for t in gen[0][:8]])
+    if track_events:
+        evm = jnp.stack(ev_steps)                  # (gen, L) counts
+        per_tok = evm.sum(axis=1)
+        stats["events_per_token"] = round(float(per_tok.mean()), 2)
+        stats["events_per_token_min"] = round(float(per_tok.min()), 2)
+        stats["events_per_token_max"] = round(float(per_tok.max()), 2)
+        stats["events_per_layer"] = [round(float(x), 2)
+                                     for x in evm.mean(axis=0)]
+    print(json.dumps(stats))
 
 
 if __name__ == "__main__":

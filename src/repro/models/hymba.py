@@ -43,13 +43,19 @@ def hymba_block_apply(p, x: jax.Array, *, cfg: ModelConfig,
     # Single-token step (decode) vs. sequence scan (train/prefill) is a
     # *static* dispatch on the sequence length.
     if cache is not None and x.shape[1] == 1:
-        m_out, m_state = ssm.mamba_step(p["mamba"], x, cfg,
-                                        (cache["conv"], cache["ssm"]))
+        m_out, m_state, m_events = ssm.mamba_step(
+            p["mamba"], x, cfg, (cache["conv"], cache["ssm"]),
+            with_events=True)
     else:
         m_out, m_state = ssm.mamba_apply(p["mamba"], x, cfg, sc=sc)
+        m_events = jnp.zeros((), jnp.float32)
     y = 0.5 * (rms_norm(a_out, p["norm_attn"] - 1.0, cfg.norm_eps) +
                rms_norm(m_out, p["norm_mamba"] - 1.0, cfg.norm_eps))
     new_cache = dict(attn=a_cache, conv=m_state[0], ssm=m_state[1])
+    if cfg.mnf.enabled:
+        # Per-token fired-event count of the gated state update; prefill
+        # seeds zero so the cache pytree structure is step-invariant.
+        new_cache["events"] = m_events
     return y, new_cache
 
 

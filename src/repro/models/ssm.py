@@ -20,8 +20,8 @@ from repro.models import layers
 from repro.models.param_utils import Init
 
 __all__ = ["WKV_LOG_DECAY_MIN", "wkv6_chunked", "wkv6_step",
-           "rwkv6_block_init", "rwkv6_block_apply", "rwkv6_block_decode",
-           "mamba_init", "mamba_apply", "mamba_step"]
+           "wkv6_step_gated", "rwkv6_block_init", "rwkv6_block_apply",
+           "rwkv6_block_decode", "mamba_init", "mamba_apply", "mamba_step"]
 
 # Per-step log-decay clamp for the chunked-parallel path: with chunk C the
 # largest inverse-decay exponent is C*|min|; C=32 * 2.5 = 80 < log(f32 max).
@@ -81,14 +81,52 @@ def wkv6_chunked(r, k, v, w, u, s0=None, *, chunk: int = 32):
     return o, s_fin
 
 
+def _decode_engine_cfg(cfg: ModelConfig):
+    """The EngineConfig the fire-gated decode runs under, or None when MNF
+    is off (the dense step stays the only path)."""
+    if not cfg.mnf.enabled:
+        return None
+    from repro.engine import EngineConfig
+    return EngineConfig.from_mnf(cfg.mnf)
+
+
 def wkv6_step(r, k, v, w, u, s):
-    """Single decode step.  r,k,v,w: (B, H, D); u: (H, D); s: (B, H, D, D)."""
+    """Single decode step.  r,k,v,w: (B, H, D); u: (H, D); s: (B, H, D, D).
+
+    Delegates to the shared dense oracle ``kernels.wkv6.step.wkv6_step_ref``
+    — the same formulation the event-gated decode runs — so the θ=0
+    contract (gated step bitwise-equal to the dense step on the block
+    backend) is by construction, not by coincidence (DESIGN.md §13).
+    """
+    from repro.kernels.wkv6.step import wkv6_step_ref
+    b, h, d = r.shape
+    fl = lambda z: z.reshape(b * h, d)
+    uf = jnp.broadcast_to(u, (b, h, d)).reshape(b * h, d)
+    o, s_new = wkv6_step_ref(fl(r), fl(k), fl(v), fl(w), uf,
+                             s.reshape(b * h, d, d))
+    return o.reshape(b, h, d), s_new.reshape(b, h, d, d)
+
+
+def wkv6_step_gated(r, k, v, w, u, s, ecfg):
+    """Fire-gated single decode step (DESIGN.md §13).
+
+    Same signature/shapes as :func:`wkv6_step` plus the engine config; the
+    key vector — the state update's increment drive — is thresholded by
+    signed fire and the state update skips dead channel-blocks.  Returns
+    (o, s_new, n_events) with ``n_events`` the traced per-token scalar
+    event count (what the serving loop reports per layer).
+    """
+    from repro import engine
+    b, h, d = r.shape
     f32 = jnp.float32
-    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
-    att = jnp.einsum("bhd,hd,bhd->bh", r, u.astype(f32), k)
-    o = att[..., None] * v + jnp.einsum("bhd,bhde->bhe", r, s)
-    s = w[..., None] * s + k[..., None] * v[..., None, :]
-    return o, s
+    fl = lambda z: z.reshape(b * h, d).astype(f32)
+    uf = jnp.broadcast_to(u, (b, h, d)).reshape(b * h, d).astype(f32)
+    stream = engine.fire_delta(fl(k), ecfg)
+    o, s_new = engine.recurrent_step(
+        "wkv6", stream, s.reshape(b * h, d, d), ecfg.for_recurrent(d),
+        r=fl(r), v=fl(v), w=fl(w), u=uf)
+    return (o.reshape(b, h, d), s_new.reshape(b, h, d, d),
+            stream.num_scalar_events.astype(f32))
 
 
 # ---------------------------------------------------------------------------
@@ -152,10 +190,17 @@ def _rwkv_time_mix(p, xn, xs, cfg, state, step: bool, sc=lambda x, ax: x):
               @ p["w_b"].astype(jnp.float32))
     w = jnp.exp(-jnp.exp(lw_arg))                            # (…, d) in (0,1)
 
+    n_ev = None
     if step:
         sh = lambda z: z.reshape(b, h, hd)
-        o, s_new = wkv6_step(sh(r), sh(k), sh(v), sh(w.astype(jnp.float32)),
-                             p["u"], state)
+        ecfg = _decode_engine_cfg(cfg)
+        if ecfg is not None:
+            o, s_new, n_ev = wkv6_step_gated(
+                sh(r), sh(k), sh(v), sh(w.astype(jnp.float32)), p["u"],
+                state, ecfg)
+        else:
+            o, s_new = wkv6_step(sh(r), sh(k), sh(v),
+                                 sh(w.astype(jnp.float32)), p["u"], state)
         o = o.reshape(b, 1, h * hd)
     else:
         sh = lambda z: sc(z.reshape(b, t, h, hd).transpose(0, 2, 1, 3),
@@ -173,7 +218,7 @@ def _rwkv_time_mix(p, xn, xs, cfg, state, step: bool, sc=lambda x, ax: x):
     og = (og - mu) * jax.lax.rsqrt(var + 64e-5)
     o = (og.reshape(oshape) * p["gn"].astype(jnp.float32)).astype(cdt)
     out = (o * g) @ p["wo"].astype(cdt)
-    return out, s_new
+    return out, s_new, n_ev
 
 
 def _rwkv_channel_mix(p, xn, xs, cfg, sc=lambda x, ax: x):
@@ -192,12 +237,17 @@ def rwkv6_block_apply(p, x: jax.Array, cfg: ModelConfig, wkv_state=None,
     """Train/prefill.  x: (B, T, d).  Returns (y, decode-ready state dict)."""
     xn = layers.rms_norm(x, p["ln1"] - 1.0, cfg.norm_eps)
     xs = _token_shift(xn, None)
-    att, s_fin = _rwkv_time_mix(p, xn, xs, cfg, wkv_state, step=False, sc=sc)
+    att, s_fin, _ = _rwkv_time_mix(p, xn, xs, cfg, wkv_state, step=False,
+                                   sc=sc)
     x = x + att
     xn2 = layers.rms_norm(x, p["ln2"] - 1.0, cfg.norm_eps)
     xs2 = _token_shift(xn2, None)
     x = x + _rwkv_channel_mix(p, xn2, xs2, cfg, sc=sc)
     state = dict(shift_att=xn[:, -1], shift_ffn=xn2[:, -1], wkv=s_fin)
+    if cfg.mnf.enabled:
+        # Decode fills this with the per-token fired-event count; prefill
+        # seeds it so the cache pytree structure is step-invariant.
+        state["events"] = jnp.zeros((), jnp.float32)
     return x, state
 
 
@@ -205,12 +255,15 @@ def rwkv6_block_decode(p, x: jax.Array, cfg: ModelConfig, state: dict):
     """Decode one token.  x: (B, 1, d); state carries shifts + wkv."""
     xn = layers.rms_norm(x, p["ln1"] - 1.0, cfg.norm_eps)
     xs = state["shift_att"][:, None, :].astype(xn.dtype)
-    att, s_new = _rwkv_time_mix(p, xn, xs, cfg, state["wkv"], step=True)
+    att, s_new, n_ev = _rwkv_time_mix(p, xn, xs, cfg, state["wkv"], step=True)
     x = x + att
     xn2 = layers.rms_norm(x, p["ln2"] - 1.0, cfg.norm_eps)
     xs2 = state["shift_ffn"][:, None, :].astype(xn2.dtype)
     x = x + _rwkv_channel_mix(p, xn2, xs2, cfg)
     new_state = dict(shift_att=xn[:, 0], shift_ffn=xn2[:, 0], wkv=s_new)
+    if cfg.mnf.enabled:
+        new_state["events"] = n_ev if n_ev is not None \
+            else jnp.zeros((), jnp.float32)
     return x, new_state
 
 
@@ -320,13 +373,25 @@ def mamba_apply(p, x: jax.Array, cfg: ModelConfig, sc=lambda x, ax: x):
     return out, (conv_state, h_fin)
 
 
-def mamba_step(p, x: jax.Array, cfg: ModelConfig, state):
+def mamba_step(p, x: jax.Array, cfg: ModelConfig, state, *,
+               with_events: bool = False):
     """Decode one token.  x: (B, 1, d); state = (conv_state (B, cw-1, di),
-    ssm_state (B, di, n))."""
+    ssm_state (B, di, n)).
+
+    With MNF enabled the state update is fire-gated (DESIGN.md §13): the
+    increment gate g = Δt·silu(xconv) is thresholded by signed fire and the
+    h update skips dead channel-blocks.  The dense path delegates to the
+    shared oracle ``kernels.mamba_scan.step.mamba_step_ref`` — the same
+    formulation the gated backends run, so the θ=0 contract is by
+    construction.  ``with_events=True`` additionally returns the traced
+    per-token scalar event count (out, state, n_events).
+    """
+    from repro.kernels.mamba_scan.step import mamba_step_ref
     ssm = cfg.ssm
     conv_state, h = state
     bsz = x.shape[0]
     cdt = x.dtype
+    f32 = jnp.float32
     xz = x[:, 0] @ p["w_in"].astype(cdt)
     xc, z = jnp.split(xz, 2, axis=-1)
     cw = ssm.conv_dim
@@ -335,13 +400,24 @@ def mamba_step(p, x: jax.Array, cfg: ModelConfig, state):
         + p["conv_b"].astype(cdt)
     xs = jax.nn.silu(xconv)
     bmat, cmat, dt = _mamba_bcdt(p, xs, cfg)
-    a = -jnp.exp(p["a_log"].astype(jnp.float32))
-    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)      # (B, di, n)
-    dbx = (dt.astype(jnp.float32) * xs.astype(jnp.float32))[..., None] \
-        * bmat.astype(jnp.float32)[..., None, :]
-    h = h * da + dbx
-    y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32))
-    y = y + p["d_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(f32))
+    da = jnp.exp(dt.astype(f32)[..., None] * a)              # (B, di, n)
+    gdrive = dt.astype(f32) * xs.astype(f32)                 # increment gate
+    ecfg = _decode_engine_cfg(cfg)
+    if ecfg is not None:
+        from repro import engine
+        stream = engine.fire_delta(gdrive, ecfg)
+        y, h = engine.recurrent_step(
+            "mamba", stream, h, ecfg.for_recurrent(gdrive.shape[-1]),
+            da=da, bmat=bmat.astype(f32), cmat=cmat.astype(f32))
+        n_ev = stream.num_scalar_events.astype(f32)
+    else:
+        y, h = mamba_step_ref(gdrive, da, bmat.astype(f32),
+                              cmat.astype(f32), h)
+        n_ev = jnp.zeros((), f32)
+    y = y + p["d_skip"].astype(f32) * xs.astype(f32)
     y = y.astype(cdt) * jax.nn.silu(z)
     out = (y @ p["w_out"].astype(cdt))[:, None, :]
+    if with_events:
+        return out, (win[:, 1:], h), n_ev
     return out, (win[:, 1:], h)

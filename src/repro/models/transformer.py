@@ -382,15 +382,20 @@ def _layer_cache_spec(cfg: ModelConfig, bsz: int, max_len: int):
     """ShapeDtypeStructs for ONE layer's cache (no leading L dim)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     if cfg.block_type == "rwkv6":
-        return dict(
+        out = dict(
             shift_att=jax.ShapeDtypeStruct((bsz, cfg.d_model), cdt),
             shift_ffn=jax.ShapeDtypeStruct((bsz, cfg.d_model), cdt),
             wkv=jax.ShapeDtypeStruct(
                 (bsz, cfg.num_heads, cfg.head_dim, cfg.head_dim),
                 jnp.float32))
+        if cfg.mnf.enabled:
+            # Per-token fired-event count of the gated decode (DESIGN.md
+            # §13) — the serving loop reads it for events/token stats.
+            out["events"] = jax.ShapeDtypeStruct((), jnp.float32)
+        return out
     if cfg.block_type == "hymba":
         di = cfg.d_model
-        return dict(
+        out = dict(
             attn=dict(
                 k=jax.ShapeDtypeStruct(
                     (bsz, max_len, cfg.num_kv_heads, cfg.head_dim), cdt),
@@ -399,6 +404,9 @@ def _layer_cache_spec(cfg: ModelConfig, bsz: int, max_len: int):
             conv=jax.ShapeDtypeStruct((bsz, cfg.ssm.conv_dim - 1, di), cdt),
             ssm=jax.ShapeDtypeStruct((bsz, di, cfg.ssm.state_dim),
                                      jnp.float32))
+        if cfg.mnf.enabled:
+            out["events"] = jax.ShapeDtypeStruct((), jnp.float32)
+        return out
     if cfg.mla is not None:
         return dict(
             c=jax.ShapeDtypeStruct((bsz, max_len, cfg.mla.kv_lora_rank), cdt),
@@ -438,14 +446,20 @@ def init_cache(cfg: ModelConfig, bsz: int, max_len: int):
 def _layer_cache_axes(cfg: ModelConfig):
     """Logical axes for ONE layer's cache (matches _layer_cache_spec)."""
     if cfg.block_type == "rwkv6":
-        return dict(shift_att=("batch", None), shift_ffn=("batch", None),
-                    wkv=("batch", "heads", None, None))
+        out = dict(shift_att=("batch", None), shift_ffn=("batch", None),
+                   wkv=("batch", "heads", None, None))
+        if cfg.mnf.enabled:
+            out["events"] = ()                   # scalar — replicated
+        return out
     if cfg.block_type == "hymba":
-        return dict(
+        out = dict(
             attn=dict(k=("batch", "cache_seq", "kv_heads", None),
                       v=("batch", "cache_seq", "kv_heads", None)),
             conv=("batch", None, "ff"),
             ssm=("batch", "ff", None))
+        if cfg.mnf.enabled:
+            out["events"] = ()
+        return out
     if cfg.mla is not None:
         return dict(c=("batch", "cache_seq", None),
                     kr=("batch", "cache_seq", None))

@@ -227,3 +227,170 @@ def test_int8_mlp_chain_matches_fake_quant_twin(backend, batch, in_f, w1, w2,
     yr = mlp_forward(params, x, spec, mnf=True, chain=False,
                      fire_cfg=fire_cfg, engine_cfg=cfg)
     assert bool(jnp.all(ym == yr)), "int8 chain != fake-quant twin"
+
+
+# ---------------------------------------------------------------------------
+# fire-gated recurrent decode (DESIGN.md §13): chained step == dense step
+# bitwise at threshold 0 on the block backend; the pallas kernel is bitwise
+# within-backend (gated vs all-live drive through the same kernel) and
+# allclose to the dense step (interpret mode contracts mul-add chains into
+# FMAs — a 1-ulp formulation difference the block path does not have).
+# Zero-row (B == 0) and empty streams are in-distribution on purpose: the
+# step must short-circuit before Pallas ever sees a 0-extent launch.
+# ---------------------------------------------------------------------------
+
+from repro.engine.stream import EventStream  # noqa: E402
+from repro.kernels.mamba_scan.step import mamba_step_ref  # noqa: E402
+from repro.kernels.wkv6.step import wkv6_step_ref  # noqa: E402
+
+
+def _all_live_twin(stream, cfg):
+    """The same drive with every K-block live (encode at threshold -1):
+    what the gated kernel consumes when nothing is gated."""
+    import dataclasses as _dc
+    s = EventStream.encode(stream.dense(), blk_m=1, blk_k=stream.blk_k,
+                           threshold=-1.0)
+    return _dc.replace(s, signed=True)
+
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@settings(max_examples=10, deadline=None)
+@given(g=st.integers(0, 6), d=st.integers(1, 20),
+       threshold=st.sampled_from([0.0, 0.3]),
+       sparsity=st.sampled_from([0.0, 0.5, 1.0]))
+def test_recurrent_wkv6_chained_vs_dense(backend, g, d, threshold, sparsity):
+    seed = _seed("wkv6", g, d, threshold, sparsity)
+    rng = np.random.default_rng(seed)
+    r, v, u = (jnp.asarray(rng.normal(size=(g, d)).astype(np.float32))
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.3, 0.99, (g, d)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(g, d, d)).astype(np.float32))
+    k = _input(seed + 1, (g, d), sparsity)
+    cfg = engine.EngineConfig(backend=backend,
+                              threshold=threshold).for_recurrent(d).resolved()
+    stream = engine.fire_delta(k, cfg)
+    assert stream.signed
+    with engine.trace_dispatch() as recs:
+        o, s2 = engine.recurrent_step("wkv6", stream, s, cfg,
+                                      r=r, v=v, w=w, u=u)
+    if g > 0:
+        assert any(rec.get("op") == "recurrent_step" and rec.get("chained")
+                   for rec in recs), recs
+    k_fired = fire(k, FireConfig(threshold=threshold, signed=True))
+    o_ref, s_ref = wkv6_step_ref(r, k_fired, v, w, u, s)
+    if backend == "block" or g == 0:
+        assert bool(jnp.all(o == o_ref)), "gated o != dense step o"
+        assert bool(jnp.all(s2 == s_ref)), "gated S' != dense step S'"
+    else:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_ref),
+                                   atol=1e-5, rtol=1e-5)
+        # Within-backend contract: gating changes nothing but the work.
+        o_al, s_al = engine.recurrent_step(
+            "wkv6", _all_live_twin(stream, cfg), s, cfg, r=r, v=v, w=w, u=u)
+        assert bool(jnp.all(o == o_al)) and bool(jnp.all(s2 == s_al)), \
+            "pallas gated != pallas all-live (within-backend bitwise)"
+
+
+@pytest.mark.parametrize("backend", ["block", "pallas"])
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(0, 4), di=st.integers(1, 24), n=st.integers(1, 8),
+       threshold=st.sampled_from([0.0, 0.3]),
+       sparsity=st.sampled_from([0.0, 0.5, 1.0]))
+def test_recurrent_mamba_chained_vs_dense(backend, b, di, n, threshold,
+                                          sparsity):
+    seed = _seed("mamba", b, di, n, threshold, sparsity)
+    rng = np.random.default_rng(seed)
+    da = jnp.asarray(rng.uniform(0.3, 0.99, (b, di, n)).astype(np.float32))
+    bm, cm = (jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+              for _ in range(2))
+    h = jnp.asarray(rng.normal(size=(b, di, n)).astype(np.float32))
+    g = _input(seed + 1, (b, di), sparsity)
+    cfg = engine.EngineConfig(backend=backend,
+                              threshold=threshold).for_recurrent(di).resolved()
+    stream = engine.fire_delta(g, cfg)
+    with engine.trace_dispatch() as recs:
+        y, h2 = engine.recurrent_step("mamba", stream, h, cfg,
+                                      da=da, bmat=bm, cmat=cm)
+    if b > 0:
+        assert any(rec.get("op") == "recurrent_step" and rec.get("chained")
+                   for rec in recs), recs
+    g_fired = fire(g, FireConfig(threshold=threshold, signed=True))
+    y_ref, h_ref = mamba_step_ref(g_fired, da, bm, cm, h)
+    if backend == "block" or b == 0:
+        assert bool(jnp.all(y == y_ref)), "gated y != dense step y"
+        assert bool(jnp.all(h2 == h_ref)), "gated h' != dense step h'"
+    else:
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h_ref),
+                                   atol=1e-5, rtol=1e-5)
+        y_al, h_al = engine.recurrent_step(
+            "mamba", _all_live_twin(stream, cfg), h, cfg,
+            da=da, bmat=bm, cmat=cm)
+        assert bool(jnp.all(y == y_al)) and bool(jnp.all(h2 == h_al)), \
+            "pallas gated != pallas all-live (within-backend bitwise)"
+
+
+# ---------------------------------------------------------------------------
+# signed fire: a negative supra-threshold delta is an EVENT, not a drop
+# (regression — the fire phase used to assume ReLU-family events >= 0)
+# ---------------------------------------------------------------------------
+
+def test_signed_fire_emits_negative_deltas():
+    acc = jnp.asarray([[-2.0, -0.5, 0.4, 3.0]], jnp.float32)
+    fired = fire(acc, FireConfig(threshold=1.0, signed=True))
+    np.testing.assert_array_equal(np.asarray(fired),
+                                  [[-2.0, 0.0, 0.0, 3.0]])
+    cfg = engine.EngineConfig(backend="block",
+                              threshold=1.0).for_recurrent(4)
+    stream = engine.fire_delta(acc, cfg)
+    assert stream.signed
+    # The event VALUES carry the sign — drop the dense twin so the check
+    # reads the compacted events, not the cached map.
+    got = stream.without_dense().dense()
+    np.testing.assert_array_equal(np.asarray(got), [[-2.0, 0.0, 0.0, 3.0]])
+
+
+def test_unsigned_stream_rejected_by_recurrent_step():
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(3, 8, 8)).astype(np.float32))
+    r = v = w = u = jnp.abs(k)
+    cfg = engine.EngineConfig(backend="block").for_recurrent(8)
+    # ReLU-fired stream (unsigned): negative deltas were already dropped.
+    unsigned = engine.fire(k, cfg.replace(signed=False, blk_m=1))
+    assert not unsigned.signed
+    reason = engine.recurrent_ineligible_reason(unsigned, "wkv6", cfg)
+    assert reason == ("recurrent deltas are signed; this stream was fired "
+                      "unsigned (ReLU fire), so negative deltas were "
+                      "already dropped")
+    with engine.trace_dispatch() as recs:
+        engine.recurrent_step("wkv6", unsigned, s, cfg, r=r, v=v, w=w, u=u)
+    rec = next(rec for rec in recs if rec.get("op") == "recurrent_step")
+    assert rec.get("fallback_decode") and rec.get("reason") == reason, recs
+
+
+def test_pool_rejects_signed_stream_by_name():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 4, 8, 3)).astype(np.float32))
+    emit = engine.EngineConfig(backend="block", signed=True, blk_m=1,
+                               blk_k=4)
+    stream = engine.fire_conv(x, emit)
+    assert stream.signed
+    pool_cfg = engine.EngineConfig(backend="block", blk_m=1, blk_k=4)
+    reason = engine.pool_ineligible_reason(stream, 2, 2, pool_cfg)
+    assert reason == ("stream carries signed event values (signed/"
+                      "magnitude fire); the segment max runs with identity "
+                      "0 and needs a ReLU-family stream")
+    with engine.trace_dispatch() as recs:
+        out = engine.maxpool2d(stream, 2, 2, pool_cfg)
+    assert any(rec.get("fallback_decode") and rec.get("reason") == reason
+               for rec in recs), recs
+    # The visible dense fallback still pools correctly.
+    import jax.lax as lax
+    ref = lax.reduce_window(np.asarray(stream.dense_nhwc()), -np.inf,
+                            jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                            "VALID")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -83,3 +83,90 @@ def test_mamba_chunked_equals_stepwise(rng):
     np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-3,
                                rtol=2e-3)
     np.testing.assert_allclose(np.asarray(conv), np.asarray(convr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fire-gated decode (DESIGN.md §13): the event path is a formulation change,
+# not a numeric one — at threshold 0 the gated block decode is bitwise the
+# ungated decode; raising the threshold strictly sheds events per token.
+# ---------------------------------------------------------------------------
+
+def _rwkv_decode_once(cfg, rng):
+    import dataclasses
+    from repro.models.ssm import (rwkv6_block_apply, rwkv6_block_decode,
+                                  rwkv6_block_init)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    p, _ = rwkv6_block_init(jax.random.PRNGKey(7), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 6, cfg.d_model)).astype(np.float32))
+    _, state = rwkv6_block_apply(p, x, cfg)
+    tok = jnp.asarray(rng.normal(size=(2, 1, cfg.d_model)).astype(np.float32))
+    return rwkv6_block_decode(p, tok, cfg, state)
+
+
+def test_rwkv6_gated_decode_bitwise_at_zero_threshold():
+    import dataclasses
+    rng = np.random.default_rng(11)
+    base = get_config("rwkv6-7b").reduced()
+    assert base.mnf.enabled and base.mnf.threshold == 0.0
+    y_gated, st_gated = _rwkv_decode_once(base, np.random.default_rng(11))
+    off = dataclasses.replace(base,
+                              mnf=dataclasses.replace(base.mnf,
+                                                      enabled=False))
+    y_dense, st_dense = _rwkv_decode_once(off, np.random.default_rng(11))
+    assert bool(jnp.all(y_gated == y_dense))
+    assert bool(jnp.all(st_gated["wkv"] == st_dense["wkv"]))
+    # At threshold 0 every channel fires: B * heads * head_dim events.
+    assert float(st_gated["events"]) > 0
+
+
+def test_rwkv6_gated_decode_pallas_close():
+    import dataclasses
+    base = get_config("rwkv6-7b").reduced()
+    pall = dataclasses.replace(base,
+                               mnf=dataclasses.replace(base.mnf,
+                                                       use_pallas=True))
+    y_p, st_p = _rwkv_decode_once(pall, np.random.default_rng(11))
+    y_b, st_b = _rwkv_decode_once(base, np.random.default_rng(11))
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_b), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_p["wkv"]),
+                               np.asarray(st_b["wkv"]), atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_events_per_token_monotone_in_threshold():
+    import dataclasses
+    base = get_config("rwkv6-7b").reduced()
+    counts = []
+    for th in (0.0, 0.1, 0.5, 2.0):
+        cfg = dataclasses.replace(base,
+                                  mnf=dataclasses.replace(base.mnf,
+                                                          threshold=th))
+        _, st = _rwkv_decode_once(cfg, np.random.default_rng(11))
+        counts.append(float(st["events"]))
+    assert counts == sorted(counts, reverse=True), counts
+    assert counts[0] > counts[-1], counts
+
+
+def test_mamba_gated_step_bitwise_at_zero_threshold(rng):
+    import dataclasses
+    cfg = get_config("hymba-1.5b").reduced()
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              ssm=dataclasses.replace(cfg.ssm, expand=1))
+    assert cfg.mnf.enabled and cfg.mnf.threshold == 0.0
+    p, _ = mamba_init(jax.random.PRNGKey(3), cfg, d_inner=cfg.d_model)
+    b, di = 2, cfg.d_model
+    conv = jnp.asarray(rng.normal(
+        size=(b, cfg.ssm.conv_dim - 1, di)).astype(np.float32))
+    h = jnp.asarray(rng.normal(
+        size=(b, di, cfg.ssm.state_dim)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, 1, cfg.d_model)).astype(np.float32))
+    y_g, (cv_g, h_g), n_ev = mamba_step(p, x, cfg, (conv, h),
+                                        with_events=True)
+    off = dataclasses.replace(cfg,
+                              mnf=dataclasses.replace(cfg.mnf,
+                                                      enabled=False))
+    y_d, (cv_d, h_d) = mamba_step(p, x, off, (conv, h))
+    assert bool(jnp.all(y_g == y_d))
+    assert bool(jnp.all(h_g == h_d))
+    assert bool(jnp.all(cv_g == cv_d))
+    assert float(n_ev) == b * di  # threshold 0: every channel fires
